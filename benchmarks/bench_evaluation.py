@@ -1,0 +1,62 @@
+"""Paper Figs. 11-14 / §6.4 — the 48 h NASA-trace evaluation: optimal PPA
+(LSTM, finetune updates, CPU key metric) vs stock HPA.
+
+Paper results:  sort  HPA 0.592±0.067  PPA 0.508±0.038   (p < 1e-3)
+                eigen HPA 14.206±1.703 PPA 13.646±1.576  (p < 1e-3)
+                RIR edge  HPA 0.3209   PPA 0.2988        (p < 1e-3)
+                RIR cloud HPA 0.3373   PPA 0.3098        (p < 1e-3)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import pretrain_series, save, timed, csv_row
+
+
+def run(days: int = 2):
+    from repro.core.experiments import (run_scenario, welch_t, NASA_SCALE)
+    from repro.core.updater import UpdatePolicy
+    from repro.workloads import nasa_trace, nasa_requests
+
+    pre = pretrain_series()
+    pre_train = {z: s[:1200] for z, s in pre.items()}
+    counts = nasa_trace(days=days, scale=NASA_SCALE)
+    tasks = nasa_requests(counts)
+    T = days * 86400
+    res = {}
+    for scaler in ("hpa", "ppa"):
+        kw = dict(scaler=scaler)
+        if scaler == "ppa":
+            kw.update(model_kind="lstm", pretrain=pre_train,
+                      update_policy=UpdatePolicy.FINETUNE)
+        r, us = timed(run_scenario, tasks, T, **kw)
+        res[scaler] = r
+        s = r.summary()
+        csv_row(f"nasa_{scaler}", us,
+                f"sort={s['sort_mean_s']:.3f} eigen={s['eigen_mean_s']:.3f} "
+                f"rir_edge={s['rir_edge']:.3f} rir_cloud={s['rir_cloud']:.3f}")
+    h, p = res["hpa"], res["ppa"]
+    t_sort, p_sort = welch_t(h.sim.response_times("sort"),
+                             p.sim.response_times("sort"))
+    t_eig, p_eig = welch_t(h.sim.response_times("eigen"),
+                           p.sim.response_times("eigen"))
+    out = {
+        "hpa": h.summary(), "ppa": p.summary(),
+        "welch_sort": {"t": t_sort, "p": p_sort},
+        "welch_eigen": {"t": t_eig, "p": p_eig},
+        "claims": {
+            "ppa_sort_faster": p.sort_mean < h.sort_mean and p_sort < 1e-3,
+            "ppa_sort_stabler": p.sort_std < h.sort_std,
+            "ppa_eigen_faster": p.eigen_mean < h.eigen_mean and p_eig < 1e-3,
+            "ppa_eigen_stabler": p.eigen_std < h.eigen_std,
+            "ppa_less_idle_edge": p.rir_edge[0] < h.rir_edge[0],
+            "ppa_less_idle_cloud": p.rir_cloud[0] < h.rir_cloud[0],
+        },
+    }
+    save("evaluation", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("claims:", r["claims"])

@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks: us/call for each Pallas kernel (interpret mode on
+CPU — numbers are correctness-path timings; TPU is the perf target) and the
+XLA-path equivalents for reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, save
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    out = {}
+
+    B, Hq, Hkv, S, D = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    us = _time(lambda: ops.flash_attention(q, k, v, block_q=128, block_kv=128))
+    us_ref = _time(lambda: jax.jit(ref.flash_attention)(q, k, v))
+    out["flash_attention"] = {"pallas_interpret_us": us, "xla_ref_us": us_ref}
+    csv_row("kernel_flash_attention", us, f"xla_ref={us_ref:.1f}us")
+
+    qd = jnp.asarray(rng.normal(size=(B, Hq, D)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, Hkv, 2048, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, Hkv, 2048, D)), jnp.float32)
+    valid = jnp.asarray([1500], jnp.int32)
+    us = _time(lambda: ops.decode_attention(qd, kc, vc, valid))
+    us_ref = _time(lambda: jax.jit(
+        lambda a, b, c: ref.decode_attention(a, b, c, kv_valid=valid))(qd, kc, vc))
+    out["decode_attention"] = {"pallas_interpret_us": us, "xla_ref_us": us_ref}
+    csv_row("kernel_decode_attention", us, f"xla_ref={us_ref:.1f}us")
+
+    Bb, Ss, H, P, N = 1, 512, 4, 32, 16
+    x = jnp.asarray(rng.normal(size=(Bb, Ss, H, P)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(Bb, Ss, H)), jnp.float32)) * 0.1
+    A = -jnp.abs(jnp.asarray(rng.normal(size=(H,)), jnp.float32))
+    Bm = jnp.asarray(rng.normal(size=(Bb, Ss, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(Bb, Ss, N)), jnp.float32)
+    Dv = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    us = _time(lambda: ops.ssd_scan(x, dt, A, Bm, Cm, Dv, chunk=128))
+    us_ref = _time(lambda: jax.jit(ref.ssd_scan)(x, dt, A, Bm, Cm, Dv))
+    out["ssd_scan"] = {"pallas_interpret_us": us, "xla_ref_us": us_ref}
+    csv_row("kernel_ssd_scan", us, f"xla_ref={us_ref:.1f}us")
+
+    In, H2, Bc = 5, 50, 64
+    Wx = jnp.asarray(rng.normal(size=(In, 4 * H2)), jnp.float32)
+    Wh = jnp.asarray(rng.normal(size=(H2, 4 * H2)), jnp.float32)
+    b = jnp.zeros((4 * H2,))
+    h = jnp.zeros((Bc, H2))
+    c = jnp.zeros((Bc, H2))
+    xx = jnp.asarray(rng.normal(size=(Bc, In)), jnp.float32)
+    us = _time(lambda: ops.lstm_cell(Wx, Wh, b, h, c, xx))
+    out["lstm_cell"] = {"pallas_interpret_us": us}
+    csv_row("kernel_lstm_cell", us, "fused")
+
+    xr = jnp.asarray(rng.normal(size=(2048, 512)), jnp.bfloat16)
+    w = jnp.ones((512,), jnp.float32)
+    us = _time(lambda: ops.rmsnorm(xr, w))
+    out["rmsnorm"] = {"pallas_interpret_us": us}
+    csv_row("kernel_rmsnorm", us, "fused")
+
+    save("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 8 / §6.2 — the three model-update policies.
+
+LSTM seed model, update loop every hour, 200-minute Random Access run.
+Paper result (prediction MSE): P3 finetune 30 994 < P2 scratch 42 180 <
+P1 never 64 770.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import pretrain_series, save, timed, csv_row
+
+
+def run(t_minutes: int = 200):
+    from repro.core.experiments import run_scenario
+    from repro.core.updater import UpdatePolicy
+    from repro.workloads import random_access
+
+    pre = pretrain_series()
+    pre_train = {z: s[:1200] for z, s in pre.items()}
+    T = t_minutes * 60
+    tasks = random_access(T, seed=3)
+    out = {}
+    for pol, name in ((UpdatePolicy.NEVER, "p1_never"),
+                      (UpdatePolicy.SCRATCH, "p2_scratch"),
+                      (UpdatePolicy.FINETUNE, "p3_finetune")):
+        res, us = timed(run_scenario, tasks, T, scaler="ppa",
+                        model_kind="lstm", pretrain=pre_train,
+                        update_policy=pol, update_interval_s=3600.0,
+                        min_replicas=2)
+        mse = float(np.mean(list(res.mse.values())))
+        mse_n = float(np.mean(list(res.mse_norm.values())))
+        out[name] = {"mse_mean": mse, "mse_norm_mean": mse_n,
+                     "mse_by_zone": res.mse, "run_us": us}
+        csv_row(f"update_{name}", us, f"mse={mse:.1f} mse_norm={mse_n:.4f}")
+    out["ordering_p3_best"] = (out["p3_finetune"]["mse_norm_mean"]
+                               <= out["p2_scratch"]["mse_norm_mean"]
+                               <= out["p1_never"]["mse_norm_mean"])
+    save("update_policy", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("P3 <= P2 <= P1:", r["ordering_p3_best"])

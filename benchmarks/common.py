@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: pretraining cache, timers, artifact output."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+_PRE_CACHE = {}
+
+
+def pretrain_series(records: int = 1800, seed: int = 99):
+    """Paper §5.3.1: 10 h unconstrained-run collection (1800 records)."""
+    key = (records, seed)
+    if key not in _PRE_CACHE:
+        from repro.core.experiments import collect_series
+        from repro.workloads import random_access
+        tasks = random_access(records * 15, seed=seed)
+        _PRE_CACHE[key] = collect_series(tasks, records * 15)
+    return _PRE_CACHE[key]
+
+
+def save(name: str, payload: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

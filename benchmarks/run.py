@@ -1,0 +1,55 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--quick]
+#
+# Fig 7  -> bench_forecast        (ARMA vs LSTM prediction MSE)
+# Fig 8  -> bench_update_policy   (P1/P2/P3 model-update policies)
+# Fig 9/10 -> bench_key_metric    (CPU vs request-rate key metric)
+# Fig 11-14 -> bench_evaluation   (48h NASA: PPA vs HPA)
+# beyond-paper -> bench_serving   (PPA-scaled TPU decode fleet)
+#              -> bench_kernels   (Pallas kernel us/call)
+#              -> roofline        (per-cell terms from the dry-run artifacts)
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter sims (CI-speed)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_evaluation, bench_forecast, bench_kernels,
+                            bench_key_metric, bench_serving,
+                            bench_update_policy, roofline)
+
+    t_min = 60 if args.quick else 200
+    days = 1 if args.quick else 2
+    jobs = [
+        ("forecast", lambda: bench_forecast.run(t_min)),
+        ("update_policy", lambda: bench_update_policy.run(t_min)),
+        ("key_metric", lambda: bench_key_metric.run(t_min)),
+        ("evaluation", lambda: bench_evaluation.run(days)),
+        ("serving", lambda: bench_serving.run(1800.0 if args.quick else 3600.0)),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in jobs:
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

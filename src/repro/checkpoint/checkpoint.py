@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: npz shards + JSON manifest.
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json (tree structure, shapes,
+dtypes, completion marker).  Writes go to a temp dir and are atomically
+renamed, so a crash mid-save never corrupts the latest checkpoint —
+``latest_step`` only considers directories with a COMMITTED marker.
+``AsyncCheckpointer`` overlaps the host write with training (the step tensor
+tree is snapshotted to host first).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+_NATIVE = set("bool int8 int16 int32 int64 uint8 uint16 uint32 uint64 "
+              "float16 float32 float64 complex64 complex128".split())
+
+
+def _to_savable(a: np.ndarray) -> np.ndarray:
+    # npz cannot hold ml_dtypes (bfloat16, fp8); store the raw bits
+    if a.dtype.name not in _NATIVE:
+        return a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+    return a
+
+
+def _from_savable(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name not in _NATIVE:
+        import ml_dtypes
+        return a.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return a
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, keep_last: int = 3):
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    np_leaves = [np.asarray(l) for l in leaves]
+    arrays = {f"a{i}": _to_savable(l) for i, l in enumerate(np_leaves)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(l.shape) for l in np_leaves],
+        "dtypes": [l.dtype.name for l in np_leaves],
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / "COMMITTED").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep_last: int):
+    steps = sorted(_committed_steps(ckpt_dir))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+
+
+def _committed_steps(ckpt_dir: Path):
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / "COMMITTED").exists():
+            out.append(int(p.name.split("_")[1]))
+    return out
+
+
+def latest_step(ckpt_dir) -> int | None:
+    steps = _committed_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir, example_tree, step: int | None = None):
+    """Restore into the structure of ``example_tree`` (shape/dtype checked)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = ckpt_dir / f"step_{step}"
+    data = np.load(path / "arrays.npz")
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves, treedef = _flatten(example_tree)
+    assert manifest["n_leaves"] == len(leaves), "tree structure mismatch"
+    restored = []
+    for i, ex in enumerate(leaves):
+        a = _from_savable(data[f"a{i}"], manifest["dtypes"][i])
+        assert tuple(a.shape) == tuple(np.shape(ex)), (i, a.shape, np.shape(ex))
+        restored.append(jax.numpy.asarray(a).astype(ex.dtype))
+    return jax.tree.unflatten(treedef, restored), step
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write on a background thread."""
+
+    def __init__(self, ckpt_dir, keep_last: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep_last = keep_last
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree):
+        host_tree = jax.tree.map(np.asarray, tree)   # sync copy off device
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_checkpoint,
+            args=(self.ckpt_dir, step, host_tree, self.keep_last),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,3 @@
+from repro.cluster.topology import Node, Topology, paper_topology
+from repro.cluster.simulator import (ClusterSim, SimConfig, Task, PodState,
+                                     AutoscalerBinding)

@@ -1,0 +1,1 @@
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, get_config, list_archs, smoke_config

@@ -1,0 +1,24 @@
+"""h2o-danube-1.8b [dense]: 24L d_model=2560 32H (GQA kv=8) d_ff=6912
+vocab=32000 — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; hf]"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-1.8b", family="dense",
+        n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=80,
+        d_ff=6912, vocab=32000, sliding_window=4096,
+        kv_seq_shard=True,       # adopted: EXPERIMENTS.md §Perf D1
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256, sliding_window=32, attn_impl="naive",
+        remat="none",
+    )
+
+
+register("h2o-danube-1.8b", full, smoke)

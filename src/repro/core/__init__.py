@@ -1,0 +1,13 @@
+# The paper's primary contribution: the Proactive Pod Autoscaler (PPA) and
+# its substrate — forecasters, Evaluator (Alg. 1), static policies, Updater
+# (3 update policies), and the reactive HPA baseline (Eq. 1).
+from repro.core.metrics import (METRIC_NAMES, N_METRICS, KEY_CPU, KEY_CUSTOM,
+                                MetricsHistory, Snapshot)
+from repro.core.forecaster import (Forecaster, LSTMForecaster,
+                                   ARMAForecaster, ARIMAD1Forecaster,
+                                   EnsembleForecaster, make_forecaster)
+from repro.core.policies import ThresholdPolicy, TargetUtilizationPolicy, make_policy
+from repro.core.evaluator import Evaluator, EvalResult
+from repro.core.updater import Updater, UpdatePolicy
+from repro.core.hpa import HPA
+from repro.core.ppa import PPA, PPAConfig

@@ -1,0 +1,169 @@
+"""Experiment harness for the paper's §5 protocol, shared by benchmarks,
+examples and tests.
+
+Pipeline (mirrors §5.3): (1) collect a pretraining metric series by running
+the example application with generous static provisioning (the paper's "10 h
+on a single unconstrained node", 1800 records); (2) pretrain the seed model;
+(3) run the autoscaled scenario; (4) report prediction MSE, response-time
+distributions and RIR.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cluster import (AutoscalerBinding, ClusterSim, SimConfig,
+                           paper_topology)
+from repro.core import (HPA, PPA, PPAConfig, MetricsHistory, ThresholdPolicy,
+                        Updater, UpdatePolicy, make_forecaster)
+from repro.workloads import random_access
+
+ZONES = ("edge-0", "edge-1", "cloud")
+
+# Calibrated operating point (EXPERIMENTS.md §Reproduction-calibration):
+# pod startup 25 s (docker pull + Celery worker boot), Prometheus-faithful
+# 1-minute moving-average exporter, NASA trace scale 3.5 (peak within the
+# Table-2 capacity, as the paper rescales), per-pod targets = 70 %.
+DEFAULT_SIM = dict(seed=1, startup_s=25.0)
+NASA_SCALE = 3.5
+
+
+def unconstrained_topology() -> "Topology":
+    """The paper pretrains on 'a single unconstrained node' (§5.3.1)."""
+    from repro.cluster.topology import Node, Topology
+    return Topology([
+        Node("control", "control", 4000, 4096, schedulable=False),
+        Node("cloud-big", "cloud", 32000, 32768),
+        Node("e0-big", "edge-0", 32000, 32768),
+        Node("e1-big", "edge-1", 32000, 32768)])
+
+
+def collect_series(tasks, t_end, replicas: int = 8,
+                   cfg: SimConfig | None = None,
+                   unconstrained: bool = True):
+    """Static-provisioning run -> {zone: (T, 5) series} for pretraining."""
+    topo = unconstrained_topology() if unconstrained else paper_topology()
+    if unconstrained:
+        replicas = max(replicas, 24)
+    sim = ClusterSim(topo, cfg or SimConfig(seed=42))
+    for z in ZONES:
+        sim.scale_to(z, replicas, 0.0)
+    for p in sim.pods:
+        p.ready_at = p.free_at = 0.0
+    w = sim.cfg.control_interval_s
+    ticks = np.arange(w, t_end, w)
+    ti = 0
+    for tick in ticks:
+        while ti < len(tasks) and tasks[ti][0] <= tick:
+            at, kind, zone = tasks[ti]
+            from repro.cluster.simulator import Task
+            sim.dispatch(Task(at, kind, zone, 0.0), at)
+            ti += 1
+        for z in ZONES:
+            sim.sample_zone(z, tick)
+    return {z: np.stack([v for _, v in sim.samples[z]]) for z in ZONES}
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    sim: ClusterSim
+    ppas: dict
+    mse: dict               # zone -> prediction MSE on the key metric
+    mse_norm: dict          # zone -> MSE / realized key-metric variance
+    sort_mean: float
+    sort_std: float
+    eigen_mean: float
+    eigen_std: float
+    rir_edge: tuple[float, float]
+    rir_cloud: tuple[float, float]
+
+    def summary(self) -> dict:
+        return {
+            "sort_mean_s": self.sort_mean, "sort_std_s": self.sort_std,
+            "eigen_mean_s": self.eigen_mean, "eigen_std_s": self.eigen_std,
+            "rir_edge": self.rir_edge[0], "rir_edge_std": self.rir_edge[1],
+            "rir_cloud": self.rir_cloud[0], "rir_cloud_std": self.rir_cloud[1],
+            "mse": {k: float(v) for k, v in self.mse.items()},
+            "mse_norm": {k: float(v) for k, v in self.mse_norm.items()},
+        }
+
+
+def run_scenario(tasks, t_end, *, scaler: str = "ppa", model_kind: str = "lstm",
+                 update_policy: UpdatePolicy = UpdatePolicy.FINETUNE,
+                 key_metric_idx: int = 0, threshold: float = 350.0,
+                 rate_threshold: float = 1.0,
+                 pretrain: dict[str, np.ndarray] | None = None,
+                 update_interval_s: float = 3600.0,
+                 min_replicas: int = 1, sim_cfg: SimConfig | None = None,
+                 confidence_threshold: float = float("inf"),
+                 stabilization_s: float = 120.0, tolerance: float = 0.0,
+                 window: int = 4,
+                 failures: list | None = None) -> ScenarioResult:
+    sim = ClusterSim(paper_topology(), sim_cfg or SimConfig(**DEFAULT_SIM))
+    for ev in failures or []:
+        kind = ev[0]
+        if kind == "fail":
+            sim.inject_node_failure(*ev[1:])
+        else:
+            sim.inject_straggler(*ev[1:])
+    binds, ppas = [], {}
+    for z in ZONES:
+        if key_metric_idx == 0:
+            thr = threshold
+        else:
+            # request-rate key metric: per-zone capacity differs (sort vs
+            # eigen service time); target 70 % of one pod's throughput
+            svc = (sim.cfg.eigen_service_s if z == "cloud"
+                   else sim.cfg.sort_service_s)
+            thr = rate_threshold * 0.7 / svc
+        if scaler == "ppa":
+            kw = ({} if model_kind in ("arma", "arima", "arima_d1")
+                  else {"window": window})
+            model = make_forecaster(model_kind, **kw)
+            if pretrain is not None and z in pretrain:
+                model.fit(pretrain[z], from_scratch=True)
+            ppa = PPA(PPAConfig(key_metric_idx=key_metric_idx, threshold=thr,
+                                update_interval_s=update_interval_s,
+                                confidence_threshold=confidence_threshold,
+                                min_replicas=min_replicas,
+                                stabilization_s=stabilization_s),
+                      model, ThresholdPolicy(thr, min_replicas, tolerance),
+                      Updater(update_policy), MetricsHistory())
+            binds.append(AutoscalerBinding(z, ppa, "ppa", min_replicas))
+            ppas[z] = ppa
+        else:
+            binds.append(AutoscalerBinding(
+                z, HPA(thr, key_metric_idx, min_replicas), "hpa",
+                min_replicas))
+    sim.run(tasks, binds, t_end, initial_replicas=min_replicas)
+
+    mse, mse_norm = {}, {}
+    for z, ppa in ppas.items():
+        arr = sim.samples[z]
+        times = np.array([t for t, _ in arr])
+        series = np.stack([v for _, v in arr])
+        mse[z] = ppa.prediction_mse(series, times, metric_idx=key_metric_idx)
+        var = max(float(series[:, key_metric_idx].var()), 1e-9)
+        mse_norm[z] = mse[z] / var
+
+    rs = sim.response_times("sort")
+    re_ = sim.response_times("eigen")
+    return ScenarioResult(
+        sim=sim, ppas=ppas, mse=mse, mse_norm=mse_norm,
+        sort_mean=float(rs.mean()) if len(rs) else float("nan"),
+        sort_std=float(rs.std()) if len(rs) else float("nan"),
+        eigen_mean=float(re_.mean()) if len(re_) else float("nan"),
+        eigen_std=float(re_.std()) if len(re_) else float("nan"),
+        rir_edge=sim.rir_stats(["edge-0", "edge-1"]),
+        rir_cloud=sim.rir_stats(["cloud"]))
+
+
+def welch_t(a: np.ndarray, b: np.ndarray) -> tuple[float, float]:
+    """Welch's t statistic + normal-approx two-sided p (n is large here)."""
+    ma, mb = a.mean(), b.mean()
+    va, vb = a.var(ddof=1) / len(a), b.var(ddof=1) / len(b)
+    t = (ma - mb) / np.sqrt(va + vb + 1e-12)
+    from math import erfc, sqrt
+    p = erfc(abs(t) / sqrt(2.0))
+    return float(t), float(p)

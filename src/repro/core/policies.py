@@ -1,0 +1,56 @@
+"""Static scaling policies (paper §4.2.1).
+
+The default is the HPA threshold rule of Eq. (1):
+    NumOfReplicas = ceil(CurrentMetricValue / PredefinedMetricValue)
+applied to the *predicted* key metric.  Policies are injectable — any
+callable (key_metric_value, state) -> int works, mirroring the paper's
+customizable Static Policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+Policy = Callable[[float, dict], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdPolicy:
+    """ceil(metric / threshold), clamped to [min_replicas, inf), with the
+    same +-tolerance dead-band Kubernetes applies to HPA decisions (the PPA
+    issues its requests through the same control plane)."""
+    threshold: float
+    min_replicas: int = 1
+    tolerance: float = 0.1
+
+    def __call__(self, key_metric: float, state: dict | None = None) -> int:
+        cur = (state or {}).get("current", self.min_replicas)
+        if not math.isfinite(key_metric):
+            return max(cur, self.min_replicas)
+        if cur > 0 and abs(key_metric / (self.threshold * cur) - 1.0) <= self.tolerance:
+            return max(cur, self.min_replicas)
+        n = math.ceil(max(key_metric, 0.0) / self.threshold)
+        return max(n, self.min_replicas)
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetUtilizationPolicy:
+    """K8s-style: replicas = ceil(current * (util / target)); needs per-pod
+    utilisation in state."""
+    target: float  # e.g. 0.7 (70% of requested cpu)
+    min_replicas: int = 1
+
+    def __call__(self, util_ratio: float, state: dict | None = None) -> int:
+        cur = (state or {}).get("current", self.min_replicas)
+        if not math.isfinite(util_ratio) or util_ratio <= 0:
+            return max(cur, self.min_replicas)
+        return max(math.ceil(cur * util_ratio / self.target), self.min_replicas)
+
+
+def make_policy(kind: str, **kw) -> Policy:
+    if kind == "threshold":
+        return ThresholdPolicy(**kw)
+    if kind == "target":
+        return TargetUtilizationPolicy(**kw)
+    raise ValueError(kind)

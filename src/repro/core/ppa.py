@@ -1,0 +1,101 @@
+"""The Proactive Pod Autoscaler: Formulator -> Evaluator -> scale request,
+plus the model-update loop (paper §4.1, Fig. 4).
+
+The PPA is scaling-target-agnostic: it receives metric snapshots from any
+metric source (the simulated Prometheus adapter of repro.cluster, or the
+serving fleet's own exporter) and emits desired replica counts.  The target
+(`ScaleTarget`) applies them — Kubernetes worker pods in the faithful
+reproduction, TPU decode replica groups in the serving integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core.evaluator import Evaluator, EvalResult
+from repro.core.forecaster import Forecaster
+from repro.core.metrics import MetricsHistory, Snapshot
+from repro.core.policies import Policy
+from repro.core.updater import Updater, UpdatePolicy
+
+
+@dataclasses.dataclass
+class PPAConfig:
+    control_interval_s: float = 15.0      # paper: ControlInterval
+    update_interval_s: float = 3600.0     # paper: UpdateInterval (1 h in §5.3.2)
+    key_metric_idx: int = 0               # KeyMetric (0 = CPU)
+    threshold: float = 500.0              # Threshold on the key metric
+    confidence_threshold: float = math.inf
+    min_replicas: int = 1
+    # Kubernetes applies its scale-down stabilization behaviour to any
+    # autoscaler's requests (HPA gets the same); proactivity acts on the
+    # up-scaling side where the startup latency lives.
+    stabilization_s: float = 300.0
+
+
+class PPA:
+    """One PPA instance per scaling target (per zone, per serving pool)."""
+
+    def __init__(self, cfg: PPAConfig, model: Forecaster, policy: Policy,
+                 updater: Updater, history: MetricsHistory | None = None):
+        self.cfg = cfg
+        self.model = model
+        self.policy = policy
+        self.updater = updater
+        self.history = history or MetricsHistory()
+        self.evaluator = Evaluator(policy, cfg.key_metric_idx,
+                                   cfg.confidence_threshold)
+        self._recent: list[np.ndarray] = []
+        self._last_update_t = 0.0
+        self.decisions: list[EvalResult] = []
+        self.predictions: list[tuple[float, np.ndarray]] = []  # for MSE eval
+        self._recs: list[tuple[float, int]] = []
+
+    # ---------------------------------------------------------- formulator -
+    def observe(self, snap: Snapshot):
+        """Formulator: extract + store metrics (control-loop step 1)."""
+        self.history.append(snap)
+        self._recent.append(snap.values)
+        self._recent = self._recent[-max(self.model.window + 1, 8):]
+
+    # -------------------------------------------------------- control loop -
+    def control_step(self, t: float, max_replicas: int,
+                     current_replicas: int) -> EvalResult:
+        recent = np.stack(self._recent) if self._recent else np.zeros((1, 5))
+        res = self.evaluator.evaluate(recent, self.model, max_replicas,
+                                      current_replicas)
+        if res.raw_prediction is not None:
+            self.predictions.append((t, res.raw_prediction))
+        # scale-down stabilization (k8s behaviour layer)
+        self._recs.append((t, res.replicas))
+        self._recs = [(tt, d) for tt, d in self._recs
+                      if tt >= t - self.cfg.stabilization_s]
+        if res.replicas < current_replicas:
+            res.replicas = min(max(d for _, d in self._recs), max_replicas)
+        self.decisions.append(res)
+        return res
+
+    # --------------------------------------------------------- update loop -
+    def maybe_update(self, t: float):
+        if t - self._last_update_t >= self.cfg.update_interval_s:
+            self.model = self.updater.update(self.model, self.history, t)
+            self._last_update_t = t
+
+    # --------------------------------------------------------- evaluation --
+    def prediction_mse(self, actual_series: np.ndarray,
+                       actual_times: np.ndarray,
+                       metric_idx: int | None = None) -> float:
+        """MSE between one-step-ahead predictions and realised metrics
+        (paper Figs. 7-8).  Predictions at time t target the next sample."""
+        if not self.predictions:
+            return float("nan")
+        idx = self.cfg.key_metric_idx if metric_idx is None else metric_idx
+        errs = []
+        for t, pred in self.predictions:
+            j = np.searchsorted(actual_times, t, side="right")
+            if j < len(actual_series):
+                errs.append((pred[idx] - actual_series[j, idx]) ** 2)
+        return float(np.mean(errs)) if errs else float("nan")

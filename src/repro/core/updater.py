@@ -1,0 +1,50 @@
+"""The Updater and its three model-update policies (paper §4.2.3):
+
+  P1 NEVER     — keep the injected seed model for the whole run.
+  P2 SCRATCH   — drop the old model each update loop, retrain from scratch
+                 (same architecture) on the accumulated history.
+  P3 FINETUNE  — continue training the old model for a few extra epochs on
+                 the history collected since the last update.
+
+After an update the Updater re-saves the model file and clears the metrics
+history, exactly as in the paper's workflow (§4.1.2).
+"""
+from __future__ import annotations
+
+import enum
+import time
+
+from repro.core.forecaster import Forecaster
+from repro.core.metrics import MetricsHistory
+
+
+class UpdatePolicy(enum.Enum):
+    NEVER = 1
+    SCRATCH = 2
+    FINETUNE = 3
+
+
+class Updater:
+    def __init__(self, policy: UpdatePolicy, model_path=None,
+                 min_records: int = 16):
+        self.policy = policy
+        self.model_path = model_path
+        self.min_records = min_records
+        self.n_updates = 0
+        self.last_update_t: float | None = None
+
+    def update(self, model: Forecaster, history: MetricsHistory,
+               t: float | None = None) -> Forecaster:
+        if self.policy is UpdatePolicy.NEVER:
+            history.clear()
+            return model
+        series = history.series()
+        if len(series) < self.min_records:
+            return model
+        model.fit(series, from_scratch=(self.policy is UpdatePolicy.SCRATCH))
+        if self.model_path:
+            model.save(self.model_path)
+        history.clear()
+        self.n_updates += 1
+        self.last_update_t = t if t is not None else time.time()
+        return model

@@ -1,0 +1,51 @@
+"""Deterministic synthetic LM data pipeline.
+
+Markov-chain token streams give a learnable distribution (loss decreases
+under training — asserted by the integration tests) while staying fully
+offline and reproducible.  Batches are sharded over the mesh's batch axes
+via device_put when a mesh is supplied; per-step determinism is keyed on
+(seed, step), so a restarted job resumes with identical data order.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class SyntheticLMData:
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, order: int = 1, mesh=None, rules=None):
+        self.vocab, self.seq_len, self.batch = vocab, seq_len, global_batch
+        self.seed = seed
+        self.mesh, self.rules = mesh, rules
+        rng = np.random.default_rng(seed)
+        # sparse-ish Markov transition: each token strongly prefers ~4 successors
+        k = 4
+        self._succ = rng.integers(0, vocab, (vocab, k))
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        toks = np.empty((self.batch, self.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, self.batch)
+        choices = rng.integers(0, self._succ.shape[1],
+                               (self.batch, self.seq_len))
+        noise = rng.random((self.batch, self.seq_len)) < 0.1
+        rand_tok = rng.integers(0, self.vocab, (self.batch, self.seq_len))
+        for t in range(self.seq_len):
+            nxt = self._succ[toks[:, t], choices[:, t]]
+            toks[:, t + 1] = np.where(noise[:, t], rand_tok[:, t], nxt)
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "labels": jnp.asarray(toks[:, 1:])}
+        if self.mesh is not None:
+            from repro.distributed.sharding import named_sharding
+            sh = named_sharding(("batch", "seq"), batch["tokens"].shape,
+                                self.rules, self.mesh)
+            batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
+        return batch
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,46 @@
+"""Elastic scaling: rebuild the mesh after losing a data slice and reshard
+the training state onto the survivors.
+
+On a real fleet, losing a host removes a row of the 'data' axis; training
+resumes on an (n-k, model) mesh from the latest checkpoint, with the global
+batch either shrunk or re-spread.  Here the same logic is exercised with
+host placeholder devices: ``shrink_mesh`` builds the survivor mesh and
+``reshard_tree`` device_puts a checkpointed pytree onto it.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import logical_to_pspec
+
+
+def shrink_mesh(mesh: Mesh, axis: str, lost: int = 1) -> Mesh:
+    """Survivor mesh with ``lost`` rows removed from ``axis``."""
+    names = mesh.axis_names
+    shape = dict(mesh.shape)
+    assert shape[axis] > lost, "cannot lose every slice"
+    devs = np.asarray(mesh.devices)
+    ax = names.index(axis)
+    take = [slice(None)] * devs.ndim
+    take[ax] = slice(0, shape[axis] - lost)
+    survivors = devs[tuple(take)]
+    return Mesh(survivors, names)
+
+
+def reshard_tree(tree, axes_tree, new_mesh: Mesh, rules):
+    """device_put every leaf onto the survivor mesh per its logical axes."""
+    def one(x, axes):
+        spec = logical_to_pspec(axes, np.shape(x), rules, new_mesh)
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(one, tree, axes_tree,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+def elastic_batch_size(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-shard batch constant: shrink the global batch with the mesh
+    (the optimizer's lr schedule is tokens-based so resume stays smooth)."""
+    per = global_batch // old_data
+    return per * new_data

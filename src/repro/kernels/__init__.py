@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the serving/training substrate's compute hot spots
+# (+ ops.py jit wrappers, ref.py pure-jnp oracles).  Validated on CPU with
+# interpret=True; TPU is the compile target (BlockSpec/VMEM tiling).

@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python for numerical validation); on a TPU
+backend they compile to Mosaic.  ``KERNEL_INTERPRET`` can be forced for
+tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import lstm_cell as _lstm
+from repro.kernels import rmsnorm as _rms
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "cap", "q_offset", "kv_valid", "scale",
+    "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    q_offset=0, kv_valid=None, scale=None,
+                    block_q=128, block_kv=128):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, cap=cap, q_offset=q_offset,
+        kv_valid=kv_valid, scale=scale, block_q=block_q, block_kv=block_kv,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "window", "scale",
+                                             "block_s"))
+def decode_attention(q, k, v, kv_valid, *, cap=None, window=None, scale=None,
+                     block_s=256):
+    return _da.decode_attention(q, k, v, kv_valid=kv_valid, cap=cap,
+                                window=window, scale=scale, block_s=block_s,
+                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                         interpret=_interpret())
+
+
+@jax.jit
+def lstm_cell(Wx, Wh, b, h, c, x):
+    return _lstm.lstm_cell(Wx, Wh, b, h, c, x, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, w, *, eps=1e-6):
+    return _rms.rmsnorm(x, w, eps=eps, interpret=_interpret())

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    q_offset=0, kv_valid=None, scale=None):
+    """q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_valid is not None:
+        m &= k_pos[None, :] < kv_valid
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # attention over an empty (fully-masked) key set is defined as 0
+    any_valid = m.any(axis=-1)[None, None, :, None]
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vv)
+    return jnp.where(any_valid, o, 0.0).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, kv_valid, cap=None, window=None, scale=None):
+    """q (B, Hq, D); k, v (B, Hkv, S, D); kv_valid (B,) -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q, kk,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    k_pos = jnp.arange(S)
+    m = k_pos[None, :] < jnp.asarray(kv_valid).reshape(-1, 1)    # (B, S)
+    if window is not None:
+        q_pos = jnp.asarray(kv_valid).reshape(-1, 1) - 1
+        m &= (q_pos - k_pos[None, :]) < window
+    s = jnp.where(m[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p.astype(v.dtype), vv).astype(q.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, h0=None):
+    """Sequential SSD recurrence (the exact oracle, no chunking).
+    x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N), D (H,)
+    -> y (B,S,H,P), h_final (B,H,P,N)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((Bb, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp      # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * A)      # (B,H)
+        hx = jnp.einsum("bhp,bn->bhpn",
+                        (xt * dtt[..., None]).astype(jnp.float32),
+                        Bt.astype(jnp.float32))
+        h = da[:, :, None, None] * h + hx
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct.astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h, (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                  Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3) + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h
+
+
+def lstm_cell(Wx, Wh, b, h, c, x):
+    """x (B, In), h/c (B, H) -> (h', c')."""
+    gates = x @ Wx + h @ Wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c2 = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+    return h2, c2
+
+
+def rmsnorm(x, w, eps=1e-6):
+    """x (R, D), w (D,) -> (R, D)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)

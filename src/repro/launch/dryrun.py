@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs on 512 placeholder host devices.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k [--multipod] [--out artifacts/dryrun]
+
+Per cell it records memory_analysis(), cost_analysis() (per-device), and the
+collective-op inventory parsed from the optimized HLO (with while-body
+trip-count correction for the layer scan) into a JSON artifact consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+
+def parse_collectives(hlo_text: str, scan_trip_counts: dict[str, int]):
+    """Sum collective operand bytes per computation.  Ops inside while-body
+    computations are multiplied by the layer-scan trip count (XLA text shows
+    the body once; jax's scan lowers to while with known length).
+
+    Returns list of dicts: {op, dtype, bytes, group_size, computation, mult}.
+    """
+    results = []
+    current_comp = "main"
+    op_re = re.compile(
+        r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = \(?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(")
+    comp_re = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+    rg_re = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    rg_list_re = re.compile(r"replica_groups=\{([^}]*)\}")
+    for line in hlo_text.splitlines():
+        mc = comp_re.match(line)
+        if mc:
+            current_comp = mc.group(1)
+            continue
+        m = op_re.match(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if "-done" in line.split("=")[1][:60] and "-start" not in line:
+            # the -done op restates the shape; count only -start (or plain)
+            if f"{op}-done" in line:
+                continue
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in filter(None, dims.split(",")):
+            nbytes *= int(d)
+        gs = None
+        mg = rg_re.search(line)
+        if mg:
+            gs = int(mg.group(2))
+        else:
+            mg2 = rg_list_re.search(line)
+            if mg2 and mg2.group(1):
+                first = mg2.group(1).split("}")[0].split("{")[-1]
+                gs = len([x for x in first.split(",") if x.strip() != ""])
+        mult = 1
+        lowered_name = current_comp.lower()
+        if "while" in lowered_name or "body" in lowered_name:
+            mult = scan_trip_counts.get("default", 1)
+        results.append({"op": op, "dtype": dtype, "bytes": nbytes,
+                        "group_size": gs or 1, "computation": current_comp,
+                        "mult": mult})
+    return results
+
+
+def wire_bytes(colls) -> float:
+    """Bytes crossing links per device, using standard ring factors."""
+    total = 0.0
+    for c in colls:
+        n = max(c["group_size"], 1)
+        if n == 1:
+            continue
+        if c["op"] == "all-reduce":
+            f = 2 * (n - 1) / n
+        elif c["op"] in ("all-gather", "reduce-scatter"):
+            f = (n - 1) / n
+        elif c["op"] == "all-to-all":
+            f = (n - 1) / n
+        else:  # collective-permute
+            f = 1.0
+        total += c["bytes"] * f * c["mult"]
+    return total
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             overrides: dict | None = None) -> dict:
+    from repro.configs import get_config, SHAPES
+    from repro.configs.base import shape_applicable
+    from repro.launch.mesh import make_production_mesh, rules_for, kv_repeat_for
+    from repro.launch.steps import build_cell
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "skipped"}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["skip_reason"] = why
+        _save(out_dir, cell_id, rec)
+        print(f"[dryrun] {cell_id}: SKIP ({why})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = cfg.replace(kv_repeat=kv_repeat_for(cfg, mesh))
+    if overrides:
+        cfg = cfg.replace(**overrides)
+        rec["overrides"] = overrides
+    rules = rules_for(cfg, mesh, kind=shape.kind)
+
+    t0 = time.time()
+    fn, args = build_cell(cfg, shape, mesh, rules)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    n_steps = _scan_len(cfg)
+    colls = parse_collectives(hlo, {"default": n_steps})
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes,
+        },
+        "cost": {"flops_per_device": ca.get("flops", 0.0),
+                 "bytes_per_device": ca.get("bytes accessed", 0.0)},
+        "collectives": {
+            "count": len(colls),
+            "wire_bytes_per_device": wire_bytes(colls),
+            "by_op": _group(colls),
+            "scan_mult": n_steps,
+        },
+        "kv_repeat": cfg.kv_repeat,
+    })
+    _save(out_dir, cell_id, rec)
+    gb = rec["memory"]["peak_per_device"] / 2**30
+    print(f"[dryrun] {cell_id}: OK compile={t_compile:.1f}s "
+          f"peak/dev={gb:.2f}GiB flops/dev={rec['cost']['flops_per_device']:.3e} "
+          f"wire/dev={rec['collectives']['wire_bytes_per_device']:.3e}B")
+    return rec
+
+
+def _scan_len(cfg) -> int:
+    if not cfg.scan_layers:
+        return 1
+    if cfg.family == "encdec":
+        return cfg.n_dec_layers  # enc and dec scans have the same order
+    from repro.models.transformer import _pattern
+    return _pattern(cfg)[1]
+
+
+def _group(colls):
+    agg = {}
+    for c in colls:
+        k = c["op"]
+        a = agg.setdefault(k, {"count": 0, "bytes": 0.0, "bytes_x_mult": 0.0})
+        a["count"] += 1
+        a["bytes"] += c["bytes"]
+        a["bytes_x_mult"] += c["bytes"] * c["mult"]
+    return agg
+
+
+def _save(out_dir: Path, cell_id: str, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (e.g. kv_cache_dtype=int8)")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    try:
+        rec = run_cell(args.arch, args.shape, args.multipod, Path(args.out),
+                       overrides or None)
+        sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+    except Exception:
+        traceback.print_exc()
+        cell_id = (f"{args.arch}__{args.shape}__"
+                   f"{'2x16x16' if args.multipod else '16x16'}")
+        _save(Path(args.out), cell_id,
+              {"arch": args.arch, "shape": args.shape, "status": "error",
+               "error": traceback.format_exc()[-2000:]})
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module does not touch jax device initialisation — the dry-run
+sets XLA_FLAGS before first jax init; smoke tests and benches see 1 device.
+
+Single pod : (data=16, model=16)            — 256 chips (TPU v5e pod slice)
+Multi-pod  : (pod=2, data=16, model=16)     — 512 chips, DCN 'pod' axis
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for elastic re-meshing (e.g. after dropping a failed
+    data slice: (15, 16) instead of (16, 16))."""
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(cfg, mesh, kind: str = "train"):
+    """Pick the sharding-rule table for a config on a mesh."""
+    from repro.distributed import sharding as sh
+    rules = sh.MULTIPOD_RULES if "pod" in mesh.shape else sh.DEFAULT_RULES
+    if getattr(cfg, "fsdp", False):
+        rules = sh.fsdp_rules(rules)
+    if getattr(cfg, "moe_impl", "tp") == "ep":
+        rules = sh.ep_rules(rules)
+    if getattr(cfg, "seq_shard_resid", False) and kind == "train":
+        rules = dict(rules) | {"resid_seq": ("model",)}
+    if getattr(cfg, "kv_seq_shard", False) and kind == "decode":
+        rules = dict(rules) | {"kv_seq": ("data",)}
+    if getattr(cfg, "decode_embed_shard", False) and kind == "decode":
+        # weight-stationary decode: contract d over 'data'; GSPMD emits an
+        # activation all-reduce instead of per-token weight all-gathers
+        rules = dict(rules) | {"embed": ("data",)}
+    return rules
+
+
+def kv_repeat_for(cfg, mesh) -> int:
+    """KV-head replication factor so the kv-head dim divides the model axis."""
+    if cfg.n_kv_heads <= 0:
+        return 1
+    import math
+    A = mesh.shape.get("model", 1)
+    g = math.gcd(cfg.n_kv_heads, A)
+    r = A // g
+    # never repeat beyond the q-head count
+    return min(r, max(cfg.n_heads // cfg.n_kv_heads, 1))

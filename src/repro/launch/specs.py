@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+device-sharded, no allocation.  The dry-run lowers against these.
+
+``input_specs(cfg, shape, mesh, rules)`` returns (step_kind, kwargs) where
+kwargs are the abstract arguments of the corresponding step function.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import named_sharding
+from repro.models.registry import build_model
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    sh = named_sharding(axes, shape, rules, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def _abstract_tree(concrete_fn, axes_tree, mesh, rules):
+    """eval_shape a cache-builder and attach shardings from an axes tree."""
+    shapes = jax.eval_shape(concrete_fn)
+
+    def attach(sds, axes):
+        sh = named_sharding(axes, sds.shape, rules, mesh)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree.map(attach, shapes, axes_tree)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    """Training / prefill batch inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    tok_axes = ("batch", "seq")
+    out = {}
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                             ("batch", "seq", "embed"), mesh, rules)
+        out["tokens"] = _sds((B, S), jnp.int32, tok_axes, mesh, rules)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), jnp.int32, tok_axes, mesh, rules)
+        return out
+    n_txt = S - cfg.frontend_seq if cfg.frontend == "vision" else S
+    out["tokens"] = _sds((B, n_txt), jnp.int32, tok_axes, mesh, rules)
+    if cfg.frontend == "vision":
+        out["extra_embeds"] = _sds((B, cfg.frontend_seq, cfg.d_model),
+                                   jnp.bfloat16, ("batch", "seq", "embed"),
+                                   mesh, rules)
+    if shape.kind == "train":
+        out["labels"] = _sds((B, n_txt), jnp.int32, tok_axes, mesh, rules)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    """serve_step inputs: one new token + a KV cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    out = {"tokens": _sds((B, 1), jnp.int32, ("batch", "seq"), mesh, rules)}
+    if cfg.family == "encdec":
+        from repro.models.encdec import encdec_cache_axes
+        params_abs = model.abstract(jnp.bfloat16, mesh, rules)
+        enc_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        out["cache"] = _abstract_tree(
+            lambda: model.init_dec_cache(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs),
+                jnp.zeros((B, S, cfg.d_model), jnp.bfloat16),
+                B, max_len=S, prefilled=S - 1),
+            encdec_cache_axes(cfg), mesh, rules)
+    else:
+        from repro.models.transformer import init_decode_cache, decode_cache_axes
+        out["cache"] = _abstract_tree(
+            lambda: init_decode_cache(cfg, B, S, prefilled=S - 1),
+            decode_cache_axes(cfg), mesh, rules)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    if shape.kind == "decode":
+        return "decode", decode_specs(cfg, shape, mesh, rules)
+    if shape.kind == "prefill":
+        return "prefill", batch_specs(cfg, shape, mesh, rules)
+    return "train", batch_specs(cfg, shape, mesh, rules)

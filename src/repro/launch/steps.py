@@ -1,0 +1,100 @@
+"""Jittable step functions (train / prefill / decode) with full shardings.
+
+Each builder returns ``(fn, example_args)`` where every abstract arg carries a
+NamedSharding, so ``jax.jit(fn).lower(*args)`` is the complete AOT story used
+by both the dry-run and the real launchers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import named_sharding, logical_to_pspec
+from repro.launch import specs as SP
+from repro.models.params import Spec, abstract_params, tree_axes
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+def abstract_opt_state(specs, opt_cfg: AdamWConfig, mesh, rules):
+    moments = abstract_params(specs, jnp.dtype(opt_cfg.moments_dtype),
+                              mesh, rules)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=_replicated(mesh))
+    return {"mu": moments, "nu": moments, "step": step}
+
+
+def make_train_step(cfg: ModelConfig, mesh, rules, opt_cfg: AdamWConfig | None = None):
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig(
+        moments_dtype=cfg.opt_moments_dtype)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, mesh=mesh, rules=rules)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+        out_metrics = {"loss": loss, **{k: v for k, v in metrics.items()},
+                       **om}
+        return new_params, new_opt, out_metrics
+
+    return model, opt_cfg, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, rules):
+    model = build_model(cfg)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            enc_out = model.encode(params, batch["frames"], mesh=mesh,
+                                   rules=rules)
+            B, S = batch["tokens"].shape
+            cache = model.init_dec_cache(params, enc_out, B, max_len=S,
+                                         prefilled=0)
+            return enc_out[:, -1], cache
+        return model, prefill_step
+
+    def prefill_step(params, batch):
+        n_pos = batch["tokens"].shape[1] + (
+            cfg.frontend_seq if cfg.frontend == "vision" else 0)
+        logits, cache = model.prefill(
+            params, batch["tokens"], max_len=n_pos,
+            extra_embeds=batch.get("extra_embeds"), mesh=mesh, rules=rules)
+        return logits, cache
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh, rules):
+    model = build_model(cfg)
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, mesh=mesh, rules=rules)
+
+    return model, decode_step
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    """Assemble (fn, abstract_args) for one (arch x shape x mesh) cell."""
+    kind, batch = SP.input_specs(cfg, shape, mesh, rules)
+    if kind == "train":
+        model, opt_cfg, fn = make_train_step(cfg, mesh, rules)
+        params = model.abstract(jnp.bfloat16, mesh, rules)
+        opt = abstract_opt_state(model.specs(), opt_cfg, mesh, rules)
+        return fn, (params, opt, batch)
+    if kind == "prefill":
+        model, fn = make_prefill_step(cfg, mesh, rules)
+        params = model.abstract(jnp.bfloat16, mesh, rules)
+        return fn, (params, batch)
+    model, fn = make_decode_step(cfg, mesh, rules)
+    params = model.abstract(jnp.bfloat16, mesh, rules)
+    return fn, (params, batch["cache"], batch["tokens"])

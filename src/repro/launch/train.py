@@ -1,0 +1,38 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --smoke --steps 50 --batch 8 --seq 128 [--ckpt-dir ckpts/granite]
+
+``--smoke`` selects the reduced config (CPU-runnable); the full configs are
+for TPU fleets (the dry-run proves their distribution).  ``--fail-at N``
+injects a failure to demonstrate checkpoint-restart.
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at", type=int, action="append", default=[])
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_config
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every)
+    _, history = train(cfg, tc, fail_at=set(args.fail_at))
+    if history:
+        print(f"final loss: {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Attention: GQA with causal / sliding-window / soft-cap variants.
+
+Three implementations share one math definition (``ref`` semantics):
+
+* ``naive``   — full score matrix; smoke tests and small shapes.
+* ``blocked`` — memory-proper online-softmax attention in pure JAX
+                (lax.scan over q-blocks × kv-blocks).  This is the XLA path
+                the dry-run compiles at 32k/500k sequence lengths.  For
+                sliding-window attention the inner loop runs only over the
+                O(window) kv-blocks selected with a dynamic slice, so SWA is
+                genuinely sub-quadratic, not masked-quadratic.
+* ``pallas``  — the TPU flash kernel in repro.kernels (selected by ops.py).
+
+Shapes: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D); Hq % Hkv == 0 (GQA).
+Positions are absolute: q_offset is the position of q[:, 0]; kv positions are
+``arange(Skv)``; entries with k_pos >= kv_valid are masked (cache padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal, window, kv_valid):
+    """q_pos (bq,), k_pos (bkv,) -> bool (bq, bkv)."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_valid is not None:
+        m &= k_pos[None, :] < kv_valid
+    return m
+
+
+def _scores(qblk, kblk, scale, cap):
+    # qblk (B, bq, Hkv, G, D), kblk (B, bkv, Hkv, D) -> (B, Hkv, G, bq, bkv) f32
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    q_offset=0, kv_valid=None, scale=None):
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = _scores(qg, k, scale, cap)                       # (B,Hkv,G,Sq,Skv)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_valid=kv_valid)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, D)
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def blocked_attention(q, k, v, *, causal=True, window=None, cap=None,
+                      q_offset=0, kv_valid=None, block_q=512, block_kv=1024,
+                      scale=None):
+    B, Sq0, Hq, D = q.shape
+    _, Skv0, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq0) if Sq0 >= 16 else Sq0
+    block_kv = min(block_kv, Skv0) if Skv0 >= 16 else Skv0
+
+    q, Sq = _pad_to(q, 1, block_q)
+    k, Skv = _pad_to(k, 1, block_kv)
+    v, _ = _pad_to(v, 1, block_kv)
+    kv_valid_eff = Skv if kv_valid is None else kv_valid
+
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_kv
+    qb = q.reshape(B, nq, block_q, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    if window is not None:
+        # only the kv-blocks overlapping [q_start - window + 1, q_end] matter
+        nw = min(nk, (window + block_q - 1) // block_kv + 2)
+    else:
+        nw = nk
+
+    @jax.checkpoint
+    def q_step(_, inp):
+        i, qblk = inp                                    # qblk (B,bq,Hkv,G,D)
+        q_start = q_offset + i * block_q
+        if window is not None and nw < nk:
+            first = jnp.clip((q_start - (window - 1)) // block_kv, 0, nk - nw)
+        else:
+            first = jnp.int32(0)
+        kwin = jax.lax.dynamic_slice_in_dim(kb, first, nw, axis=0)
+        vwin = jax.lax.dynamic_slice_in_dim(vb, first, nw, axis=0)
+        q_pos = q_start + jnp.arange(block_q)
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+
+        def kv_step(carry, kv):
+            mprev, l, acc = carry
+            j, kblk, vblk = kv
+            k_pos = (first + j) * block_kv + jnp.arange(block_kv)
+            s = _scores(qblk, kblk, scale, cap)          # (B,Hkv,G,bq,bkv)
+            msk = _mask(q_pos, k_pos, causal=causal, window=window,
+                        kv_valid=kv_valid_eff)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            mnew = jnp.maximum(mprev, s.max(-1))
+            p = jnp.exp(s - mnew[..., None])
+            alpha = jnp.exp(mprev - mnew)
+            l = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (mnew, l, acc), None
+
+        (mf, lf, af), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nw), kwin, vwin))
+        out = af / jnp.maximum(lf, 1e-30)[..., None]     # (B,Hkv,G,bq,D)
+        out = out.transpose(0, 3, 1, 2, 4)               # (B,bq,Hkv,G,D)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    o = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * block_q, Hq, D)
+    return o[:, :Sq0]
+
+
+def decode_attention(q, k_cache, v_cache, *, kv_valid, window=None, cap=None,
+                     scale=None):
+    """Single/few-token decode against a cache.  q (B, T, Hq, D) with T small;
+    kv_valid (B,) or scalar = number of valid cache entries; queries are the
+    last T positions (q_pos = kv_valid - T + t)."""
+    B, T, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, T, Hkv, G, D)
+    s = _scores(qg, k_cache, scale, cap)                 # (B,Hkv,G,T,S)
+    kv_valid = jnp.asarray(kv_valid)
+    kv_valid_b = jnp.broadcast_to(kv_valid, (B,))
+    q_pos = kv_valid_b[:, None] - T + jnp.arange(T)[None, :]   # (B,T)
+    k_pos = jnp.arange(S)
+    m = k_pos[None, None, :] <= q_pos[:, :, None]              # causal (B,T,S)
+    if window is not None:
+        m &= (q_pos[:, :, None] - k_pos[None, None, :]) < window
+    s = jnp.where(m[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, T, Hq, D)
+
+
+def attention(q, k, v, *, impl="blocked", **kw):
+    if impl == "naive":
+        kw.pop("block_q", None), kw.pop("block_kv", None)
+        return naive_attention(q, k, v, **kw)
+    if impl == "blocked":
+        return blocked_attention(q, k, v, **kw)
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,221 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+Encoder consumes precomputed frame embeddings (the audio frontend is a STUB
+per the assignment — ``input_specs()`` supplies (B, S_src, d_model) arrays).
+Decoder = causal self-attn + cross-attn + MLP.  Both stacks scan over layers.
+
+Decode caches: per-layer self KV cache (append) + cross KV computed once from
+the encoder output at prefill time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import attention, decode_attention
+from repro.models.params import Spec, init_params, abstract_params
+from repro.models.transformer import (
+    attn_specs, mlp_specs_full, attn_sublayer, mlp_sublayer, _qkv,
+    _cache_append, _quant_kv)
+
+
+def cross_attn_specs(cfg: ModelConfig) -> dict:
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "ln": Spec((d,), ("norm",), init="ones"),
+        "w_q": Spec((d, Hq, Dh), ("fsdp", "heads", None)),
+        "w_k": Spec((d, Hkv, Dh), ("fsdp", "kv_heads", None)),
+        "w_v": Spec((d, Hkv, Dh), ("fsdp", "kv_heads", None)),
+        "w_o": Spec((Hq, Dh, d), ("heads", None, "fsdp")),
+    }
+
+
+def _stack(specs, n: int):
+    def one(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, ("layers",) + s.axes, init=s.init,
+                    scale=s.scale, dtype=s.dtype)
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    enc_layer = {"attn": attn_specs(cfg), "mlp": mlp_specs_full(cfg)}
+    dec_layer = {"attn": attn_specs(cfg), "cross": cross_attn_specs(cfg),
+                 "mlp": mlp_specs_full(cfg)}
+    return {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model),
+        "enc_blocks": _stack(enc_layer, cfg.n_enc_layers),
+        "dec_blocks": _stack(dec_layer, cfg.n_dec_layers),
+        "enc_norm": Spec((cfg.d_model,), ("norm",), init="ones"),
+        "final_norm": Spec((cfg.d_model,), ("norm",), init="ones"),
+        "lm_head": Spec((L.padded_vocab(cfg.vocab), cfg.d_model),
+                        ("vocab", "fsdp")),
+    }
+
+
+def _cross_kv(p, enc_out, cfg):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["w_v"].astype(dt))
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    return k, v
+
+
+def cross_sublayer(p, x, cfg, *, enc_out=None, kv=None, mesh=None, rules=None):
+    """Cross attention; kv precomputed (decode) or derived from enc_out."""
+    dt = x.dtype
+    xn = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["w_q"].astype(dt))
+    if kv is None:
+        k, v = _cross_kv(p, enc_out, cfg)
+    else:
+        k, v = kv
+    o = attention(q, k, v, impl=cfg.attn_impl, causal=False, window=None,
+                  cap=None, block_q=cfg.attn_block_q,
+                  block_kv=cfg.attn_block_kv)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["w_o"].astype(dt))
+    return x + o
+
+
+def encdec_cache_axes(cfg: ModelConfig) -> dict:
+    self_ax = {"k": ("layers", "batch", "kv_seq", "act_kv_heads", None),
+               "v": ("layers", "batch", "kv_seq", "act_kv_heads", None),
+               "len": ("layers", "batch")}
+    if cfg.kv_cache_dtype == "int8":
+        self_ax["k_scale"] = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+        self_ax["v_scale"] = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+    return {"cross_k": ("layers", "batch", None, "act_kv_heads", None),
+            "cross_v": ("layers", "batch", None, "act_kv_heads", None),
+            "self": self_ax}
+
+
+@dataclasses.dataclass
+class EncDecLM:
+    cfg: ModelConfig
+
+    def specs(self):
+        return encdec_specs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.specs(), key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16, mesh=None, rules=None):
+        return abstract_params(self.specs(), dtype, mesh, rules)
+
+    # ---------------------------------------------------------- encoder ----
+    def encode(self, params, frames, *, mesh=None, rules=None):
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.compute_dtype))
+
+        def body(x, p):
+            x, _ = attn_sublayer(p["attn"], x, cfg, window=None, causal=False,
+                                 mesh=mesh, rules=rules)
+            x = mlp_sublayer(p["mlp"], x, cfg, mesh=mesh, rules=rules)
+            return x, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        else:
+            for i in range(cfg.n_enc_layers):
+                p = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+                x, _ = body(x, p)
+        return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # ---------------------------------------------------------- decoder ----
+    def _dec_body(self, mode, enc_out, mesh, rules):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            x = carry
+            p, cache = inp
+            csl = None if cache is None else cache.get("self")
+            x, nc = attn_sublayer(p["attn"], x, cfg, window=None,
+                                  cache=csl if mode == "decode" else None,
+                                  mode=mode, mesh=mesh, rules=rules)
+            kv = None
+            if mode == "decode":
+                kv = (cache["cross_k"], cache["cross_v"])
+            x = cross_sublayer(p["cross"], x, cfg, enc_out=enc_out, kv=kv,
+                               mesh=mesh, rules=rules)
+            x = mlp_sublayer(p["mlp"], x, cfg, mesh=mesh, rules=rules)
+            out_cache = None
+            if mode == "decode":
+                out_cache = dict(cache)
+                out_cache["self"] = nc
+            elif mode == "prefill":
+                out_cache = {"self": nc}
+            return x, out_cache
+
+        return body
+
+    def loss(self, params, batch, *, mesh=None, rules=None):
+        """batch: frames (B,Ss,d), tokens (B,St), labels (B,St)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], mesh=mesh, rules=rules)
+        x = L.embed_lookup(params["embed"]["embedding"], batch["tokens"],
+                           jnp.dtype(cfg.compute_dtype))
+        body = self._dec_body("train", enc_out, mesh, rules)
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda c, p: body(c, (p, None)), x,
+                                params["dec_blocks"])
+        else:
+            for i in range(cfg.n_dec_layers):
+                p = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+                x, _ = body(x, (p, None))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed_logits(params["lm_head"], x, cfg.vocab, None)
+        ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return ce, {"ce": ce, "aux": jnp.float32(0)}
+
+    # ------------------------------------------------------------ decode ---
+    def init_dec_cache(self, params, enc_out, batch, max_len, prefilled=0):
+        cfg = self.cfg
+        Hkv = cfg.n_kv_heads * cfg.kv_repeat
+        kvdt = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+
+        def per_layer(p):
+            ck, cv = _cross_kv(p["cross"], enc_out, cfg)
+            c = {"cross_k": ck, "cross_v": cv,
+                 "self": {"k": jnp.zeros((batch, max_len, Hkv, cfg.head_dim), kvdt),
+                          "v": jnp.zeros((batch, max_len, Hkv, cfg.head_dim), kvdt),
+                          "len": jnp.full((batch,), prefilled, jnp.int32)}}
+            if cfg.kv_cache_dtype == "int8":
+                c["self"]["k_scale"] = jnp.zeros((batch, max_len, Hkv, 1), jnp.float32)
+                c["self"]["v_scale"] = jnp.zeros((batch, max_len, Hkv, 1), jnp.float32)
+            return c
+
+        # build per-layer cross KV by scanning the stacked cross params
+        def mk(carry, p):
+            return carry, per_layer(p)
+
+        _, cache = jax.lax.scan(mk, None, params["dec_blocks"])
+        return cache
+
+    def decode_step(self, params, cache, tokens, *, mesh=None, rules=None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"]["embedding"], tokens,
+                           jnp.dtype(cfg.compute_dtype))
+        body = self._dec_body("decode", None, mesh, rules)
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+        else:
+            ncs = []
+            for i in range(cfg.n_dec_layers):
+                p = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+                csl = jax.tree.map(lambda a: a[i], cache)
+                x, nc = body(x, (p, csl))
+                ncs.append(nc)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed_logits(params["lm_head"], x, cfg.vocab, None)
+        return logits, new_cache

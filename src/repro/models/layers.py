@@ -1,0 +1,155 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, embeddings, gated MLP.
+
+Conventions: activations in ``cfg.compute_dtype`` (bf16 on TPU), norm and
+softmax statistics accumulated in f32.  Vocab embeddings are padded to a
+multiple of VOCAB_PAD so the vocab dim shards over the 16-way model axis and
+stays 128-lane aligned on the MXU (granite's 49 155 → 49 408 etc.).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+
+VOCAB_PAD = 2048  # lcm(model_axis=16, MXU lane=128)
+
+
+def padded_vocab(vocab: int) -> int:
+    return ((vocab + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_spec(d: int, name_axes=("embed",)) -> Spec:
+    return Spec((d,), name_axes, init="ones")
+
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """bf16-native RMSNorm: only the variance reduction runs in f32.
+
+    Casting the whole stream to f32 (the naive formulation) makes every
+    residual cotangent an f32 buffer — at (B=16,S=4096,d=2560) that is
+    671 MiB per co-live buffer in the backward pass and dominated the
+    train-step HBM footprint (see EXPERIMENTS.md §Perf iteration 1)."""
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+@functools.partial(jax.jit, static_argnames=("dim", "theta"))
+def _rope_freqs(positions: jax.Array, dim: int, theta: float):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    cos, sin = _rope_freqs(positions, D, theta)          # (..., S, D/2)
+    cos = cos[..., None, :]                               # (..., S, 1, D/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------- grad barrier ------
+@jax.custom_vjp
+def grad_barrier(x):
+    """Identity that forces the cotangent back to the primal dtype.
+
+    f32-accumulating einsums (norm variance, attention scores) make their
+    transposes produce f32 cotangents; once one f32 contribution joins the
+    residual-stream gradient, the whole backward carry — and the remat-saved
+    per-layer residual stack — is promoted to f32 (observed: a hoisted
+    f32[L,B,S,d] convert of the full saved stack, 15 GiB at h2o/train_4k).
+    Placing this barrier on the scan carry pins the stream cotangent to bf16.
+    """
+    return x
+
+
+def _gb_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)   # dtype token (residual must be a jax type)
+
+
+def _gb_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+grad_barrier.defvjp(_gb_fwd, _gb_bwd)
+
+
+# ------------------------------------------------------------- softcap -----
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ----------------------------------------------------------- embedding -----
+def embed_specs(vocab: int, d: int) -> dict:
+    pv = padded_vocab(vocab)
+    return {"embedding": Spec((pv, d), ("vocab", "fsdp"), init="embed", scale=1.0)}
+
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    # one-hot-free gather; tokens guaranteed < true vocab <= padded rows
+    return jnp.take(emb, tokens, axis=0).astype(compute_dtype)
+
+
+def unembed_logits(emb_or_w: jax.Array, x: jax.Array, true_vocab: int,
+                   final_cap: float | None = None) -> jax.Array:
+    """x: (..., d) -> logits (..., padded_vocab) with pad positions masked."""
+    logits = jnp.einsum("...d,vd->...v", x, emb_or_w.astype(x.dtype))
+    logits = softcap(logits, final_cap)
+    pv = emb_or_w.shape[0]
+    if pv != true_vocab:
+        mask = jnp.arange(pv) < true_vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+# ----------------------------------------------------------------- mlp -----
+def mlp_specs(d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": Spec((d, d_ff), ("fsdp", "mlp")),
+        "w_up": Spec((d, d_ff), ("fsdp", "mlp")),
+        "w_down": Spec((d_ff, d), ("mlp", "fsdp")),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = _act(act)(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- loss -----
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """logits (..., V) CE; labels int32; optional 0/1 mask.
+
+    Shard-friendly: the gold logit is extracted with an iota==label product
+    (stays partitioned on a vocab-sharded axis; ``take_along_axis`` would
+    force an all-gather of the full logits), and logsumexp is the shifted
+    stable form whose reductions partial-reduce per shard."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = labels[..., None] == jnp.arange(logits.shape[-1])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

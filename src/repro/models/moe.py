@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded sort dispatch.
+
+Dispatch is gather/scatter-based (argsort by expert id, truncate to capacity)
+rather than GShard one-hot einsums — on TPU the one-hot dispatch matmul burns
+MXU flops proportional to tokens·E·capacity·d; gathers keep HLO FLOPs close
+to the useful 2·N_active·D (visible in the roofline usefulness ratio).
+
+Locality: dispatch runs per batch row (vmap over B), and B is sharded over
+'data' — so routing never crosses devices.  Expert weights are sharded either
+
+* TP  (default): every device holds a slice of every expert's ffn dim
+  ('expert_mlp' → 'model'); no token movement, all-reduce on the output.
+* EP: whole experts live on model-axis shards ('experts' → 'model'); GSPMD
+  inserts the all-to-all for the (E, C, d) buffers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+
+
+def moe_specs(cfg) -> dict:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    return {
+        "w_router": Spec((d, E), ("fsdp", None)),
+        "w_gate": Spec((E, d, ff), ("experts", "fsdp", "expert_mlp")),
+        "w_up": Spec((E, d, ff), ("experts", "fsdp", "expert_mlp")),
+        "w_down": Spec((E, ff, d), ("experts", "expert_mlp", "fsdp")),
+    }
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(tokens * top_k * factor / n_experts) + 1
+    return max(4, min(cap, tokens))  # floor avoids degenerate decode shapes
+
+
+def route_and_dispatch(x_row, logits_row, top_k: int, capacity: int, E: int):
+    """Per-group dispatch.  x_row (S, d), logits_row (S, E) ->
+    expert_in (E, C, d), combine info (idx (E,C), weight (E,C), valid (E,C))."""
+    S, d = x_row.shape
+    probs = jax.nn.softmax(logits_row.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, top_k)              # (S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                              # (S*k,)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(S), top_k)
+
+    order = jnp.argsort(flat_e, stable=True)                # group by expert
+    se, sw, st = flat_e[order], flat_w[order], flat_tok[order]
+    # position within expert segment
+    pos_in_e = jnp.arange(S * top_k) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, se * capacity + pos_in_e, E * capacity)  # drop sink
+
+    idx = jnp.full((E * capacity + 1,), S, jnp.int32)       # S = pad token row
+    wgt = jnp.zeros((E * capacity + 1,), jnp.float32)
+    idx = idx.at[slot].set(st.astype(jnp.int32), mode="drop")
+    wgt = wgt.at[slot].set(sw, mode="drop")
+    idx = idx[:-1].reshape(E, capacity)
+    wgt = wgt[:-1].reshape(E, capacity)
+
+    x_pad = jnp.concatenate([x_row, jnp.zeros((1, d), x_row.dtype)], 0)
+    expert_in = x_pad[idx]                                  # (E, C, d)
+    return expert_in, idx, wgt
+
+
+def combine(expert_out, idx, wgt, S: int):
+    """expert_out (E, C, d) -> (S, d) weighted scatter-add."""
+    E, C, d = expert_out.shape
+    contrib = expert_out.astype(jnp.float32) * wgt[..., None]
+    out = jnp.zeros((S + 1, d), jnp.float32)
+    out = out.at[idx.reshape(-1)].add(contrib.reshape(E * C, d), mode="drop")
+    return out[:S]
+
+
+def moe_block(p, x, cfg, mesh=None, rules=None):
+    """x (B, S, d) -> (B, S, d); load-balance aux loss returned alongside."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(S, k, E, cfg.capacity_factor)
+    logits = x @ p["w_router"].astype(x.dtype)              # (B, S, E)
+
+    ein, idx, wgt = jax.vmap(
+        lambda xr, lr: route_and_dispatch(xr, lr, k, cap, E))(x, logits)
+    # ein (B, E, C, d): under EP, constrain expert dim onto the model axis so
+    # GSPMD materialises the all-to-all instead of gathering everything.
+    if mesh is not None and rules is not None:
+        from repro.distributed.sharding import shard_activation
+        ein = shard_activation(ein, ("batch", "act_experts", None, None),
+                               rules, mesh)
+
+    from repro.models.layers import _act
+    act = _act(cfg.mlp_act)
+    h = act(jnp.einsum("becd,edf->becf", ein, p["w_gate"].astype(ein.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", ein, p["w_up"].astype(ein.dtype))
+    eout = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(ein.dtype))
+    if mesh is not None and rules is not None:
+        from repro.distributed.sharding import shard_activation
+        eout = shard_activation(eout, ("batch", "act_experts", None, None),
+                                rules, mesh)
+
+    out = jax.vmap(lambda eo, i, w: combine(eo, i, w, S))(eout, idx, wgt)
+
+    # Switch-style load-balance aux loss
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = probs.mean(axis=(0, 1))                            # (E,)
+    top1 = jnp.argmax(logits, -1)
+    ce = jnp.zeros((E,), jnp.float32).at[top1.reshape(-1)].add(1.0) / (B * S)
+    aux = E * jnp.sum(me * ce)
+    return out.astype(x.dtype), aux

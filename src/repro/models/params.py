@@ -1,0 +1,96 @@
+"""Parameter spec DSL: one declaration drives init, abstract shapes, and sharding.
+
+A model defines ``param_specs(cfg) -> nested dict of Spec``.  From that single
+source of truth we derive:
+
+* ``init_params``      — PRNG-initialised concrete arrays,
+* ``abstract_params``  — ShapeDtypeStructs (optionally device-sharded) for
+                         AOT lowering in the multi-pod dry-run,
+* ``param_count``      — exact parameter count for the roofline's 6·N·D,
+* partition specs      — via ``distributed.sharding.tree_pspecs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float | None = None            # stddev override (normal/embed)
+    dtype: Any = None                     # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # For stacked-layer params (leading 'layers' dim) fan-in excludes dim 0;
+    # callers tag it via axes, but a safe heuristic: use second-to-last dim.
+    if len(shape) >= 2:
+        return shape[-2]
+    return shape[-1]
+
+
+def init_one(key: jax.Array, spec: Spec, dtype) -> jax.Array:
+    dt = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 1.0
+        return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(_fan_in(spec.shape), 1))
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16, mesh=None, rules=None):
+    from repro.distributed.sharding import named_sharding
+
+    def one(s: Spec):
+        dt = s.dtype or dtype
+        if mesh is not None and rules is not None:
+            sh = named_sharding(s.axes, s.shape, rules, mesh)
+            return jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs, dtype=jnp.bfloat16) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    total = 0
+    for s in leaves:
+        dt = np.dtype(s.dtype or dtype)
+        total += int(np.prod(s.shape)) * dt.itemsize
+    return total
+
+
+def tree_axes(specs):
+    """Tree of logical-axes tuples (for optimizer-state sharding etc.)."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)

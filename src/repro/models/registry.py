@@ -1,0 +1,12 @@
+"""build_model(cfg) -> DecoderLM | EncDecLM."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import DecoderLM
+from repro.models.encdec import EncDecLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+The sequence dimension is processed in chunks (cfg.ssm_chunk): the
+intra-chunk term is a masked quadratic form computed on the MXU, the
+inter-chunk recurrence is a ``lax.scan`` over per-chunk states — exactly the
+structure the Pallas kernel (repro.kernels.ssd_scan) implements on TPU with
+the state carried in VMEM scratch across sequential grid steps.
+
+Head layout: x (B, S, H, P), shared B/C projections (n_groups = 1):
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t x_t ⊗ B_t        (state h: (P, N))
+    y_t = h_t C_t + D x_t
+Sharding: H over 'model'; B/C (N) replicated; no collectives inside the scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+
+
+# ----------------------------------------------------------------- specs ---
+def mamba_specs(cfg) -> dict:
+    d, di, H, P, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cw = cfg.ssm_conv
+    return {
+        "w_z": Spec((d, di), ("fsdp", "mlp")),
+        "w_x": Spec((d, di), ("fsdp", "mlp")),
+        "w_B": Spec((d, N), ("fsdp", None)),
+        "w_C": Spec((d, N), ("fsdp", None)),
+        "w_dt": Spec((d, H), ("fsdp", "heads")),
+        "dt_bias": Spec((H,), ("heads",), init="zeros"),
+        "A_log": Spec((H,), ("heads",), init="zeros"),
+        "D": Spec((H,), ("heads",), init="ones"),
+        "conv_x": Spec((cw, di), (None, "mlp"), scale=0.5),
+        "conv_B": Spec((cw, N), (None, None), scale=0.5),
+        "conv_C": Spec((cw, N), (None, None), scale=0.5),
+        "norm": Spec((di,), ("mlp",), init="ones"),
+        "w_out": Spec((di, d), ("mlp", "fsdp")),
+    }
+
+
+# ------------------------------------------------------------ primitives ---
+def causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                          state: jax.Array | None = None):
+    """x (B, S, C), w (K, C) depthwise causal conv + silu.
+    If state (B, K-1, C) is given (decode), prepend it; returns (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # sum_k w[k] * x[t - (K-1) + k]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        y = y + xp[:, k:k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    new_state = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, h0=None):
+    """SSD forward.
+    x  (B,S,H,P)  dt (B,S,H)  A (H,)<0  Bm/Cm (B,S,N)  D (H,)
+    Returns y (B,S,H,P), final state (B,H,P,N)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = Bm.reshape(Bb, nc, chunk, N)
+    Cc = Cm.reshape(Bb, nc, chunk, N)
+
+    da = dtc * A                                     # log-decay (B,nc,L,H)
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumsum
+    total = cum[:, :, -1]                            # (B,nc,H)
+
+    # intra-chunk: M[t,s] = exp(cum[t]-cum[s]) * (C_t·B_s), causal
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc,
+                    preferred_element_type=jnp.float32)     # (B,nc,L,L)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # exp() only on the masked region: unmasked seg > 0 overflows to inf and
+    # poisons the BACKWARD pass (inf * 0 = nan in the where-gradient)
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, seg, 0.0)), 0.0)
+    M = CB[..., None] * decay                               # (B,nc,L,L,H)
+    xdt = xc * dtc[..., None]                               # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M, xdt.astype(jnp.float32))
+
+    # chunk states: sum_s exp(total - cum[s]) * dt_s x_s ⊗ B_s
+    decay_end = jnp.exp(total[:, :, None] - cum)            # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclhp,bcln->bchpn",
+                        decay_end, xdt.astype(jnp.float32), Bc)
+
+    # inter-chunk recurrence over nc
+    h_init = (jnp.zeros((Bb, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        st, tot = inp                                       # (B,H,P,N), (B,H)
+        h_prev = h
+        h = jnp.exp(tot)[:, :, None, None] * h + st
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_t · (exp(cum[t]) * h_prev)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                         Cc.astype(jnp.float32), h_prevs, jnp.exp(cum))
+    y = y_intra + y_inter + D[None, None, :, None] * xc.astype(jnp.float32)
+    return y.reshape(Bb, S, H, P).astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, h):
+    """Single-token state update.  x (B,H,P), dt (B,H), Bm/Cm (B,N),
+    h (B,H,P,N) -> y (B,H,P), h_new."""
+    da = jnp.exp(dt * A)                                    # (B,H)
+    hx = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    h_new = da[:, :, None, None] * h + hx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    y = y + D[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_new
+
+
+# ----------------------------------------------------------- full block ----
+def _proj_ssm_inputs(p, u, cfg):
+    """Shared by prefill and decode: project and split."""
+    z = u @ p["w_z"].astype(u.dtype)
+    x = u @ p["w_x"].astype(u.dtype)
+    Bm = u @ p["w_B"].astype(u.dtype)
+    Cm = u @ p["w_C"].astype(u.dtype)
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"].astype(u.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, x, Bm, Cm, dt
+
+
+def mamba_block(p, u, cfg, cache=None):
+    """u (B,S,d).  cache None (train/prefill from scratch) or dict with
+    'conv_x','conv_B','conv_C' (B,K-1,·) and 'state' (B,H,P,N) for chunked
+    continuation; returns (out, new_cache)."""
+    B, S, d = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, x, Bm, Cm, dt = _proj_ssm_inputs(p, u, cfg)
+    c = cache or {}
+    x, cs_x = causal_depthwise_conv(x, p["conv_x"], c.get("conv_x"))
+    Bm, cs_B = causal_depthwise_conv(Bm, p["conv_B"], c.get("conv_B"))
+    Cm, cs_C = causal_depthwise_conv(Cm, p["conv_C"], c.get("conv_C"))
+    # pad S to a chunk multiple; dt=0 on the tail makes the padded steps an
+    # exact identity on the state (decay exp(0·A)=1, contribution Δ·x=0)
+    pad = (-S) % cfg.ssm_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xh = x.reshape(B, S + pad, H, P)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_chunked(xh, dt, A, Bm, Cm,
+                       p["D"].astype(jnp.float32), cfg.ssm_chunk,
+                       h0=c.get("state"))
+    y = y[:, :S].reshape(B, S, cfg.d_inner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["w_out"].astype(u.dtype)
+    new_cache = {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C, "state": h}
+    return out, new_cache
+
+
+def mamba_decode(p, u, cfg, cache):
+    """u (B,1,d) single token; cache as above."""
+    B, _, d = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, x, Bm, Cm, dt = _proj_ssm_inputs(p, u, cfg)
+    x, cs_x = causal_depthwise_conv(x, p["conv_x"], cache["conv_x"])
+    Bm, cs_B = causal_depthwise_conv(Bm, p["conv_B"], cache["conv_B"])
+    Cm, cs_C = causal_depthwise_conv(Cm, p["conv_C"], cache["conv_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_decode_step(x[:, 0].reshape(B, H, P), dt[:, 0], A,
+                           Bm[:, 0], Cm[:, 0], p["D"].astype(jnp.float32),
+                           cache["state"])
+    y = y.reshape(B, 1, cfg.d_inner)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["w_out"].astype(u.dtype)
+    return out, {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C, "state": h}
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,527 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+Depth is organised as ``n_steps`` repetitions of a per-arch *pattern*:
+
+    dense, moe      : ("block",)                  n_steps = n_layers
+    gemma2          : ("local", "global")         n_steps = n_layers // 2
+    ssm (mamba2)    : ("mamba",)                  n_steps = n_layers
+    hybrid (zamba2) : ("mamba", "mamba", SHARED)  n_steps = n_layers // 2
+
+Pattern params are stacked along a leading 'layers' dim and the whole depth
+runs as one ``lax.scan`` (HLO size O(1) in depth — llama3's 126 layers lower
+as a single scanned body).  ``cfg.scan_layers=False`` switches to a python
+loop over the same stacked params for exact-FLOP calibration compiles.
+
+Zamba2's SHARED transformer block (2 alternating copies, applied after every
+pattern step on concat(hidden, initial-embedding)) lives outside the stacked
+params and is index-selected inside the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import moe as M
+from repro.models.attention import attention, decode_attention
+from repro.models.params import Spec, init_params, abstract_params
+
+
+# ================================================================ specs ====
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = {
+        "ln": Spec((d,), ("norm",), init="ones"),
+        "w_q": Spec((d, Hq, Dh), ("fsdp", "heads", None)),
+        "w_k": Spec((d, Hkv, Dh), ("fsdp", "kv_heads", None)),
+        "w_v": Spec((d, Hkv, Dh), ("fsdp", "kv_heads", None)),
+        "w_o": Spec((Hq, Dh, d), ("heads", None, "fsdp")),
+    }
+    if cfg.attn_bias:
+        sp["b_q"] = Spec((Hq, Dh), ("heads", None), init="zeros")
+        sp["b_k"] = Spec((Hkv, Dh), ("kv_heads", None), init="zeros")
+        sp["b_v"] = Spec((Hkv, Dh), ("kv_heads", None), init="zeros")
+    if cfg.post_norm:
+        sp["ln_post"] = Spec((d,), ("norm",), init="ones")
+    return sp
+
+
+def mlp_specs_full(cfg: ModelConfig) -> dict:
+    sp = {"ln": Spec((cfg.d_model,), ("norm",), init="ones")}
+    sp.update(L.mlp_specs(cfg.d_model, cfg.d_ff))
+    if cfg.post_norm:
+        sp["ln_post"] = Spec((cfg.d_model,), ("norm",), init="ones")
+    return sp
+
+
+def _pattern(cfg: ModelConfig) -> tuple[list[str], int]:
+    if cfg.family == "ssm":
+        return ["mamba"], cfg.n_layers
+    if cfg.family == "hybrid":
+        assert cfg.shared_period == 2
+        return ["mamba", "mamba"], cfg.n_layers // 2
+    if cfg.local_global_period:
+        return ["local", "global"], cfg.n_layers // cfg.local_global_period
+    return ["block"], cfg.n_layers
+
+
+def _sub_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "mamba":
+        return {"mamba": S.mamba_specs(cfg)}
+    sp = {"attn": attn_specs(cfg)}
+    if cfg.family == "moe":
+        sp["moe"] = M.moe_specs(cfg)
+        sp["ln_moe"] = Spec((cfg.d_model,), ("norm",), init="ones")
+    else:
+        sp["mlp"] = mlp_specs_full(cfg)
+    return sp
+
+
+def _stack(specs, n: int):
+    def one(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, ("layers",) + s.axes, init=s.init,
+                    scale=s.scale, dtype=s.dtype)
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def shared_block_specs(cfg: ModelConfig) -> dict:
+    """Zamba2 shared block: concat(h, embed0) -> proj -> attn+mlp."""
+    d = cfg.d_model
+    return {
+        "w_in": Spec((2 * d, d), (None, "fsdp")),
+        "attn": attn_specs(cfg),
+        "mlp": mlp_specs_full(cfg),
+    }
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    pattern, n_steps = _pattern(cfg)
+    step = {f"s{i}_{k}": _sub_specs(cfg, k) for i, k in enumerate(pattern)}
+    sp: dict[str, Any] = {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model),
+        "blocks": _stack(step, n_steps),
+        "final_norm": Spec((cfg.d_model,), ("norm",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = Spec((L.padded_vocab(cfg.vocab), cfg.d_model),
+                             ("vocab", "fsdp"))
+    if cfg.family == "hybrid":
+        sp["shared"] = _stack(shared_block_specs(cfg),
+                              max(cfg.n_shared_blocks, 1))
+    return sp
+
+
+# ============================================================ sublayers ====
+def _qkv(p, x, cfg):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    return q, k, v
+
+
+def attn_sublayer(p, x, cfg, *, window, q_offset=0, cache=None, mode="train",
+                  causal=True, mesh=None, rules=None):
+    """Pre-norm attention residual sublayer.  cache: None (train/prefill) or
+    {'k','v','len'} for decode append.  Returns (x_out, new_cache); in
+    prefill mode new_cache = {'k','v'} (post-rope) for decode-cache assembly."""
+    from repro.distributed.sharding import shard_activation
+    xn = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    q, k, v = _qkv(p, xn, cfg)
+    if mesh is not None:
+        q = shard_activation(q, ("batch", None, "act_heads", None), rules, mesh)
+        k = shard_activation(k, ("batch", None, "act_kv_heads", None), rules, mesh)
+        v = shard_activation(v, ("batch", None, "act_kv_heads", None), rules, mesh)
+    new_cache = None
+    if cache is None:
+        positions = q_offset + jnp.arange(x.shape[1])
+        q = L.apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
+        o = attention(q, k, v, impl=cfg.attn_impl, causal=causal,
+                      window=window, cap=cfg.attn_softcap, q_offset=q_offset,
+                      block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    else:
+        pos = cache["len"]                            # (B,) per-slot lengths
+        positions = pos[:, None] + jnp.arange(x.shape[1])[None, :]
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        ck, cv = _cache_append(cache, k, v, cfg)
+        o = decode_attention(q, ck, cv, kv_valid=pos + 1, window=window,
+                             cap=cfg.attn_softcap)
+        new_cache = dict(cache)
+        new_cache["len"] = pos + 1
+    o = jnp.einsum("bshk,hkd->bsd", o, p["w_o"].astype(x.dtype))
+    if cfg.post_norm:
+        o = L.rmsnorm(p["ln_post"], o, cfg.norm_eps)
+    return x + o, new_cache
+
+
+def _quant_kv(k):
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    return (k.astype(jnp.float32) / scale).round().astype(jnp.int8), scale
+
+
+def _dequant_kv(kq, scale, dtype):
+    return (kq.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _row_update(buf, val, pos):
+    """buf (B,S,H,D) <- val (B,T,H,D) written at per-row positions (B,)."""
+    return jax.vmap(
+        lambda b, x, p: jax.lax.dynamic_update_slice_in_dim(b, x, p, 0)
+    )(buf, val, pos)
+
+
+def _cache_append(cache, k, v, cfg):
+    """Write k,v (B,T,H,D) at per-slot positions cache['len'] (B,); return
+    full dequantized cache arrays for attention (continuous batching: every
+    slot owns an independent sequence length)."""
+    pos = cache["len"]
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        cache["k"] = _row_update(cache["k"], kq, pos)
+        cache["v"] = _row_update(cache["v"], vq, pos)
+        cache["k_scale"] = _row_update(cache["k_scale"], ks, pos)
+        cache["v_scale"] = _row_update(cache["v_scale"], vs, pos)
+        ck = _dequant_kv(cache["k"], cache["k_scale"], k.dtype)
+        cv = _dequant_kv(cache["v"], cache["v_scale"], v.dtype)
+    else:
+        cache["k"] = _row_update(cache["k"], k.astype(cache["k"].dtype), pos)
+        cache["v"] = _row_update(cache["v"], v.astype(cache["v"].dtype), pos)
+        ck, cv = cache["k"], cache["v"]
+    return ck, cv
+
+
+def mlp_sublayer(p, x, cfg, mesh=None, rules=None):
+    from repro.distributed.sharding import shard_activation
+    xn = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    h = L.mlp(p, xn, cfg.mlp_act)
+    if cfg.post_norm:
+        h = L.rmsnorm(p["ln_post"], h, cfg.norm_eps)
+    if mesh is not None:
+        h = shard_activation(h, ("batch", None, "embed"), rules, mesh)
+    return x + h
+
+
+# ============================================================ block step ===
+def make_block_step(cfg: ModelConfig, mode: str, mesh=None, rules=None,
+                    shared_params=None, embed0=None):
+    """Returns step(x_and_extras, step_params, step_idx, cache_slice)
+    -> (x, new_cache_slice, aux).  mode: 'train' | 'prefill' | 'decode'."""
+    pattern, _ = _pattern(cfg)
+    window_for = {
+        "local": cfg.sliding_window,
+        "global": None,
+        "block": cfg.sliding_window,
+        "shared": None,
+    }
+
+    def step(carry, step_params, step_idx, cache_slice):
+        x, q_offset = carry
+        x = L.grad_barrier(x)
+        if mesh is not None:
+            from repro.distributed.sharding import shard_activation
+            x = shard_activation(x, ("batch", "resid_seq", "embed"),
+                                 rules, mesh)
+        aux = jnp.float32(0)
+        new_cache = {}
+        for i, kind in enumerate(pattern):
+            p = step_params[f"s{i}_{kind}"]
+            ckey = f"s{i}"
+            csl = None if cache_slice is None else cache_slice.get(ckey)
+            if kind == "mamba":
+                if mode == "decode":
+                    dx, nc = S.mamba_decode(p["mamba"], x, cfg, csl)
+                else:
+                    dx, nc = S.mamba_block(p["mamba"], x, cfg, cache=csl)
+                x = x + dx
+                new_cache[ckey] = nc
+            else:
+                cache_in = csl if mode == "decode" else None
+                x, nc = attn_sublayer(p["attn"], x, cfg,
+                                      window=window_for[kind],
+                                      q_offset=q_offset, cache=cache_in,
+                                      mode=mode, mesh=mesh, rules=rules)
+                if nc is not None:
+                    new_cache[ckey] = nc
+                if cfg.family == "moe":
+                    xn = L.rmsnorm(p["ln_moe"], x, cfg.norm_eps)
+                    dx, a = M.moe_block(p["moe"], xn, cfg, mesh=mesh, rules=rules)
+                    x = x + dx
+                    aux = aux + a
+                else:
+                    x = mlp_sublayer(p["mlp"], x, cfg, mesh=mesh, rules=rules)
+        if cfg.family == "hybrid":
+            sel = jax.tree.map(
+                lambda a: a[step_idx % max(cfg.n_shared_blocks, 1)],
+                shared_params)
+            xi = jnp.concatenate([x, embed0], axis=-1)
+            xi = xi @ sel["w_in"].astype(x.dtype)
+            csl = None if cache_slice is None else cache_slice.get("shared")
+            cache_in = csl if mode == "decode" else None
+            h, nc = attn_sublayer(sel["attn"], xi, cfg, window=None,
+                                  q_offset=q_offset, cache=cache_in,
+                                  mode=mode, mesh=mesh, rules=rules)
+            h = mlp_sublayer(sel["mlp"], h, cfg, mesh=mesh, rules=rules)
+            x = x + (h - xi)      # residual contribution of the shared block
+            if nc is not None:
+                new_cache["shared"] = nc
+        return (x, q_offset), (new_cache or None), aux
+
+    return step
+
+
+# ============================================================== caches =====
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      prefilled: int = 0) -> dict:
+    """Stacked (n_steps, ...) cache pytree for the scanned decode step."""
+    pattern, n_steps = _pattern(cfg)
+    Hkv = cfg.n_kv_heads * cfg.kv_repeat
+    kvdt = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+
+    def attn_cache():
+        c = {"k": jnp.zeros((batch, max_len, Hkv, cfg.head_dim), kvdt),
+             "v": jnp.zeros((batch, max_len, Hkv, cfg.head_dim), kvdt),
+             "len": jnp.full((batch,), prefilled, jnp.int32)}
+        if cfg.kv_cache_dtype == "int8":
+            c["k_scale"] = jnp.zeros((batch, max_len, Hkv, 1), jnp.float32)
+            c["v_scale"] = jnp.zeros((batch, max_len, Hkv, 1), jnp.float32)
+        return c
+
+    step_cache: dict[str, Any] = {}
+    for i, kind in enumerate(pattern):
+        if kind == "mamba":
+            step_cache[f"s{i}"] = S.init_ssm_cache(cfg, batch)
+        else:
+            step_cache[f"s{i}"] = attn_cache()
+    if cfg.family == "hybrid":
+        step_cache["shared"] = attn_cache()
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_steps,) + a.shape).copy()
+        if a.ndim > 0 else jnp.full((n_steps,), a), step_cache)
+
+
+def _merge_prefill_cache(cfg, B, S, max_len, raw):
+    """raw: stacked (n_steps, ...) prefill outputs — attn {'k','v'} (L,B,S,H,D)
+    and/or mamba conv/state caches.  Builds the decode cache with len=S."""
+    cache = init_decode_cache(cfg, B, max_len, prefilled=S)
+
+    def fill_kv(dst_key, src, c):
+        pad = max_len - src.shape[2]
+        if cfg.kv_cache_dtype == "int8":
+            q, sc = _quant_kv(src)
+            c[dst_key] = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            c[dst_key + "_scale"] = jnp.pad(
+                sc, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            c[dst_key] = jnp.pad(
+                src.astype(c[dst_key].dtype),
+                ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+    for key, src in raw.items():
+        if src is None:
+            continue
+        if "k" in src and "v" in src and "state" not in src:
+            fill_kv("k", src["k"], cache[key])
+            fill_kv("v", src["v"], cache[key])
+        else:  # mamba cache carried through directly
+            for f in ("conv_x", "conv_B", "conv_C"):
+                cache[key][f] = src[f].astype(cache[key][f].dtype)
+            cache[key]["state"] = src["state"]
+    return cache
+
+
+def decode_cache_axes(cfg: ModelConfig) -> dict:
+    """Logical-axes pytree mirroring init_decode_cache (for sharding specs)."""
+    pattern, _ = _pattern(cfg)
+
+    def attn_axes():
+        ax = {"k": ("layers", "batch", "kv_seq", "act_kv_heads", None),
+              "v": ("layers", "batch", "kv_seq", "act_kv_heads", None),
+              "len": ("layers", "batch")}
+        if cfg.kv_cache_dtype == "int8":
+            ax["k_scale"] = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+            ax["v_scale"] = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+        return ax
+
+    ssm_axes = {
+        "conv_x": ("layers", "batch", None, "act_mlp"),
+        "conv_B": ("layers", "batch", None, None),
+        "conv_C": ("layers", "batch", None, None),
+        "state": ("layers", "batch", "act_heads", None, None),
+    }
+    axes: dict[str, Any] = {}
+    for i, kind in enumerate(pattern):
+        axes[f"s{i}"] = dict(ssm_axes) if kind == "mamba" else attn_axes()
+    if cfg.family == "hybrid":
+        axes["shared"] = attn_axes()
+    return axes
+
+
+# ========================================================== full model =====
+@dataclasses.dataclass
+class DecoderLM:
+    cfg: ModelConfig
+
+    # ---- params
+    def specs(self):
+        return lm_specs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.specs(), key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16, mesh=None, rules=None):
+        return abstract_params(self.specs(), dtype, mesh, rules)
+
+    # ---- embedding frontend
+    def _embed_inputs(self, params, tokens, extra_embeds, cdt):
+        x = L.embed_lookup(params["embed"]["embedding"], tokens, cdt)
+        if self.cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(self.cfg.d_model)).astype(cdt)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+        return x
+
+    # ---- forward (train / prefill shared body)
+    def forward(self, params, tokens, *, extra_embeds=None, mode="train",
+                mesh=None, rules=None, q_offset=0):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = self._embed_inputs(params, tokens, extra_embeds, cdt)
+        if mesh is not None:
+            from repro.distributed.sharding import shard_activation
+            x = shard_activation(x, ("batch", "seq", "embed"), rules, mesh)
+        embed0 = x if cfg.family == "hybrid" else None
+        step = make_block_step(cfg, mode, mesh, rules,
+                               shared_params=params.get("shared"),
+                               embed0=embed0)
+
+        def body(carry, sp_and_idx):
+            sp, idx = sp_and_idx
+            carry, _, aux = step(carry, sp, idx, None)
+            return carry, aux
+
+        if cfg.remat != "none" and mode == "train":
+            policy = {"dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                      "dots_all": jax.checkpoint_policies.dots_saveable,
+                      "full": None}[cfg.remat]
+            body = jax.checkpoint(body, policy=policy)
+
+        _, n_steps = _pattern(cfg)
+        idxs = jnp.arange(n_steps)
+        carry = (x, q_offset)
+        if cfg.scan_layers:
+            carry, auxs = jax.lax.scan(body, carry, (params["blocks"], idxs))
+            aux = auxs.sum()
+        else:
+            aux = jnp.float32(0)
+            for i in range(n_steps):
+                sp = jax.tree.map(lambda a: a[i], params["blocks"])
+                carry, a = body(carry, (sp, i))
+                aux = aux + a
+        x = carry[0]
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"]["embedding"] if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = L.unembed_logits(head, x, cfg.vocab, cfg.final_softcap)
+        return logits, aux
+
+    def loss(self, params, batch, *, mesh=None, rules=None):
+        """batch: tokens (B,S) int32, labels (B,S) int32, mask optional,
+        extra_embeds optional (VLM prefix)."""
+        logits, aux = self.forward(
+            params, batch["tokens"], extra_embeds=batch.get("extra_embeds"),
+            mode="train", mesh=mesh, rules=rules)
+        if batch.get("extra_embeds") is not None:
+            logits = logits[:, -batch["tokens"].shape[1]:]
+        ce = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    # ---- prefill: forward pass that also returns a ready decode cache
+    def prefill(self, params, tokens, *, max_len=None, extra_embeds=None,
+                mesh=None, rules=None):
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = self._embed_inputs(params, tokens, extra_embeds, cdt)
+        S = x.shape[1]
+        B = x.shape[0]
+        max_len = max_len or S
+        step = make_block_step(cfg, "prefill", mesh, rules,
+                               shared_params=params.get("shared"),
+                               embed0=x if cfg.family == "hybrid" else None)
+        _, n_steps = _pattern(cfg)
+
+        def body(carry, sp_and_idx):
+            sp, idx = sp_and_idx
+            carry, new_c, _ = step(carry, sp, idx, None)
+            return carry, new_c
+
+        carry = (x, 0)
+        if cfg.scan_layers:
+            carry, raw = jax.lax.scan(body, carry,
+                                      (params["blocks"], jnp.arange(n_steps)))
+        else:
+            rs = []
+            for i in range(n_steps):
+                sp = jax.tree.map(lambda a: a[i], params["blocks"])
+                carry, rc = body(carry, (sp, i))
+                rs.append(rc)
+            raw = jax.tree.map(lambda *xs: jnp.stack(xs), *rs)
+
+        cache = _merge_prefill_cache(cfg, B, S, max_len, raw)
+        x = L.rmsnorm(params["final_norm"], carry[0], cfg.norm_eps)
+        head = (params["embed"]["embedding"] if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = L.unembed_logits(head, x[:, -1:], cfg.vocab, cfg.final_softcap)
+        return logits, cache
+
+    # ---- decode
+    def decode_step(self, params, cache, tokens, *, mesh=None, rules=None):
+        """tokens (B, 1) -> logits (B, 1, V); cache updated in place."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = self._embed_inputs(params, tokens, None, cdt)
+        step = make_block_step(cfg, "decode", mesh, rules,
+                               shared_params=params.get("shared"),
+                               embed0=x if cfg.family == "hybrid" else None)
+        _, n_steps = _pattern(cfg)
+
+        def body(carry, inp):
+            sp, idx, csl = inp
+            carry, new_c, _ = step(carry, sp, idx, csl)
+            return carry, new_c
+
+        carry = (x, jnp.int32(0))
+        if cfg.scan_layers:
+            carry, new_cache = jax.lax.scan(
+                body, carry, (params["blocks"], jnp.arange(n_steps), cache))
+        else:
+            ncs = []
+            for i in range(n_steps):
+                sp = jax.tree.map(lambda a: a[i], params["blocks"])
+                csl = jax.tree.map(lambda a: a[i], cache)
+                carry, nc = body(carry, (sp, i, csl))
+                ncs.append(nc)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        x = L.rmsnorm(params["final_norm"], carry[0], cfg.norm_eps)
+        head = (params["embed"]["embedding"] if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = L.unembed_logits(head, x, cfg.vocab, cfg.final_softcap)
+        return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.serving.engine import DecodeEngine
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.fleet import ServingFleet, FleetConfig

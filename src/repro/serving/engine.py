@@ -1,0 +1,115 @@
+"""Batched decode engine with slot-based continuous batching.
+
+One engine instance == one model replica (a model-axis mesh slice in
+production).  The KV cache holds ``slots`` independent sequences with
+per-slot lengths; requests are prefilled row-by-row and scattered into free
+slots, decode steps advance every active slot at once, and finished slots
+are recycled without stalling the rest of the batch — vLLM-style continuous
+batching on a static JAX buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import build_model
+from repro.models.transformer import init_decode_cache
+
+
+@dataclasses.dataclass
+class SlotState:
+    request_id: int = -1
+    remaining: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def active(self) -> bool:
+        return self.request_id >= 0
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
+                 max_len: int = 512, mesh=None, rules=None, temperature=0.0,
+                 seed: int = 0):
+        assert cfg.family != "encdec", "use EncDecEngine for enc-dec models"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.mesh, self.rules = mesh, rules
+        self.model = build_model(cfg)
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self.cache = init_decode_cache(cfg, slots, max_len)
+        self.slot_state = [SlotState() for _ in range(slots)]
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, t, mesh=mesh,
+                                                   rules=rules))
+        self._prefill = jax.jit(
+            lambda p, t: self.model.prefill(p, t, max_len=max_len,
+                                            mesh=mesh, rules=rules))
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------ slots ----
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slot_state) if not s.active]
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_slots()) / self.slots
+
+    def insert(self, request_id: int, prompt: np.ndarray, max_new: int) -> int:
+        """Prefill a prompt and scatter its cache into a free slot."""
+        free = self.free_slots()
+        assert free, "no free slot"
+        slot = free[0]
+        logits, row_cache = self._prefill(
+            self.params, jnp.asarray(prompt, jnp.int32)[None])
+        # scatter row 0 of the prefilled cache into `slot` of the live cache
+        def put(full, new):
+            if full.ndim == new.ndim:
+                return jax.lax.dynamic_update_index_in_dim(
+                    full, new[:, 0].astype(full.dtype), slot, 1)
+            return full
+        self.cache = jax.tree.map(put, self.cache, row_cache)
+        first = self._select_token(logits[:, -1])[0]
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        st = self.slot_state[slot]
+        st.request_id = request_id
+        st.remaining = max_new
+        st.generated = [int(first)]
+        return slot
+
+    def _select_token(self, logits):
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        g = -np.log(-np.log(self.rng.uniform(size=logits.shape)))
+        z = np.asarray(logits, np.float32) / self.temperature + g
+        return z.argmax(-1)
+
+    # ------------------------------------------------------------- step ----
+    def step(self) -> list[tuple[int, list[int]]]:
+        """One decode step for all active slots; returns finished requests
+        as (request_id, generated_tokens)."""
+        if all(not s.active for s in self.slot_state):
+            return []
+        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        nxt = self._select_token(logits[:, 0])
+        self.tokens = jnp.asarray(nxt, jnp.int32)[:, None]
+        self.steps += 1
+        finished = []
+        for i, st in enumerate(self.slot_state):
+            if not st.active:
+                continue
+            st.generated.append(int(nxt[i]))
+            st.remaining -= 1
+            self.tokens_out += 1
+            if st.remaining <= 0:
+                finished.append((st.request_id, st.generated))
+                self.slot_state[i] = SlotState()
+        return finished

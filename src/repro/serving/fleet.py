@@ -1,0 +1,242 @@
+"""Beyond-paper integration: the PPA proactively autoscales TPU decode
+replica groups (DESIGN.md §2's mapping of "pods" onto mesh slices).
+
+Discrete-event fleet model: each replica = one model-parallel mesh slice
+(``chips_per_replica``) running a slot-based decode engine; a request's
+service time = prefill + n_tokens / per-slot decode rate.  Replica spawn
+costs checkpoint-load + compile time (the TPU analogue of pod startup — this
+is what proactive scaling hides).  Node failures kill replicas and requeue
+their in-flight requests; stragglers run at a speed factor and their
+deadline-missing requests are re-dispatched (straggler mitigation).
+
+The PPA consumes [slot-utilisation, hbm, queue, tokens, request-rate] and
+bounds replicas by the chip budget — Algorithm 1's "max_replicas limited by
+system resources" with chips as the resource.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict, deque
+
+import numpy as np
+
+from repro.core.metrics import Snapshot
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    total_chips: int = 256
+    chips_per_replica: int = 16       # one model-axis slice
+    slots_per_replica: int = 8
+    decode_tok_s: float = 30.0        # per-slot decode rate
+    prefill_s: float = 0.4
+    spawn_s: float = 45.0             # ckpt load + warmup
+    control_interval_s: float = 15.0
+    deadline_factor: float = 3.0      # straggler re-dispatch threshold
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Replica:
+    rid: int
+    ready_at: float
+    speed: float = 1.0
+    dead: bool = False
+    draining: bool = False
+    slot_free_at: list = None
+    busy: dict = None
+
+    def __post_init__(self):
+        self.slot_free_at = self.slot_free_at or []
+        self.busy = self.busy or defaultdict(float)
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    arrival: float
+    n_tokens: int
+    completion: float = math.nan
+    replica: int = -1
+    redispatched: bool = False
+
+    @property
+    def response(self) -> float:
+        return self.completion - self.arrival
+
+
+class ServingFleet:
+    def __init__(self, cfg: FleetConfig | None = None):
+        self.cfg = cfg or FleetConfig()
+        self.replicas: list[_Replica] = []
+        self._next_rid = 0
+        self.completed: list[ServeRequest] = []
+        self._win_reqs = 0
+        self.samples: list[tuple[float, np.ndarray]] = []
+        self.replica_log: list[tuple[float, int]] = []
+        self._events: list[tuple[float, str, dict]] = []
+        self.rng = np.random.default_rng(self.cfg.seed)
+
+    # ----------------------------------------------------------- scaling ---
+    @property
+    def max_replicas(self) -> int:
+        return self.cfg.total_chips // self.cfg.chips_per_replica
+
+    def live_replicas(self, t: float | None = None):
+        rs = [r for r in self.replicas if not r.dead and not r.draining]
+        if t is not None:
+            rs = [r for r in rs if r.ready_at <= t]
+        return rs
+
+    def scale_to(self, n: int, t: float):
+        n = min(n, self.max_replicas)
+        cur = [r for r in self.replicas if not r.dead and not r.draining]
+        if len(cur) < n:
+            for _ in range(n - len(cur)):
+                r = _Replica(self._next_rid, ready_at=t + self.cfg.spawn_s,
+                             slot_free_at=[t] * self.cfg.slots_per_replica)
+                self._next_rid += 1
+                self.replicas.append(r)
+        elif len(cur) > n:
+            for r in sorted(cur, key=lambda r: -r.ready_at)[:len(cur) - n]:
+                r.draining = True
+
+    # -------------------------------------------------------- dispatching --
+    def dispatch(self, req: ServeRequest, t: float):
+        live = self.live_replicas() or [r for r in self.replicas
+                                        if not r.dead]
+        if not live:
+            self.scale_to(1, t)
+            live = [self.replicas[-1]]
+        # least-loaded slot across replicas
+        best, bi = None, -1
+        for r in live:
+            i = int(np.argmin(r.slot_free_at))
+            ready = max(r.slot_free_at[i], r.ready_at, t)
+            if best is None or ready < best[1]:
+                best, bi = (r, ready), i
+        r, start = best
+        service = (self.cfg.prefill_s
+                   + req.n_tokens / (self.cfg.decode_tok_s * r.speed))
+        req.completion = start + service
+        req.replica = r.rid
+        r.slot_free_at[bi] = req.completion
+        w = self.cfg.control_interval_s
+        i0, i1 = int(start // w), int(req.completion // w)
+        for i in range(i0, i1 + 1):
+            lo, hi = max(start, i * w), min(req.completion, (i + 1) * w)
+            if hi > lo:
+                r.busy[i] += hi - lo
+        self.completed.append(req)
+        self._win_reqs += 1
+        # straggler mitigation: re-dispatch if the deadline is blown
+        nominal = (self.cfg.prefill_s
+                   + req.n_tokens / self.cfg.decode_tok_s)
+        if (not req.redispatched
+                and req.completion - t > self.cfg.deadline_factor * nominal):
+            healthy = [x for x in self.live_replicas(t)
+                       if x.speed >= 0.9 and x.rid != r.rid]
+            if healthy:
+                self.completed.pop()
+                req.redispatched = True
+                h = healthy[int(np.argmin(
+                    [min(x.slot_free_at) for x in healthy]))]
+                j = int(np.argmin(h.slot_free_at))
+                start2 = max(h.slot_free_at[j], h.ready_at, t)
+                req.completion = start2 + nominal
+                h.slot_free_at[j] = req.completion
+                self.completed.append(req)
+
+    # ---------------------------------------------------------- failures ---
+    def inject_failure(self, t: float, rid: int):
+        self._events.append((t, "fail", {"rid": rid}))
+
+    def inject_straggler(self, t: float, rid: int, speed: float,
+                         duration: float):
+        self._events.append((t, "slow", {"rid": rid, "speed": speed}))
+        self._events.append((t + duration, "slow", {"rid": rid, "speed": 1.0}))
+
+    def _apply_events(self, t: float):
+        fired = [e for e in self._events if e[0] <= t]
+        self._events = [e for e in self._events if e[0] > t]
+        requeue = []
+        for _, kind, arg in fired:
+            for r in self.replicas:
+                if r.rid == arg["rid"]:
+                    if kind == "fail" and not r.dead:
+                        r.dead = True
+                        for req in self.completed:
+                            if (req.replica == r.rid and req.completion > t
+                                    and not req.redispatched):
+                                requeue.append(req)
+                    elif kind == "slow":
+                        r.speed = arg["speed"]
+        for req in requeue:
+            self.completed.remove(req)
+            req.redispatched = True
+            self.dispatch(req, t)
+
+    # ------------------------------------------------------------ metrics --
+    def sample(self, t: float) -> Snapshot:
+        w = self.cfg.control_interval_s
+        win = int((t - 1e-9) // w)
+        live = [r for r in self.replicas if not r.dead]
+        cap = max(sum(self.cfg.slots_per_replica for r in live
+                      if r.ready_at <= t), 1)
+        busy = sum(r.busy.get(win, 0.0) for r in live) / w
+        util = 100.0 * busy / cap
+        rate = self._win_reqs / w
+        self._win_reqs = 0
+        vals = np.array([util * cap, 0.0, busy, rate * 10, rate])
+        snap = Snapshot(t, vals)
+        self.samples.append((t, snap.values))
+        return snap
+
+    # --------------------------------------------------------------- run ---
+    def run(self, requests: list[tuple[float, int]], scaler, kind: str,
+            t_end: float, min_replicas: int = 1):
+        """requests: sorted (arrival_t, n_tokens).  scaler: PPA or HPA."""
+        self.scale_to(min_replicas, 0.0)
+        for r in self.replicas:
+            r.ready_at = 0.0
+        w = self.cfg.control_interval_s
+        ticks = np.arange(w, t_end, w)
+        ri = 0
+        for tick in ticks:
+            self._apply_events(tick)
+            while ri < len(requests) and requests[ri][0] <= tick:
+                at, ntok = requests[ri]
+                self.dispatch(ServeRequest(at, ntok), at)
+                ri += 1
+            snap = self.sample(tick)
+            cur = len(self.live_replicas(tick))
+            if kind == "ppa":
+                scaler.observe(snap)
+                res = scaler.control_step(tick, self.max_replicas, cur)
+                desired = max(res.replicas, min_replicas)
+                scaler.maybe_update(tick)
+            else:
+                recent = np.stack([v for _, v in self.samples][-4:])
+                desired = scaler.decide(tick, recent, self.max_replicas, cur)
+            self.scale_to(max(desired, min_replicas), tick)
+            self.replica_log.append((tick, desired))
+        while ri < len(requests) and requests[ri][0] <= t_end:
+            at, ntok = requests[ri]
+            self.dispatch(ServeRequest(at, ntok), at)
+            ri += 1
+        return self
+
+    def response_times(self) -> np.ndarray:
+        return np.asarray([r.response for r in self.completed
+                           if math.isfinite(r.completion)])
+
+    def idle_fraction(self) -> float:
+        w = self.cfg.control_interval_s
+        total_busy, total_cap = 0.0, 0.0
+        for t, _ in self.samples:
+            win = int((t - 1e-9) // w)
+            live = [r for r in self.replicas if not r.dead
+                    and r.ready_at <= t]
+            total_cap += len(live) * self.cfg.slots_per_replica * w
+            total_busy += sum(r.busy.get(win, 0.0) for r in live)
+        return 1.0 - total_busy / max(total_cap, 1e-9)

@@ -1,0 +1,83 @@
+"""AdamW + schedules as pure pytree functions (optax is not available offline).
+
+Moments dtype is configurable (``cfg.opt_moments_dtype='bfloat16'`` halves
+optimizer HBM for llama3-405b).  Global-norm clipping and decoupled weight
+decay match the standard AdamW definition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    moments_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(c: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(c.warmup_steps, 1)
+    prog = jnp.clip((step - c.warmup_steps) /
+                    jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = c.min_lr_ratio + (1 - c.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def adamw_init(params, c: AdamWConfig):
+    dt = jnp.dtype(c.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, state, params, c: AdamWConfig):
+    step = state["step"] + 1
+    lr = schedule(c, step)
+    gnorm = global_norm(grads)
+    if c.clip_norm is not None:
+        scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1t = 1 - c.b1 ** step.astype(jnp.float32)
+    b2t = 1 - c.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(c.moments_dtype)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = c.b1 * mu.astype(jnp.float32) + (1 - c.b1) * g32
+        nu32 = c.b2 * nu.astype(jnp.float32) + (1 - c.b2) * g32 * g32
+        mhat = mu32 / b1t
+        nhat = nu32 / b2t
+        delta = mhat / (jnp.sqrt(nhat) + c.eps) + c.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, {
+        "lr": lr, "grad_norm": gnorm}

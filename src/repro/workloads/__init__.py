@@ -1,0 +1,2 @@
+from repro.workloads.random_access import random_access
+from repro.workloads.nasa import nasa_trace, nasa_requests

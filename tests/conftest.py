@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device.
+# Multi-device behaviour (dry-run, elastic) is tested via subprocesses.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

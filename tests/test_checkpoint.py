@@ -1,0 +1,65 @@
+"""Checkpoint atomicity, roundtrip fidelity, garbage collection, async."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                              save_checkpoint)
+
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+            "opt": {"mu": jnp.ones((5,), jnp.float32),
+                    "step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 10, t)
+    restored, step = load_checkpoint(tmp_path, t)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, t, keep_last=3)
+    assert latest_step(tmp_path) == 5
+    kept = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                  if p.name.startswith("step_"))
+    assert kept == [3, 4, 5]
+
+
+def test_uncommitted_ignored(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 2, t)
+    (tmp_path / "step_2" / "COMMITTED").unlink()   # simulate torn write
+    assert latest_step(tmp_path) == 1
+    _, step = load_checkpoint(tmp_path, t)
+    assert step == 1
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, 1, _tree())
+    bad = {"only": jnp.zeros((2,))}
+    try:
+        load_checkpoint(tmp_path, bad)
+        assert False, "should have raised"
+    except AssertionError:
+        pass
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    t = _tree()
+    ck.save(42, t)
+    ck.wait()
+    restored, step = load_checkpoint(tmp_path, t)
+    assert step == 42

@@ -1,0 +1,93 @@
+"""Cluster-simulator invariants: task conservation, queueing discipline,
+capacity limits, failure recovery and straggler behaviour."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import AutoscalerBinding, ClusterSim, SimConfig, paper_topology
+from repro.core.hpa import HPA
+from repro.workloads import random_access
+
+
+def _run(tasks, t_end, cfg=None, sim=None, min_replicas=2):
+    sim = sim or ClusterSim(paper_topology(), cfg or SimConfig(seed=0))
+    binds = [AutoscalerBinding(z, HPA(350.0, min_replicas=min_replicas),
+                               "hpa", min_replicas)
+             for z in ("edge-0", "edge-1", "cloud")]
+    sim.run(tasks, binds, t_end, initial_replicas=min_replicas)
+    return sim
+
+
+def test_task_conservation():
+    T = 30 * 60
+    tasks = random_access(T, seed=5)
+    sim = _run(tasks, T)
+    dispatched = [t for t in sim.completed if math.isfinite(t.completion)]
+    n_before_end = sum(1 for t in tasks if t[0] <= T - 15)
+    assert len(dispatched) >= 0.98 * n_before_end
+
+
+def test_response_at_least_service():
+    T = 20 * 60
+    sim = _run(random_access(T, seed=6), T)
+    for t in sim.completed[:2000]:
+        assert t.response >= t.service_s - 1e-9
+
+
+def test_fifo_per_pod():
+    T = 20 * 60
+    sim = _run(random_access(T, seed=7), T)
+    by_pod = {}
+    for t in sim.completed:
+        by_pod.setdefault(t.pod_id, []).append(t)
+    for pod, ts in by_pod.items():
+        ts = sorted(ts, key=lambda x: x.start)
+        for a, b in zip(ts, ts[1:]):
+            assert b.start >= a.completion - 1e-9  # single-server FIFO
+
+
+def test_capacity_limits_respected():
+    topo = paper_topology()
+    sim = ClusterSim(topo, SimConfig(seed=0))
+    max_rep = topo.max_replicas("edge-0", 500)
+    assert max_rep == 8                       # 2 nodes x 2000m / 500m
+    sim.scale_to("edge-0", 50, 0.0)
+    assert len(sim.zone_pods("edge-0")) <= max_rep
+    for n in topo.nodes:
+        assert n.alloc_m <= n.cpu_m
+
+
+def test_node_failure_redispatches_tasks():
+    T = 10 * 60
+    tasks = random_access(T, seed=8)
+    sim = ClusterSim(paper_topology(), SimConfig(seed=0))
+    sim.inject_node_failure(120.0, "edge0-0", recover_after=240.0)
+    sim = _run(tasks, T, sim=sim)
+    n_redis = sum(1 for t in sim.completed if t.redispatched)
+    finite = all(math.isfinite(t.completion) for t in sim.completed)
+    assert finite
+    failed_node = next(n for n in sim.topo.nodes if n.name == "edge0-0")
+    assert not failed_node.failed            # recovered
+
+
+def test_straggler_slows_node():
+    cfg = SimConfig(seed=0)
+    sim = ClusterSim(paper_topology(), cfg)
+    sim.inject_straggler(0.0, "edge0-0", factor=0.25, duration=600.0)
+    sim._apply_events(1.0)
+    node = next(n for n in sim.topo.nodes if n.name == "edge0-0")
+    assert node.speed_factor == 0.25
+    svc = sim._service_time("sort", node)
+    assert svc > 2.5 * cfg.sort_service_s    # ~4x slower (mod jitter)
+    sim._apply_events(601.0)
+    assert node.speed_factor == 1.0
+
+
+def test_rir_definition():
+    """RIR_t = CPU_idle / CPU_requested in [0, 1] (paper Eq. 4)."""
+    T = 20 * 60
+    sim = _run(random_access(T, seed=9), T)
+    for z in ("edge-0", "cloud"):
+        vals = [v for _, v in sim.rir_log[z]]
+        assert vals and all(0.0 <= v <= 1.0 for v in vals)

@@ -1,0 +1,89 @@
+"""Property tests for Algorithm 1 (Evaluator) — the paper's five guarantees:
+proactive, limitation-aware, robust, model-agnostic, confidence-considered."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.evaluator import Evaluator
+from repro.core.forecaster import Forecaster
+from repro.core.policies import ThresholdPolicy
+
+
+class FixedModel(Forecaster):
+    window = 1
+
+    def __init__(self, value, std=None, bayes=False, broken=False,
+                 invalid=False):
+        self.value, self.std = value, std
+        self.is_bayesian = bayes
+        self.broken, self.invalid = broken, invalid
+
+    def valid(self):
+        return not self.invalid
+
+    def predict(self, recent):
+        if self.broken:
+            raise IOError("model file corrupted")
+        v = np.full(5, self.value)
+        s = None if self.std is None else np.full(5, self.std)
+        return v, s
+
+
+metrics_rows = st.lists(
+    st.lists(st.floats(0, 1e4, allow_nan=False), min_size=5, max_size=5),
+    min_size=2, max_size=6)
+
+
+@given(metrics_rows, st.floats(1.0, 1000.0), st.integers(1, 64),
+       st.floats(0, 1e4))
+@settings(max_examples=60, deadline=None)
+def test_limitation_aware_never_exceeds_max(rows, thr, max_rep, pred):
+    ev = Evaluator(ThresholdPolicy(thr), key_metric_idx=0)
+    res = ev.evaluate(np.asarray(rows), FixedModel(pred), max_rep, 1)
+    assert 1 <= res.replicas <= max_rep
+
+
+@given(metrics_rows, st.floats(1.0, 1000.0))
+@settings(max_examples=30, deadline=None)
+def test_robust_fallback_on_broken_model(rows, thr):
+    rows = np.asarray(rows)
+    ev = Evaluator(ThresholdPolicy(thr), key_metric_idx=0)
+    res_broken = ev.evaluate(rows, FixedModel(0, broken=True), 1000, 1)
+    res_none = ev.evaluate(rows, None, 1000, 1)
+    res_invalid = ev.evaluate(rows, FixedModel(0, invalid=True), 1000, 1)
+    assert not res_broken.predicted and not res_invalid.predicted
+    assert res_broken.replicas == res_none.replicas == res_invalid.replicas
+    assert res_broken.key_metric == rows[-1, 0]
+
+
+def test_proactive_uses_prediction():
+    recent = np.array([[100.0, 0, 0, 0, 0], [100.0, 0, 0, 0, 0]])
+    ev = Evaluator(ThresholdPolicy(100.0), key_metric_idx=0)
+    res = ev.evaluate(recent, FixedModel(900.0), 100, 1)
+    assert res.predicted and res.replicas == 9
+
+
+@given(st.floats(0.0, 100.0), st.floats(0.1, 50.0))
+@settings(max_examples=40, deadline=None)
+def test_confidence_considered(conf_threshold, std):
+    recent = np.array([[100.0, 0, 0, 0, 0], [100.0, 0, 0, 0, 0]])
+    ev = Evaluator(ThresholdPolicy(100.0), 0,
+                   confidence_threshold=conf_threshold)
+    res = ev.evaluate(recent, FixedModel(900.0, std=std, bayes=True), 100, 1)
+    if std <= conf_threshold:          # confident -> proactive
+        assert res.replicas == 9 and res.confidence_ok
+    else:                              # uncertain -> reactive on current
+        assert res.replicas == 1 and not res.confidence_ok
+
+
+def test_model_agnostic_duck_typing():
+    """Anything with the protocol works (paper's helper-interface claim)."""
+    class Weird:
+        window = 1
+        is_bayesian = False
+        def valid(self): return True
+        def predict(self, recent): return np.full(5, 350.0), None
+    recent = np.array([[1.0, 0, 0, 0, 0], [1.0, 0, 0, 0, 0]])
+    ev = Evaluator(ThresholdPolicy(100.0), 0)
+    assert ev.evaluate(recent, Weird(), 100, 1).replicas == 4

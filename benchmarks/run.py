@@ -7,6 +7,7 @@
 # Fig 9/10 -> bench_key_metric    (CPU vs request-rate key metric)
 # Fig 11-14 -> bench_evaluation   (48h NASA: PPA vs HPA)
 # beyond-paper -> bench_serving   (PPA-scaled TPU decode fleet)
+#              -> bench_control_plane (batched PPA + sim-core parity)
 #              -> bench_kernels   (Pallas kernel us/call)
 #              -> roofline        (per-cell terms from the dry-run artifacts)
 import argparse
@@ -21,9 +22,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_evaluation, bench_forecast, bench_kernels,
-                            bench_key_metric, bench_serving,
-                            bench_update_policy, roofline)
+    from benchmarks import (bench_control_plane, bench_evaluation,
+                            bench_forecast, bench_kernels, bench_key_metric,
+                            bench_serving, bench_update_policy, roofline)
 
     t_min = 60 if args.quick else 200
     days = 1 if args.quick else 2
@@ -33,6 +34,7 @@ def main() -> None:
         ("key_metric", lambda: bench_key_metric.run(t_min)),
         ("evaluation", lambda: bench_evaluation.run(days)),
         ("serving", lambda: bench_serving.run(1800.0 if args.quick else 3600.0)),
+        ("control_plane", lambda: bench_control_plane.run(args.quick)),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.main),
     ]

@@ -1,37 +1,22 @@
-"""Discrete-event cluster simulator — the paper's Kubernetes testbed in-process.
+"""FROZEN seed-engine reference — the pre-refactor O(P)-scan ClusterSim,
+kept verbatim so tests/benchmarks can assert that the heap-based sim core
+(src/repro/sim/) reproduces the seed's seeded response-time distributions
+exactly (tests/test_control_plane.py, benchmarks/bench_control_plane.py).
 
-Exact queueing model: every worker pod is a FIFO server with its own
-``free_at`` horizon; a task arriving at ``t`` is dispatched to the
-least-backlogged ready pod of its zone, starts at ``max(t, free_at)`` and
-completes after its service time (no time-stepping — response times are
-exact).  Pod startup latency is what makes *proactive* scaling matter: a
-reactive scaler only reacts after queues build, and new capacity arrives
-``startup_s`` later (paper §2.2).
-
-Implements: scheduling with node capacity limits (Table 2), graceful drain on
-scale-down, node failure + recovery with task re-dispatch, straggler nodes
-(speed_factor), per-zone windowed metric exporters ([CPU, RAM, NetIn, NetOut,
-RequestRate] — the Prometheus adapter of Fig. 3), and autoscaler bindings
-driving either the PPA or the HPA baseline.
-
-Since the sim-core refactor (DESIGN.md §3) this class is a thin domain
-adapter over ``repro.sim.SimCore``: pod selection is heap-based (O(log P)
-instead of the seed's O(P) scan, with identical tie-breaking), injected
-events live on a heap, and the completion log is append-only.  Seeded runs
-reproduce the seed engine's response-time distributions exactly
-(tests/test_control_plane.py).
+Do not modify except to track upstream API changes of its imports; it is a
+parity oracle, not production code.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from collections import defaultdict
+from typing import Callable
 
 import numpy as np
 
 from repro.cluster.topology import Node, Topology, paper_topology
 from repro.core.metrics import Snapshot
-from repro.sim import SimCore
 
 
 @dataclasses.dataclass
@@ -95,14 +80,15 @@ class ClusterSim:
         self.topo = topo or paper_topology()
         self.cfg = cfg or SimConfig()
         self.rng = np.random.default_rng(self.cfg.seed)
-        self.core = SimCore(self.cfg.control_interval_s, two_phase=True,
-                            ma_windows=4)
-        self.pods: list[PodState] = self.core.servers
+        self.pods: list[PodState] = []
         self._next_pid = 0
         self.completed: list[Task] = []
-        self.samples = self.core.exporter.samples
+        self.samples: dict[str, list[tuple[float, np.ndarray]]] = defaultdict(list)
         self.replica_log: dict[str, list[tuple[float, int]]] = defaultdict(list)
         self.rir_log: dict[str, list[tuple[float, float]]] = defaultdict(list)
+        self._win_tasks: dict[str, int] = defaultdict(int)
+        self._raw: dict[str, list[np.ndarray]] = defaultdict(list)
+        self._events: list[tuple[float, str, dict]] = []   # failures etc.
 
     # ------------------------------------------------------------ pods -----
     def _schedule_pod(self, zone: str, t: float) -> PodState | None:
@@ -117,23 +103,23 @@ class ClusterSim:
                        created=t, ready_at=t + self.cfg.startup_s,
                        free_at=t + self.cfg.startup_s)
         self._next_pid += 1
-        self.core.add_server(pod, zone, t, key=pod.free_at,
-                             ready_at=pod.ready_at)
+        self.pods.append(pod)
         return pod
 
     def _drain_pod(self, pod: PodState):
         pod.draining = True
         pod.node.alloc_m -= pod.cpu_m
-        self.core.pool(pod.zone).invalidate(pod)
 
     def zone_pods(self, zone: str, t: float | None = None):
-        ps = self.core.live(zone)
+        ps = [p for p in self.pods if p.zone == zone and not p.dead
+              and not p.draining]
         if t is not None:
             ps = [p for p in ps if p.available(t)]
         return ps
 
     def scale_to(self, zone: str, n: int, t: float):
-        cur = self.core.live(zone)
+        cur = [p for p in self.pods if p.zone == zone and not p.dead
+               and not p.draining]
         if len(cur) < n:
             for _ in range(n - len(cur)):
                 if self._schedule_pod(zone, t) is None:
@@ -143,16 +129,6 @@ class ClusterSim:
             for pod in sorted(cur, key=lambda p: -p.created)[:len(cur) - n]:
                 self._drain_pod(pod)
 
-    def make_ready_now(self, zone: str | None = None, t: float = 0.0):
-        """Mark current pods ready at ``t`` (pre-warmed initial capacity —
-        the paper's runs start with warm pods, startup latency applies only
-        to scale-ups)."""
-        pods = self.pods if zone is None else self.core.by_group[zone]
-        for p in pods:
-            if not p.dead and not p.draining:
-                p.ready_at = p.free_at = t
-                self.core.pool(p.zone).reset(p, t)
-
     # ------------------------------------------------------- dispatching ---
     def _service_time(self, kind: str, node: Node) -> float:
         base = (self.cfg.sort_service_s if kind == "sort"
@@ -161,65 +137,71 @@ class ClusterSim:
         return base * jit / max(node.speed_factor, 1e-3)
 
     def dispatch(self, task: Task, t: float):
-        pod = self.core.pool(task.zone).select(t)
-        if pod is None:
-            # zone cold: best effort — spin one up (Kubernetes would have
-            # min_replicas >= 1, so this is a safety net)
-            pod = self._schedule_pod(task.zone, t)
-            if pod is None:
-                task.completion = t + 60.0  # dropped/timeout sentinel
-                self.core.log_completion(self.completed, task)
-                return
+        pods = self.zone_pods(task.zone, t)
+        if not pods:
+            # no ready pod: queue on the earliest-ready non-draining pod
+            pods = [p for p in self.pods if p.zone == task.zone and not p.dead
+                    and not p.draining]
+            if not pods:
+                # zone cold: best effort — spin one up (Kubernetes would have
+                # min_replicas >= 1, so this is a safety net)
+                pod = self._schedule_pod(task.zone, t)
+                if pod is None:
+                    task.completion = t + 60.0  # dropped/timeout sentinel
+                    self.completed.append(task)
+                    return
+                pods = [pod]
+        pod = min(pods, key=lambda p: max(p.free_at, t))
         service = self._service_time(task.kind, pod.node)
         start = max(t, pod.free_at, pod.ready_at)
         task.start, task.service_s = start, service
         task.completion = start + service
         task.pod_id = pod.pid
         pod.free_at = task.completion
-        self.core.account_busy(pod.busy, start, task.completion)
+        self._account_busy(pod, start, task.completion)
         pod.queue.append(task)
-        self.core.pool(task.zone).update(pod, pod.free_at)
-        self.core.log_completion(self.completed, task)
-        self.core.exporter.count(task.zone)
+        self.completed.append(task)
+        self._win_tasks[task.zone] += 1
+
+    def _account_busy(self, pod: PodState, start: float, end: float):
+        w = self.cfg.control_interval_s
+        i0, i1 = int(start // w), int(end // w)
+        for i in range(i0, i1 + 1):
+            lo, hi = max(start, i * w), min(end, (i + 1) * w)
+            if hi > lo:
+                pod.busy[i] += hi - lo
 
     # ------------------------------------------------------ failures etc ---
     def inject_node_failure(self, t: float, node_name: str,
                             recover_after: float | None = None):
-        self.core.events.push(t, "fail", node=node_name)
+        self._events.append((t, "fail", {"node": node_name}))
         if recover_after is not None:
-            self.core.events.push(t + recover_after, "recover", node=node_name)
+            self._events.append((t + recover_after, "recover",
+                                 {"node": node_name}))
 
     def inject_straggler(self, t: float, node_name: str, factor: float,
                          duration: float):
-        self.core.events.push(t, "slow", node=node_name, factor=factor)
-        self.core.events.push(t + duration, "slow", node=node_name, factor=1.0)
+        self._events.append((t, "slow", {"node": node_name, "factor": factor}))
+        self._events.append((t + duration, "slow",
+                             {"node": node_name, "factor": 1.0}))
 
     def _apply_events(self, t: float):
-        for _, kind, arg in self.core.events.pop_due(t):
+        fired = [e for e in self._events if e[0] <= t]
+        self._events = [e for e in self._events if e[0] > t]
+        for _, kind, arg in fired:
             node = next(n for n in self.topo.nodes if n.name == arg["node"])
             if kind == "fail":
                 node.failed = True
-                # Mark every pod on the node dead *first*: the seed engine
-                # re-dispatched each dead pod's tasks while sibling pods on
-                # the same failed node were still schedulable, so orphans
-                # could land on a pod about to die in the same event.  It
-                # also zeroed node.alloc_m inside the per-pod loop and
-                # mutated structures mid-iteration.
-                victims = [p for p in self.pods if p.node is node
-                           and not p.dead]
-                orphans: list[Task] = []
-                for p in victims:
-                    p.dead = True
-                    if not p.draining:
-                        node.alloc_m -= p.cpu_m
-                    self.core.pool(p.zone).invalidate(p)
-                    orphans.extend(task for task in p.queue
-                                   if task.completion > t
-                                   and not task.redispatched)
-                    p.queue.clear()
-                for task in orphans:
-                    task.redispatched = True
-                    self.dispatch(task, t)
+                for p in self.pods:
+                    if p.node is node and not p.dead:
+                        p.dead = True
+                        node.alloc_m = 0
+                        # re-dispatch this pod's unfinished tasks
+                        for task in p.queue:
+                            if task.completion > t and not task.redispatched:
+                                self.completed.remove(task)
+                                task.redispatched = True
+                                self.dispatch(task, t)
             elif kind == "recover":
                 node.failed = False
             elif kind == "slow":
@@ -229,62 +211,45 @@ class ClusterSim:
     def sample_zone(self, zone: str, t: float) -> Snapshot:
         """Window [t-w, t) exporter readout -> [CPU, RAM, NetIn, NetOut, rate]."""
         w = self.cfg.control_interval_s
-        exporter = self.core.exporter
-        win = exporter.window_index(t)
-        pods = [p for p in self.core.by_group[zone] if not p.dead]
+        win = int((t - 1e-9) // w)
+        pods = [p for p in self.pods if p.zone == zone and not p.dead]
         cpu_used_m = sum(p.busy.get(win, 0.0) / w * p.cpu_m for p in pods)
         # container RSS ~ worker-pool base + task working set (load-coupled,
         # so the forecaster's RAM feature is comparable between the static
         # pretraining collection and the autoscaled run)
         busy_avg = cpu_used_m / max(self.cfg.pod_cpu_m, 1)
         ram = self.cfg.ram_per_pod_mb * busy_avg
-        n_req = exporter.take_count(zone)
+        n_req = self._win_tasks.get(zone, 0)
         rate = n_req / w
         net_in, net_out = n_req * 2.0, n_req * 1.0     # KB, synthetic
+        self._win_tasks[zone] = 0
         # RIR_t = CPU_idle / CPU_requested   (paper Eq. 4)
         requested = sum(p.cpu_m for p in pods if p.available(t))
         if requested > 0:
             rir = max(requested - cpu_used_m, 0.0) / requested
             self.rir_log[zone].append((t, rir))
-        for p in pods:
-            # bound per-pod inflight logs: finished tasks are only needed
-            # until their window closes (failure re-dispatch looks at
-            # unfinished tasks only)
-            if p.queue:
-                p.queue = [q for q in p.queue if q.completion > t]
         # Prometheus-faithful export: rate()/avg over a 1-minute window
         # (4 control windows), not the raw 15 s instantaneous value
         raw = np.array([cpu_used_m, ram, net_in, net_out, rate])
-        ma = exporter.push(zone, t, raw)
-        return Snapshot(t, ma)
+        self._raw[zone].append(raw)
+        ma = np.mean(self._raw[zone][-4:], axis=0)
+        snap = Snapshot(t, ma)
+        self.samples[zone].append((t, snap.values))
+        return snap
 
     # ------------------------------------------------------------- run -----
     def run(self, tasks: list[tuple[float, str, str]],
-            bindings, t_end: float, initial_replicas: int = 2):
+            bindings: list[AutoscalerBinding], t_end: float,
+            initial_replicas: int = 2):
         """tasks: sorted (arrival_t, kind, zone).  Runs arrivals + control
-        ticks in time order; returns self for chaining.
-
-        ``bindings`` is either a list of per-zone ``AutoscalerBinding`` (the
-        paper's one-loop-per-target layout) or a batched ``FleetController``
-        (core/controller.py) driving all its targets with a single forecast
-        dispatch per tick."""
-        if getattr(bindings, "is_batched", False):
-            controller = bindings
-            zone_min = {z: controller.min_replicas(z)
-                        for z in controller.target_names}
-            control_tick = self._batched_control(controller, zone_min)
-        else:
-            zone_min = {b.zone: b.min_replicas for b in bindings}
-            control_tick = self._per_zone_control(bindings)
-        for zone, min_rep in zone_min.items():
-            self.scale_to(zone, max(initial_replicas, min_rep), 0.0)
-            self.make_ready_now(zone)        # initial pods are ready at t=0
-        return self._drive(tasks, t_end, control_tick)
-
-    def _drive(self, tasks, t_end: float, control_tick):
-        """Shared time-stepping skeleton: events, arrivals, one control
-        callback per tick, trailing-arrival drain."""
+        ticks in time order; returns self for chaining."""
         cfg = self.cfg
+        for b in bindings:
+            self.scale_to(b.zone, max(initial_replicas, b.min_replicas), 0.0)
+            for p in self.pods:      # initial pods are ready at t=0
+                if p.zone == b.zone:
+                    p.ready_at = 0.0
+                    p.free_at = 0.0
         ticks = np.arange(cfg.control_interval_s, t_end,
                           cfg.control_interval_s)
         ti = 0
@@ -294,49 +259,25 @@ class ClusterSim:
                 at, kind, zone = tasks[ti]
                 self.dispatch(Task(at, kind, zone, 0.0), at)
                 ti += 1
-            control_tick(tick)
-        while ti < len(tasks) and tasks[ti][0] <= t_end:
-            at, kind, zone = tasks[ti]
-            self.dispatch(Task(at, kind, zone, 0.0), at)
-            ti += 1
-        return self
-
-    def _per_zone_control(self, bindings):
-        """The paper's layout: one scaler invocation per zone per tick."""
-        def control_tick(tick: float):
             for b in bindings:
                 snap = self.sample_zone(b.zone, tick)
                 cur = len(self.zone_pods(b.zone))
-                max_rep = self.topo.max_replicas(b.zone, self.cfg.pod_cpu_m)
+                max_rep = self.topo.max_replicas(b.zone, cfg.pod_cpu_m)
                 if b.kind == "ppa":
                     b.scaler.observe(snap)
                     res = b.scaler.control_step(tick, max_rep, cur)
                     desired = max(res.replicas, b.min_replicas)
                     b.scaler.maybe_update(tick)
                 else:
-                    recent = np.stack([v for _, v in
-                                       self.samples[b.zone]][-4:])
+                    recent = np.stack([v for _, v in self.samples[b.zone]][-4:])
                     desired = b.scaler.decide(tick, recent, max_rep, cur)
                 self.scale_to(b.zone, desired, tick)
                 self.replica_log[b.zone].append((tick, desired))
-        return control_tick
-
-    def _batched_control(self, controller, zone_min: dict):
-        """Batched control plane: sample all zones, then one
-        ``controller.control_step`` answers every target at once."""
-        def control_tick(tick: float):
-            cur, max_r = {}, {}
-            for z in zone_min:
-                controller.observe(z, self.sample_zone(z, tick))
-                cur[z] = len(self.zone_pods(z))
-                max_r[z] = self.topo.max_replicas(z, self.cfg.pod_cpu_m)
-            results = controller.control_step(tick, max_r, cur)
-            for z in zone_min:
-                desired = max(results[z].replicas, zone_min[z])
-                self.scale_to(z, desired, tick)
-                self.replica_log[z].append((tick, desired))
-            controller.maybe_update(tick)
-        return control_tick
+        while ti < len(tasks) and tasks[ti][0] <= t_end:
+            at, kind, zone = tasks[ti]
+            self.dispatch(Task(at, kind, zone, 0.0), at)
+            ti += 1
+        return self
 
     # ------------------------------------------------------------ stats ----
     def response_times(self, kind: str | None = None) -> np.ndarray:

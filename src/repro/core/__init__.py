@@ -10,4 +10,5 @@ from repro.core.policies import ThresholdPolicy, TargetUtilizationPolicy, make_p
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.updater import Updater, UpdatePolicy
 from repro.core.hpa import HPA
-from repro.core.ppa import PPA, PPAConfig
+from repro.core.ppa import PPA, PPAConfig, ScaleDownStabilizer
+from repro.core.controller import FleetController, TargetSpec

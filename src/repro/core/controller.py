@@ -1,0 +1,229 @@
+"""Batched multi-target PPA control plane (DESIGN.md §5).
+
+The paper runs one control loop per scaling target; the seed reproduced
+that literally — Z zones cost Z jitted forecast dispatches per tick.  The
+``FleetController`` stacks all targets' metric windows into one (Z, W, M)
+tensor and answers every target with a **single** device dispatch per tick:
+
+* shared-model mode — one forecaster serves all targets through
+  ``Forecaster.predict_batch`` (the Pallas ``lstm_cell`` tiles the batch
+  dimension, so 8–64 zones ride one kernel launch);
+* per-target mode — independently trained per-target LSTMs are answered
+  through ``lstm_predict_batch_stacked`` (parameter pytrees stacked on a
+  leading axis, vmapped forward); non-stackable models fall back to a
+  per-target loop, preserving Algorithm 1 semantics.
+
+Decisions are routed through ``Evaluator.decide_from_prediction`` and the
+same ``ScaleDownStabilizer`` the scalar PPA uses, so batched and per-target
+decisions are identical by construction (tests/test_control_plane.py
+asserts equivalence on seeded multi-zone traces).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.evaluator import Evaluator, EvalResult
+from repro.core.forecaster import (Forecaster, LSTMForecaster,
+                                   lstm_predict_batch_stacked)
+from repro.core.metrics import N_METRICS, MetricsHistory, Snapshot
+from repro.core.policies import Policy
+from repro.core.ppa import PPAConfig, ScaleDownStabilizer
+from repro.core.updater import Updater
+
+
+@dataclasses.dataclass
+class TargetSpec:
+    """One scaling target (zone / serving pool) under the controller."""
+    name: str
+    policy: Policy
+    min_replicas: int = 1
+    model: Forecaster | None = None    # per-target model; None -> shared
+
+
+class _TargetState:
+    def __init__(self, spec: TargetSpec, cfg: PPAConfig):
+        self.spec = spec
+        self.history = MetricsHistory()
+        self.stabilizer = ScaleDownStabilizer(cfg.stabilization_s)
+        self.recent: list[np.ndarray] = []
+        self.decisions: list[EvalResult] = []
+        self.predictions: list[tuple[float, np.ndarray]] = []
+
+
+class FleetController:
+    """Multi-target Formulator -> batched Evaluator -> scale requests."""
+
+    is_batched = True
+
+    def __init__(self, cfg: PPAConfig, targets: list[TargetSpec],
+                 model: Forecaster | None = None,
+                 updater: Updater | None = None):
+        if not targets:
+            raise ValueError("FleetController needs at least one target")
+        per_target = [t.model is not None for t in targets]
+        if any(per_target) and not all(per_target):
+            raise ValueError("either every target has its own model "
+                             "(per-target mode) or none does (shared mode)")
+        self.per_target_models = all(per_target)
+        if not self.per_target_models and model is None:
+            raise ValueError("shared mode needs a model")
+        if (self.per_target_models and updater is not None
+                and getattr(updater, "model_path", None)):
+            # one shared path would make Z targets overwrite each other's
+            # saved weights; per-target persistence needs per-target paths
+            raise ValueError("per-target mode cannot share a single "
+                             "updater model_path across targets")
+        self.cfg = cfg
+        self.model = model
+        self.updater = updater
+        self.targets: dict[str, _TargetState] = {
+            t.name: _TargetState(t, cfg) for t in targets}
+        # one policy-agnostic evaluator per target (the policy differs)
+        self._evaluators = {
+            t.name: Evaluator(t.policy, cfg.key_metric_idx,
+                              cfg.confidence_threshold) for t in targets}
+        self._last_update_t = 0.0
+        self._stack_cache: dict = {}   # stacked-params reuse across ticks
+
+    # ------------------------------------------------------------ access --
+    @property
+    def target_names(self) -> list[str]:
+        return list(self.targets)
+
+    def min_replicas(self, name: str) -> int:
+        return self.targets[name].spec.min_replicas
+
+    def model_for(self, name: str) -> Forecaster | None:
+        return (self.targets[name].spec.model if self.per_target_models
+                else self.model)
+
+    def decisions(self, name: str) -> list[EvalResult]:
+        return self.targets[name].decisions
+
+    def predictions(self, name: str) -> list[tuple[float, np.ndarray]]:
+        return self.targets[name].predictions
+
+    # -------------------------------------------------------- formulator --
+    def observe(self, name: str, snap: Snapshot):
+        st = self.targets[name]
+        st.history.append(snap)
+        st.recent.append(snap.values)
+        model = self.model_for(name)
+        window = model.window if model is not None else 1
+        st.recent = st.recent[-max(window + 1, 8):]
+
+    # ----------------------------------------------------------- predict --
+    def _predictable(self, name: str) -> bool:
+        model = self.model_for(name)
+        try:
+            return (model is not None and model.valid()
+                    and len(self.targets[name].recent) >= model.window + 1)
+        except Exception:
+            return False
+
+    def _predict_all(self, names: list[str]) -> dict:
+        """One batched forecast for every predictable target.  Returns
+        {name: (mean, std, is_bayesian)}; missing names -> reactive."""
+        cand = [n for n in names if self._predictable(n)]
+        if not cand:
+            return {}
+        recents = [np.stack(self.targets[n].recent) for n in cand]
+        try:
+            if not self.per_target_models:
+                means, stds = self.model.predict_batch(recents)
+                bayes = self.model.is_bayesian
+            else:
+                models = [self.model_for(n) for n in cand]
+                if (all(type(m) is LSTMForecaster for m in models)
+                        and len(set((m.window, m.hidden, m.residual)
+                                    for m in models)) == 1):
+                    means, stds = lstm_predict_batch_stacked(
+                        models, recents, cache=self._stack_cache)
+                    bayes = False
+                else:
+                    # heterogeneous models: per-target fallback, still one
+                    # control-plane pass (Algorithm 1 semantics preserved)
+                    out = {}
+                    for n, m, r in zip(cand, models, recents):
+                        try:
+                            mean, std = m.predict(r)
+                            out[n] = (mean, std, m.is_bayesian)
+                        except Exception:
+                            pass
+                    return out
+        except Exception:
+            # Robust: batched model failure -> every target falls back to
+            # its current metric (same guarantee as Evaluator.evaluate)
+            return {}
+        if stds is None:
+            stds = [None] * len(cand)
+        return {n: (means[i], stds[i], bayes) for i, n in enumerate(cand)}
+
+    # -------------------------------------------------------- control loop -
+    def control_step(self, t: float, max_replicas, current_replicas
+                     ) -> dict[str, EvalResult]:
+        """One batched tick: max_replicas / current_replicas are
+        {name: int} (or a single int broadcast to all targets)."""
+        names = self.target_names
+        max_r = (max_replicas if isinstance(max_replicas, dict)
+                 else {n: int(max_replicas) for n in names})
+        cur_r = (current_replicas if isinstance(current_replicas, dict)
+                 else {n: int(current_replicas) for n in names})
+        preds = self._predict_all(names)
+        results: dict[str, EvalResult] = {}
+        for n in names:
+            st = self.targets[n]
+            recent = (np.stack(st.recent) if st.recent
+                      else np.zeros((1, N_METRICS)))
+            mean, std, bayes = preds.get(n, (None, None, False))
+            res = self._evaluators[n].decide_from_prediction(
+                recent, mean, std, bayes, max_r[n], cur_r[n])
+            if res.raw_prediction is not None:
+                st.predictions.append((t, res.raw_prediction))
+            res.replicas = st.stabilizer.apply(t, res.replicas, cur_r[n],
+                                               max_r[n])
+            st.decisions.append(res)
+            results[n] = res
+        return results
+
+    # --------------------------------------------------------- update loop -
+    def maybe_update(self, t: float):
+        if self.updater is None:
+            return
+        if t - self._last_update_t < self.cfg.update_interval_s:
+            return
+        self._last_update_t = t
+        if self.per_target_models:
+            for st in self.targets.values():
+                st.spec.model = self.updater.update(st.spec.model,
+                                                    st.history, t)
+        else:
+            # pooled cross-target training for the shared model (windows
+            # spanning a target boundary are a small, documented artefact)
+            merged = MetricsHistory()
+            for st in self.targets.values():
+                for tt, row in zip(st.history.times(), st.history.series()):
+                    merged.append(Snapshot(float(tt), row))
+            n_rows = len(merged)
+            self.model = self.updater.update(self.model, merged, t)
+            if len(merged) < n_rows:   # updater consumed (and cleared) it
+                for st in self.targets.values():
+                    st.history.clear()
+
+    # --------------------------------------------------------- evaluation --
+    def prediction_mse(self, name: str, actual_series: np.ndarray,
+                       actual_times: np.ndarray,
+                       metric_idx: int | None = None) -> float:
+        """Per-target one-step-ahead MSE (paper Figs. 7-8)."""
+        preds = self.targets[name].predictions
+        if not preds:
+            return float("nan")
+        idx = self.cfg.key_metric_idx if metric_idx is None else metric_idx
+        errs = []
+        for t, pred in preds:
+            j = np.searchsorted(actual_times, t, side="right")
+            if j < len(actual_series):
+                errs.append((pred[idx] - actual_series[j, idx]) ** 2)
+        return float(np.mean(errs)) if errs else float("nan")

@@ -47,28 +47,42 @@ class Evaluator:
     def evaluate(self, recent: np.ndarray, model: Forecaster | None,
                  max_replicas: int, current_replicas: int) -> EvalResult:
         """recent: (>=window, N_METRICS) latest metric rows (last = current)."""
-        current_key = float(recent[-1, self.key_idx])
-        key_metric = current_key
-        predicted = False
-        conf_ok = True
-        raw = None
+        mean = std = None
+        is_bayesian = False
         if model is not None:
             try:
                 if model.valid() and len(recent) >= model.window + 1:
                     mean, std = model.predict(recent)
-                    raw = mean
-                    if model.is_bayesian and std is not None:
-                        # "confident enough over the preset threshold"
-                        conf_ok = float(std[self.key_idx]) <= self.conf_threshold
-                    if conf_ok and np.isfinite(mean[self.key_idx]):
-                        key_metric = float(mean[self.key_idx])
-                        predicted = True
+                    is_bayesian = model.is_bayesian
             except Exception:
                 # Robust: model file being updated / corrupted -> reactive
-                predicted = False
-                key_metric = current_key
+                mean = std = None
+        return self.decide_from_prediction(recent, mean, std, is_bayesian,
+                                           max_replicas, current_replicas)
+
+    def decide_from_prediction(self, recent: np.ndarray,
+                               mean: np.ndarray | None,
+                               std: np.ndarray | None, is_bayesian: bool,
+                               max_replicas: int,
+                               current_replicas: int) -> EvalResult:
+        """Algorithm 1's decision half, with the prediction supplied by the
+        caller — the batched control plane (core/controller.py) computes one
+        ``predict_batch`` for all targets and routes each row through here,
+        so batched and per-target decisions are identical by construction.
+        ``mean=None`` means no/failed prediction -> reactive fallback."""
+        current_key = float(recent[-1, self.key_idx])
+        key_metric = current_key
+        predicted = False
+        conf_ok = True
+        if mean is not None:
+            if is_bayesian and std is not None:
+                # "confident enough over the preset threshold"
+                conf_ok = float(std[self.key_idx]) <= self.conf_threshold
+            if conf_ok and np.isfinite(mean[self.key_idx]):
+                key_metric = float(mean[self.key_idx])
+                predicted = True
         n = self.policy(key_metric, {"current": current_replicas})
         n = min(n, max_replicas)
         return EvalResult(replicas=n, key_metric=key_metric,
                           predicted=predicted, confidence_ok=conf_ok,
-                          max_replicas=max_replicas, raw_prediction=raw)
+                          max_replicas=max_replicas, raw_prediction=mean)

@@ -49,8 +49,7 @@ def collect_series(tasks, t_end, replicas: int = 8,
     sim = ClusterSim(topo, cfg or SimConfig(seed=42))
     for z in ZONES:
         sim.scale_to(z, replicas, 0.0)
-    for p in sim.pods:
-        p.ready_at = p.free_at = 0.0
+    sim.make_ready_now()
     w = sim.cfg.control_interval_s
     ticks = np.arange(w, t_end, w)
     ti = 0

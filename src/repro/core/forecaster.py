@@ -9,7 +9,14 @@ ensemble wrapper provides the Bayesian confidence path of Algorithm 1.
 All forecasters implement:
     fit(series (T, M), from_scratch=bool)   — (re)train
     predict(recent (W, M)) -> (mean (M,), std (M,) | None)
+    predict_batch(recents (Z, T, M)) -> (means (Z, M), stds (Z, M) | None)
     valid() / is_bayesian / save(path) / load(path)
+
+``predict_batch`` is the batched control plane's hot path (DESIGN.md §5):
+one model serving Z scaling targets answers all of them in a single device
+dispatch (the Pallas ``lstm_cell`` tiles the batch dimension).  For Z
+*independently trained* per-target LSTMs, ``lstm_predict_batch_stacked``
+stacks the parameter pytrees and vmaps the forward — still one dispatch.
 """
 from __future__ import annotations
 
@@ -34,6 +41,19 @@ class Forecaster:
     def fit(self, series: np.ndarray, from_scratch: bool = False): ...
     def predict(self, recent: np.ndarray): ...
     def valid(self) -> bool: return True
+
+    def predict_batch(self, recents):
+        """recents: (Z, T, M) array or length-Z list of (T, M) windows ->
+        (means (Z, M), stds (Z, M) | None).  Base implementation loops
+        ``predict``; subclasses override with a truly batched path."""
+        means, stds = [], []
+        for r in recents:
+            mean, std = self.predict(np.asarray(r))
+            means.append(mean)
+            stds.append(std)
+        batched_std = (np.stack(stds) if all(s is not None for s in stds)
+                       else None)
+        return np.stack(means), batched_std
 
     def save(self, path):
         Path(path).parent.mkdir(parents=True, exist_ok=True)
@@ -148,6 +168,7 @@ class LSTMForecaster(Forecaster):
                                  N_METRICS)
         self.scaler = Scaler()
         self._fitted = False
+        self._fit_count = 0   # generation counter (stacked-batch cache key)
 
     def _windows(self, series):
         z = self.scaler.transform(series)
@@ -172,6 +193,7 @@ class LSTMForecaster(Forecaster):
                                            self.opt_cfg, epochs,
                                            self.use_pallas)
         self._fitted = True
+        self._fit_count += 1
         self.last_losses = np.asarray(losses)
         return self
 
@@ -186,10 +208,32 @@ class LSTMForecaster(Forecaster):
             pred = z[-1] + pred
         return self.scaler.inverse(pred), None
 
+    def predict_batch(self, recents):
+        """One device dispatch for Z targets sharing this model: the window
+        batch (Z, W, M) rides ``lstm_forward``'s batch axis (which the
+        Pallas kernel tiles), instead of Z separate dispatches."""
+        if not self._fitted:
+            raise RuntimeError("model not fitted")
+        z = np.stack([self.scaler.transform(
+            np.asarray(r, np.float64)[-self.window:]) for r in recents])
+        pred = np.asarray(lstm_forward(self.params, jnp.asarray(z),
+                                       use_pallas=self.use_pallas))
+        if self.residual:
+            pred = z[:, -1] + pred
+        return self.scaler.inverse(pred), None
+
     def valid(self):
-        return self._fitted and all(
-            bool(np.isfinite(np.asarray(v)).all())
-            for v in jax.tree.leaves(self.params))
+        if not self._fitted:
+            return False
+        # params only change on fit — memoize the finiteness sweep per fit
+        # generation (it is a control-plane per-tick hot path)
+        cached = getattr(self, "_valid_cache", None)
+        if cached is not None and cached[0] == self._fit_count:
+            return cached[1]
+        ok = all(bool(np.isfinite(np.asarray(v)).all())
+                 for v in jax.tree.leaves(self.params))
+        self._valid_cache = (self._fit_count, ok)
+        return ok
 
     def __getstate__(self):
         d = dict(self.__dict__)
@@ -199,6 +243,55 @@ class LSTMForecaster(Forecaster):
     def __setstate__(self, d):
         self.__dict__.update(d)
         self.params = jax.tree.map(jnp.asarray, d["params"])
+
+
+# ----------------------------------------------------- stacked batching ---
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _lstm_forward_stacked(stacked_params, xs, *, use_pallas: bool = False):
+    """stacked_params: pytree with leading target axis Z; xs (Z, W, M) ->
+    (Z, M).  vmap keeps it one device dispatch for all Z targets."""
+    def fwd(p, x):
+        return lstm_forward(p, x[None], use_pallas=use_pallas)[0]
+    return jax.vmap(fwd)(stacked_params, xs)
+
+
+def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
+                               cache: dict | None = None):
+    """Batched forecast across Z *independently trained* per-target LSTMs:
+    stack the parameter pytrees on a new leading axis and vmap the forward —
+    one device dispatch instead of Z (core/controller.py's per-target
+    mode).  Models must share architecture/window/residual settings.
+
+    Stacking + host->device upload dominates the tick cost, so pass a
+    ``cache`` dict to reuse the stacked pytree across ticks; it is re-stacked
+    only when a model is (re)fit (tracked via each model's fit generation).
+    """
+    m0 = models[0]
+    if not all(m.window == m0.window and m.hidden == m0.hidden
+               and m.residual == m0.residual for m in models):
+        raise ValueError("stacked batching needs homogeneous LSTMs")
+    z = np.stack([m.scaler.transform(np.asarray(r, np.float64)[-m0.window:])
+                  for m, r in zip(models, recents)])
+    key = tuple((id(m), getattr(m, "_fit_count", 0)) for m in models)
+    if cache is not None and cache.get("key") == key:
+        stacked = cache["stacked"]
+    else:
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                               *[m.params for m in models])
+        if cache is not None:
+            cache["key"] = key
+            cache["stacked"] = stacked
+            # hold strong refs: id() keys are only unique while the models
+            # they were taken from stay alive (address reuse after gc would
+            # otherwise let a fresh model hit a stale cache entry)
+            cache["models"] = list(models)
+    preds = np.asarray(_lstm_forward_stacked(stacked, jnp.asarray(z),
+                                             use_pallas=m0.use_pallas))
+    if m0.residual:
+        preds = z[:, -1] + preds
+    means = np.stack([m.scaler.inverse(p)
+                      for m, p in zip(models, preds)])
+    return means, None
 
 
 # ------------------------------------------------------------------ ARMA ---
@@ -296,6 +389,22 @@ class ARMAForecaster(Forecaster):
             y_next = mu + phi * z[-1] + th * self.eps_T
         return self.scaler.inverse(y_next), None
 
+    def predict_batch(self, recents):
+        """Closed-form one-step forecast vectorised over Z targets — pure
+        numpy, no per-target loop."""
+        if not self._fitted:
+            raise RuntimeError("model not fitted")
+        z = np.stack([self.scaler.transform(
+            np.asarray(r, np.float64)[-2:]) for r in recents])   # (Z, <=2, M)
+        mu, phi, th = self.theta[:, 0], self.theta[:, 1], self.theta[:, 2]
+        if self.differenced:
+            d_last = (z[:, -1] - z[:, -2] if z.shape[1] >= 2
+                      else np.zeros_like(z[:, -1]))
+            y_next = z[:, -1] + mu + phi * d_last + th * self.eps_T
+        else:
+            y_next = mu + phi * z[:, -1] + th * self.eps_T
+        return self.scaler.inverse(y_next), None
+
     def valid(self):
         return self._fitted and np.isfinite(self.theta).all()
 
@@ -329,6 +438,12 @@ class EnsembleForecaster(Forecaster):
 
     def predict(self, recent):
         preds = np.stack([m.predict(recent)[0] for m in self.members])
+        return preds.mean(0), preds.std(0)
+
+    def predict_batch(self, recents):
+        # one dispatch per member (each batched over Z), not Z * members
+        preds = np.stack([m.predict_batch(recents)[0]
+                          for m in self.members])     # (members, Z, M)
         return preds.mean(0), preds.std(0)
 
     def valid(self):

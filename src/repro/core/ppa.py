@@ -36,6 +36,26 @@ class PPAConfig:
     stabilization_s: float = 300.0
 
 
+class ScaleDownStabilizer:
+    """Kubernetes scale-down stabilization: a downscale request is clamped
+    to the max recommendation over the trailing window.  Factored out of
+    PPA so the batched FleetController applies the identical behaviour
+    per target (core/controller.py)."""
+
+    def __init__(self, window_s: float):
+        self.window_s = window_s
+        self._recs: list[tuple[float, int]] = []
+
+    def apply(self, t: float, desired: int, current_replicas: int,
+              max_replicas: int) -> int:
+        self._recs.append((t, desired))
+        self._recs = [(tt, d) for tt, d in self._recs
+                      if tt >= t - self.window_s]
+        if desired < current_replicas:
+            desired = min(max(d for _, d in self._recs), max_replicas)
+        return desired
+
+
 class PPA:
     """One PPA instance per scaling target (per zone, per serving pool)."""
 
@@ -52,7 +72,7 @@ class PPA:
         self._last_update_t = 0.0
         self.decisions: list[EvalResult] = []
         self.predictions: list[tuple[float, np.ndarray]] = []  # for MSE eval
-        self._recs: list[tuple[float, int]] = []
+        self.stabilizer = ScaleDownStabilizer(cfg.stabilization_s)
 
     # ---------------------------------------------------------- formulator -
     def observe(self, snap: Snapshot):
@@ -70,11 +90,8 @@ class PPA:
         if res.raw_prediction is not None:
             self.predictions.append((t, res.raw_prediction))
         # scale-down stabilization (k8s behaviour layer)
-        self._recs.append((t, res.replicas))
-        self._recs = [(tt, d) for tt, d in self._recs
-                      if tt >= t - self.cfg.stabilization_s]
-        if res.replicas < current_replicas:
-            res.replicas = min(max(d for _, d in self._recs), max_replicas)
+        res.replicas = self.stabilizer.apply(t, res.replicas,
+                                             current_replicas, max_replicas)
         self.decisions.append(res)
         return res
 

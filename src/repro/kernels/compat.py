@@ -1,0 +1,12 @@
+"""Pallas TPU API compatibility.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat aliases have shifted between releases).  Every kernel imports
+``CompilerParams`` from here so the repo runs on either side of the rename.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

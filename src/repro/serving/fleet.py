@@ -12,16 +12,25 @@ deadline-missing requests are re-dispatched (straggler mitigation).
 The PPA consumes [slot-utilisation, hbm, queue, tokens, request-rate] and
 bounds replicas by the chip budget — Algorithm 1's "max_replicas limited by
 system resources" with chips as the resource.
+
+Like ClusterSim, this is a thin adapter over ``repro.sim.SimCore``
+(DESIGN.md §3): replica selection is heap-based with the seed's exact
+least-loaded-slot ordering, injected events live on a heap, and in-flight
+requests are tracked per replica instead of re-scanning the whole
+completion log on failure.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from collections import defaultdict, deque
+from collections import defaultdict
 
 import numpy as np
 
 from repro.core.metrics import Snapshot
+from repro.sim import SimCore
+
+_GROUP = "fleet"
 
 
 @dataclasses.dataclass
@@ -46,10 +55,12 @@ class _Replica:
     draining: bool = False
     slot_free_at: list = None
     busy: dict = None
+    queue: list = None                # inflight requests
 
     def __post_init__(self):
         self.slot_free_at = self.slot_free_at or []
         self.busy = self.busy or defaultdict(float)
+        self.queue = self.queue or []
 
 
 @dataclasses.dataclass
@@ -68,13 +79,15 @@ class ServeRequest:
 class ServingFleet:
     def __init__(self, cfg: FleetConfig | None = None):
         self.cfg = cfg or FleetConfig()
-        self.replicas: list[_Replica] = []
+        self.core = SimCore(self.cfg.control_interval_s, two_phase=False,
+                            ma_windows=1)
+        self.replicas: list[_Replica] = self.core.servers
+        self._by_rid: dict[int, _Replica] = {}
         self._next_rid = 0
         self.completed: list[ServeRequest] = []
-        self._win_reqs = 0
-        self.samples: list[tuple[float, np.ndarray]] = []
+        self.samples: list[tuple[float, np.ndarray]] = \
+            self.core.exporter.samples[_GROUP]
         self.replica_log: list[tuple[float, int]] = []
-        self._events: list[tuple[float, str, dict]] = []
         self.rng = np.random.default_rng(self.cfg.seed)
 
     # ----------------------------------------------------------- scaling ---
@@ -82,53 +95,67 @@ class ServingFleet:
     def max_replicas(self) -> int:
         return self.cfg.total_chips // self.cfg.chips_per_replica
 
+    @staticmethod
+    def _effective(r: _Replica) -> float:
+        """Selection key: when this replica could start a request."""
+        return max(min(r.slot_free_at), r.ready_at)
+
     def live_replicas(self, t: float | None = None):
-        rs = [r for r in self.replicas if not r.dead and not r.draining]
+        rs = self.core.live(_GROUP)
         if t is not None:
             rs = [r for r in rs if r.ready_at <= t]
         return rs
 
     def scale_to(self, n: int, t: float):
         n = min(n, self.max_replicas)
-        cur = [r for r in self.replicas if not r.dead and not r.draining]
+        cur = self.core.live(_GROUP)
         if len(cur) < n:
             for _ in range(n - len(cur)):
                 r = _Replica(self._next_rid, ready_at=t + self.cfg.spawn_s,
                              slot_free_at=[t] * self.cfg.slots_per_replica)
                 self._next_rid += 1
-                self.replicas.append(r)
+                self._by_rid[r.rid] = r
+                self.core.add_server(r, _GROUP, t, key=self._effective(r),
+                                     ready_at=r.ready_at)
         elif len(cur) > n:
             for r in sorted(cur, key=lambda r: -r.ready_at)[:len(cur) - n]:
                 r.draining = True
+                self.core.pool(_GROUP).invalidate(r)
+
+    def make_ready_now(self, t: float = 0.0):
+        """Mark current replicas warm at ``t`` (pre-provisioned capacity)."""
+        for r in self.core.live(_GROUP):
+            r.ready_at = t
+            self.core.pool(_GROUP).reset(r, self._effective(r))
 
     # -------------------------------------------------------- dispatching --
     def dispatch(self, req: ServeRequest, t: float):
-        live = self.live_replicas() or [r for r in self.replicas
-                                        if not r.dead]
-        if not live:
-            self.scale_to(1, t)
-            live = [self.replicas[-1]]
-        # least-loaded slot across replicas
-        best, bi = None, -1
-        for r in live:
-            i = int(np.argmin(r.slot_free_at))
-            ready = max(r.slot_free_at[i], r.ready_at, t)
-            if best is None or ready < best[1]:
-                best, bi = (r, ready), i
-        r, start = best
+        pool = self.core.pool(_GROUP)
+        r = pool.select(t)
+        in_pool = r is not None
+        if r is None:
+            # everything dead or draining: drain-last-resort, else cold-start
+            draining = [x for x in self.replicas if not x.dead]
+            if draining:
+                r = min(draining,
+                        key=lambda x: (max(self._effective(x), t), x.rid))
+            else:
+                self.scale_to(1, t)
+                r = pool.select(t)
+                in_pool = True
+        bi = int(np.argmin(r.slot_free_at))
+        start = max(r.slot_free_at[bi], r.ready_at, t)
         service = (self.cfg.prefill_s
                    + req.n_tokens / (self.cfg.decode_tok_s * r.speed))
         req.completion = start + service
         req.replica = r.rid
         r.slot_free_at[bi] = req.completion
-        w = self.cfg.control_interval_s
-        i0, i1 = int(start // w), int(req.completion // w)
-        for i in range(i0, i1 + 1):
-            lo, hi = max(start, i * w), min(req.completion, (i + 1) * w)
-            if hi > lo:
-                r.busy[i] += hi - lo
-        self.completed.append(req)
-        self._win_reqs += 1
+        self.core.account_busy(r.busy, start, req.completion)
+        r.queue.append(req)
+        if in_pool:
+            pool.update(r, self._effective(r))
+        self.core.log_completion(self.completed, req)
+        self.core.exporter.count(_GROUP)
         # straggler mitigation: re-dispatch if the deadline is blown
         nominal = (self.cfg.prefill_s
                    + req.n_tokens / self.cfg.decode_tok_s)
@@ -137,7 +164,6 @@ class ServingFleet:
             healthy = [x for x in self.live_replicas(t)
                        if x.speed >= 0.9 and x.rid != r.rid]
             if healthy:
-                self.completed.pop()
                 req.redispatched = True
                 h = healthy[int(np.argmin(
                     [min(x.slot_free_at) for x in healthy]))]
@@ -145,60 +171,59 @@ class ServingFleet:
                 start2 = max(h.slot_free_at[j], h.ready_at, t)
                 req.completion = start2 + nominal
                 h.slot_free_at[j] = req.completion
-                self.completed.append(req)
+                pool.update(h, self._effective(h))
 
     # ---------------------------------------------------------- failures ---
     def inject_failure(self, t: float, rid: int):
-        self._events.append((t, "fail", {"rid": rid}))
+        self.core.events.push(t, "fail", rid=rid)
 
     def inject_straggler(self, t: float, rid: int, speed: float,
                          duration: float):
-        self._events.append((t, "slow", {"rid": rid, "speed": speed}))
-        self._events.append((t + duration, "slow", {"rid": rid, "speed": 1.0}))
+        self.core.events.push(t, "slow", rid=rid, speed=speed)
+        self.core.events.push(t + duration, "slow", rid=rid, speed=1.0)
 
     def _apply_events(self, t: float):
-        fired = [e for e in self._events if e[0] <= t]
-        self._events = [e for e in self._events if e[0] > t]
-        requeue = []
-        for _, kind, arg in fired:
-            for r in self.replicas:
-                if r.rid == arg["rid"]:
-                    if kind == "fail" and not r.dead:
-                        r.dead = True
-                        for req in self.completed:
-                            if (req.replica == r.rid and req.completion > t
-                                    and not req.redispatched):
-                                requeue.append(req)
-                    elif kind == "slow":
-                        r.speed = arg["speed"]
+        requeue: list[ServeRequest] = []
+        for _, kind, arg in self.core.events.pop_due(t):
+            r = self._by_rid.get(arg["rid"])
+            if r is None:
+                continue
+            if kind == "fail" and not r.dead:
+                r.dead = True
+                self.core.pool(_GROUP).invalidate(r)
+                requeue.extend(q for q in r.queue
+                               if q.completion > t and not q.redispatched)
+                r.queue.clear()
+            elif kind == "slow":
+                r.speed = arg["speed"]
         for req in requeue:
-            self.completed.remove(req)
             req.redispatched = True
             self.dispatch(req, t)
 
     # ------------------------------------------------------------ metrics --
     def sample(self, t: float) -> Snapshot:
         w = self.cfg.control_interval_s
-        win = int((t - 1e-9) // w)
+        exporter = self.core.exporter
+        win = exporter.window_index(t)
         live = [r for r in self.replicas if not r.dead]
         cap = max(sum(self.cfg.slots_per_replica for r in live
                       if r.ready_at <= t), 1)
         busy = sum(r.busy.get(win, 0.0) for r in live) / w
         util = 100.0 * busy / cap
-        rate = self._win_reqs / w
-        self._win_reqs = 0
+        rate = exporter.take_count(_GROUP) / w
+        for r in live:
+            if r.queue:
+                r.queue = [q for q in r.queue if q.completion > t]
         vals = np.array([util * cap, 0.0, busy, rate * 10, rate])
-        snap = Snapshot(t, vals)
-        self.samples.append((t, snap.values))
-        return snap
+        ma = exporter.push(_GROUP, t, vals)
+        return Snapshot(t, ma)
 
     # --------------------------------------------------------------- run ---
     def run(self, requests: list[tuple[float, int]], scaler, kind: str,
             t_end: float, min_replicas: int = 1):
         """requests: sorted (arrival_t, n_tokens).  scaler: PPA or HPA."""
         self.scale_to(min_replicas, 0.0)
-        for r in self.replicas:
-            r.ready_at = 0.0
+        self.make_ready_now(0.0)
         w = self.cfg.control_interval_s
         ticks = np.arange(w, t_end, w)
         ri = 0
@@ -234,7 +259,7 @@ class ServingFleet:
         w = self.cfg.control_interval_s
         total_busy, total_cap = 0.0, 0.0
         for t, _ in self.samples:
-            win = int((t - 1e-9) // w)
+            win = self.core.exporter.window_index(t)
             live = [r for r in self.replicas if not r.dead
                     and r.ready_at <= t]
             total_cap += len(live) * self.cfg.slots_per_replica * w

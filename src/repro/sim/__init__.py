@@ -1,0 +1,5 @@
+# Shared discrete-event simulation substrate (DESIGN.md §3).  Both the
+# Kubernetes cluster simulator (repro.cluster) and the TPU serving fleet
+# (repro.serving.fleet) are thin domain adapters over this core.
+from repro.sim.events import EventQueue
+from repro.sim.core import ServerPool, SimCore, WindowedExporter, account_busy

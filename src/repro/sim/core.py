@@ -1,0 +1,243 @@
+"""Event-heap discrete-event core shared by the cluster sim and the TPU
+serving fleet (DESIGN.md §3).
+
+The seed engines selected a server for every task with an O(P) scan
+(``min(pods, key=...)``) and undid mis-dispatches with O(n)
+``completed.remove``.  This core replaces both:
+
+* ``ServerPool`` — per-group lazy heaps that reproduce the seed selection
+  order *exactly* (same tie-breaking) at O(log P) per dispatch:
+
+  - ``free``   : ready & idle servers, keyed by insertion sequence, so ties
+                 among idle servers resolve in creation (pid/rid) order like
+                 the seed's first-minimal list scan;
+  - ``busy``   : ready & occupied servers, keyed (selection key, seq) —
+                 the seed's ``min(max(free_at, t))`` over busy servers;
+  - ``pending``: not-yet-ready servers, selectable only when no ready
+                 server exists (the cluster sim's queue-on-spinning-up
+                 fallback), keyed (selection key, seq); a companion
+                 ``ready_heap`` keyed ready_at promotes them.
+
+  Single-phase pools (``two_phase=False``, the fleet) skip the pending
+  distinction: the selection key already folds ready_at in.
+
+  Entries are invalidated lazily via per-server version counters, so drain,
+  death and key updates are O(1) and stale heap entries are skipped on pop.
+
+* ``EventQueue`` — heap-ordered failure/straggler/recovery injection
+  (see events.py).
+
+* ``WindowedExporter`` — the per-group windowed metric exporter (the
+  Prometheus-adapter stand-in): per-window task counters, raw sample log
+  and a configurable moving average over the last ``ma_windows`` samples.
+
+* append-only completion logging — redispatch mutates the task record in
+  place; the ``_logged`` guard keeps the record single-entry without the
+  seed's O(n) ``list.remove``.
+
+The pool is duck-typed: any object with ``dead``/``draining`` attributes can
+be registered; pool bookkeeping lives in ``_pool_*`` attributes attached at
+registration.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+
+import numpy as np
+
+from repro.sim.events import EventQueue
+
+_READY, _PENDING = "ready", "pending"
+
+
+def account_busy(busy: dict, start: float, end: float, window_s: float):
+    """Credit [start, end) busy time into per-window buckets."""
+    i0, i1 = int(start // window_s), int(end // window_s)
+    for i in range(i0, i1 + 1):
+        lo = max(start, i * window_s)
+        hi = min(end, (i + 1) * window_s)
+        if hi > lo:
+            busy[i] += hi - lo
+
+
+class ServerPool:
+    """Heap-based server selection for one scaling group."""
+
+    def __init__(self, two_phase: bool = True):
+        self.two_phase = two_phase
+        self.n_live = 0
+        self._seq = 0
+        self._free: list[tuple[int, int, object]] = []      # (seq, ver, s)
+        self._busy: list[tuple[float, int, int, object]] = []
+        self._pending: list[tuple[float, int, int, object]] = []
+        self._ready_heap: list[tuple[float, int, object]] = []
+
+    # ------------------------------------------------------------ intern --
+    @staticmethod
+    def _alive(s) -> bool:
+        return not s.dead and not s.draining
+
+    def _valid(self, s, ver: int, phase: str) -> bool:
+        return (self._alive(s) and s._pool_version == ver
+                and s._pool_phase == phase)
+
+    def _push(self, s):
+        if s._pool_phase == _READY:
+            heapq.heappush(self._busy,
+                           (s._pool_key, s._pool_seq, s._pool_version, s))
+        else:
+            heapq.heappush(self._pending,
+                           (s._pool_key, s._pool_seq, s._pool_version, s))
+
+    # ------------------------------------------------------------ public --
+    def add(self, s, t: float, key: float, ready_at: float):
+        """Register a server.  ``key`` is its selection key (the cluster's
+        ``free_at``, the fleet's ``max(min(slot_free_at), ready_at)``)."""
+        s._pool_seq = self._seq
+        self._seq += 1
+        s._pool_version = 0
+        s._pool_key = key
+        s._pool_live = True
+        if self.two_phase and ready_at > t:
+            s._pool_phase = _PENDING
+            heapq.heappush(self._ready_heap, (ready_at, s._pool_seq, s))
+        else:
+            s._pool_phase = _READY
+        self._push(s)
+        self.n_live += 1
+
+    def update(self, s, key: float):
+        """Re-key a server after a dispatch changed its horizon."""
+        s._pool_key = key
+        s._pool_version += 1
+        self._push(s)
+
+    def invalidate(self, s):
+        """Server drained or died — caller has already set the flag."""
+        s._pool_version += 1
+        if getattr(s, "_pool_live", False):
+            s._pool_live = False
+            self.n_live -= 1
+
+    def reset(self, s, key: float):
+        """Force a server ready-now (e.g. pre-warmed initial capacity)."""
+        s._pool_phase = _READY
+        self.update(s, key)
+
+    def select(self, t: float):
+        """Pop the server the seed scan would pick at time ``t``.
+
+        The caller *must* hand the server back via ``update`` (or
+        ``invalidate``) after recording the dispatch — selection removes the
+        live heap entry.
+        """
+        # 1. promote pending servers whose ready_at has passed (not
+        #    version-checked: fallback dispatches bump versions but must not
+        #    cancel promotion)
+        while self._ready_heap and self._ready_heap[0][0] <= t:
+            _, _, s = heapq.heappop(self._ready_heap)
+            if self._alive(s) and s._pool_phase == _PENDING:
+                s._pool_phase = _READY
+                s._pool_version += 1
+                self._push(s)
+        # 2. ready servers whose key horizon has passed are idle: move them
+        #    to the free heap where ties resolve in creation order
+        while self._busy and self._busy[0][0] <= t:
+            _, seq, ver, s = heapq.heappop(self._busy)
+            if self._valid(s, ver, _READY):
+                s._pool_version += 1
+                heapq.heappush(self._free, (seq, s._pool_version, s))
+        # 3. selection priority: idle ready -> earliest busy ready ->
+        #    earliest pending (two-phase only)
+        while self._free:
+            _, ver, s = heapq.heappop(self._free)
+            if self._valid(s, ver, _READY):
+                return s
+        while self._busy:
+            _, _, ver, s = heapq.heappop(self._busy)
+            if self._valid(s, ver, _READY):
+                return s
+        while self._pending:
+            _, _, ver, s = heapq.heappop(self._pending)
+            if self._valid(s, ver, _PENDING):
+                return s
+        return None
+
+
+class WindowedExporter:
+    """Windowed metric readout: per-group arrival counters + raw sample log
+    + ``ma_windows``-sample moving average (the Prometheus rate()/avg
+    emulation; ma_windows=1 disables smoothing)."""
+
+    def __init__(self, window_s: float, ma_windows: int = 4):
+        self.window_s = window_s
+        self.ma_windows = max(int(ma_windows), 1)
+        self.samples: dict[str, list[tuple[float, np.ndarray]]] = \
+            defaultdict(list)
+        self._counts: dict[str, int] = defaultdict(int)
+        self._raw: dict[str, list[np.ndarray]] = defaultdict(list)
+
+    def window_index(self, t: float) -> int:
+        return int((t - 1e-9) // self.window_s)
+
+    def count(self, group: str, n: int = 1):
+        self._counts[group] += n
+
+    def take_count(self, group: str) -> int:
+        n = self._counts.get(group, 0)
+        self._counts[group] = 0
+        return n
+
+    def push(self, group: str, t: float, raw: np.ndarray) -> np.ndarray:
+        """Store a raw reading, return the smoothed exporter value."""
+        self._raw[group].append(np.asarray(raw, np.float64))
+        # only the trailing MA window is ever read back — don't let the raw
+        # log shadow-copy the samples log on long runs
+        self._raw[group] = self._raw[group][-self.ma_windows:]
+        ma = np.mean(self._raw[group], axis=0)
+        self.samples[group].append((t, ma))
+        return ma
+
+
+class SimCore:
+    """Registry + pools + events + exporter: the shared substrate a domain
+    adapter (ClusterSim, ServingFleet) drives."""
+
+    def __init__(self, window_s: float, two_phase: bool = True,
+                 ma_windows: int = 4):
+        self.window_s = window_s
+        self.two_phase = two_phase
+        self.servers: list = []
+        self.by_group: dict[str, list] = defaultdict(list)
+        self.pools: dict[str, ServerPool] = {}
+        self.events = EventQueue()
+        self.exporter = WindowedExporter(window_s, ma_windows)
+
+    def pool(self, group: str) -> ServerPool:
+        if group not in self.pools:
+            self.pools[group] = ServerPool(self.two_phase)
+        return self.pools[group]
+
+    def add_server(self, s, group: str, t: float, key: float,
+                   ready_at: float):
+        self.servers.append(s)
+        self.by_group[group].append(s)
+        self.pool(group).add(s, t, key, ready_at)
+
+    def live(self, group: str):
+        return [s for s in self.by_group[group]
+                if not s.dead and not s.draining]
+
+    def n_live(self, group: str) -> int:
+        return self.pool(group).n_live
+
+    def log_completion(self, log: list, rec):
+        """Append-only completion log: a redispatched record is mutated in
+        place and must not be double-counted (no O(n) list.remove)."""
+        if not getattr(rec, "_logged", False):
+            rec._logged = True
+            log.append(rec)
+
+    def account_busy(self, busy: dict, start: float, end: float):
+        account_busy(busy, start, end, self.window_s)

@@ -10,7 +10,12 @@ from repro.configs.base import ModelConfig, ShapeSpec
 
 
 def _hlo_flops(fn, *args):
-    return jax.jit(fn).lower(*args).compile().cost_analysis().get("flops", 0)
+    # cost_analysis() returns one dict per computation on newer JAX, a bare
+    # dict on older releases — normalise to the flops total either way.
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, dict):
+        return ca.get("flops", 0)
+    return sum(c.get("flops", 0) for c in ca)
 
 
 def test_forward_flops_match_hlo_dense():

@@ -1,6 +1,7 @@
 """Distributed extras: int8 compressed all-reduce (quantisation bounds,
 error feedback), elastic re-mesh logic, and the multi-device paths via a
 subprocess with placeholder devices."""
+import os
 import subprocess
 import sys
 
@@ -62,10 +63,14 @@ print("SUBPROC_OK")
 
 
 def test_multi_device_paths_subprocess():
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # forward backend selection — without e.g. JAX_PLATFORMS=cpu the child
+    # probes for accelerator runtimes and can hang on TPU-toolchain hosts
+    for k in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "TPU_SKIP_MDS_QUERY"):
+        if k in os.environ:
+            env[k] = os.environ[k]
     r = subprocess.run([sys.executable, "-c", _SUBPROC],
-                       capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       capture_output=True, text=True, timeout=300, env=env)
     assert "SUBPROC_OK" in r.stdout, r.stderr[-2000:]
 
 

@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row, save, timed
+from benchmarks.common import csv_row, save_bench, timed
 
 
 def _traces(Z, T=200, seed=0):
@@ -123,7 +123,7 @@ def run(quick: bool = False):
     lat = bench_control_latency(Z=16, iters=30 if quick else 100)
     par = bench_sim_core_parity(t_minutes=10 if quick else 20)
     payload = {"control_latency": lat, "sim_core_parity": par}
-    save("control_plane", payload)
+    save_bench("control_plane", payload)
     assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
     assert par["parity_ok"], f"sim-core parity broken: {par}"
     return payload
@@ -133,5 +133,8 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    out = run(quick=ap.parse_args().quick)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-smoke lane: same as --quick")
+    args = ap.parse_args()
+    out = run(quick=args.quick or args.smoke)
     print(out)

@@ -8,7 +8,6 @@ Paper results:  sort  HPA 0.592±0.067  PPA 0.508±0.038   (p < 1e-3)
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import pretrain_series, save, timed, csv_row
 

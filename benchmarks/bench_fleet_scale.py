@@ -1,0 +1,234 @@
+"""Fleet-scale sim benchmark (DESIGN.md §3, "Fleet scale").
+
+Three claims are measured (the PR's acceptance bar):
+
+1. **Throughput** — the vectorised batch path (``WindowedArrivals`` +
+   ``ArrayServerPool`` + ``CompletionLog``) sweeps P in {10^2..10^5} pods;
+   at P = 10^4 it must complete a 2 h-sim-time run in < 60 s wall-clock and
+   deliver >= 10x events/sec over the per-event heap path.
+2. **Parity** — at small P the batched drain produces the *identical*
+   completion sequence as the per-event engine (same RNG stream, same
+   selection semantics).
+3. **Multi-fleet** — several ``ServingFleet`` pools with out-of-phase load
+   share one chip budget under a ``ChipBudgetArbiter``; the budget is never
+   exceeded and chips actually move between fleets.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_fleet_scale [--smoke]
+         [--check-baseline benchmarks/baselines/fleet_scale_baseline.json]
+
+``--smoke`` is the CI lane: small P only, plus a baseline diff that fails
+on a >2x events/sec regression.  Results land in ``BENCH_fleet_scale.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_bench
+
+LOAD = 0.6  # offered load as a fraction of fleet capacity
+SERVICE_S = 8.0  # mean task service time (fleet tasks, not the 0.45 s sort)
+WINDOW_S = 15.0
+ZONE = "fleet-0"
+
+# (P, sim seconds): 2 h at the acceptance point, bounded at 10^5 so the
+# completion log stays in memory (~10^7 events); smoke stays tiny for CI
+FULL_SWEEP = [(100, 7200.0), (1000, 7200.0), (10_000, 7200.0), (100_000, 1200.0)]
+SMOKE_SWEEP = [(100, 600.0), (1000, 600.0)]
+LEGACY_CAP_EVENTS = 300_000  # bound the per-event engine's timed slice
+
+
+def _legacy_cap(P: int, t_end: float) -> float:
+    rate = LOAD * P / SERVICE_S
+    return min(t_end, max(120.0, LEGACY_CAP_EVENTS / rate))
+
+
+def _sim(P: int):
+    from repro.cluster import ClusterSim, SimConfig
+    from repro.cluster.topology import fleet_topology
+
+    return ClusterSim(fleet_topology(P), SimConfig(seed=0, sort_service_s=SERVICE_S))
+
+
+def _bindings(P: int):
+    from repro.cluster import AutoscalerBinding
+    from repro.core.hpa import HPA
+
+    # fixed capacity: isolates dispatch cost from autoscaler dynamics
+    return [AutoscalerBinding(ZONE, HPA(1e18, min_replicas=P), "hpa", P)]
+
+
+def _arrivals(P: int, t_end: float):
+    from repro.workloads import poisson_arrivals
+
+    return poisson_arrivals(LOAD * P / SERVICE_S, t_end, WINDOW_S, zone=ZONE, seed=3)
+
+
+def bench_point(P: int, t_end: float):
+    """One sweep point: batched full run + per-event run on a bounded
+    slice (events/sec is a rate, so the slice comparison is fair)."""
+    arr = _arrivals(P, t_end)
+    sim_b, binds_b = _sim(P), _bindings(P)  # imports stay out of the timer
+    t0 = time.perf_counter()
+    sim_b.run(arr, binds_b, t_end, initial_replicas=P)
+    wall_b = time.perf_counter() - t0
+    t_leg = _legacy_cap(P, t_end)
+    arr_l = _arrivals(P, t_leg)
+    tasks = [(float(t), "sort", ZONE) for t in arr_l.times]
+    sim_l, binds_l = _sim(P), _bindings(P)
+    t0 = time.perf_counter()
+    sim_l.run(tasks, binds_l, t_leg, initial_replicas=P)
+    wall_l = time.perf_counter() - t0
+    eps_b, eps_l = len(arr) / wall_b, len(tasks) / wall_l
+    csv_row(
+        f"fleet_scale_P{P}",
+        wall_b * 1e6,
+        f"{eps_b:,.0f} ev/s batched vs {eps_l:,.0f} legacy "
+        f"= {eps_b / eps_l:.1f}x",
+    )
+    return {
+        "P": P,
+        "sim_s": t_end,
+        "events": len(arr),
+        "wall_s_batched": wall_b,
+        "events_per_s_batched": eps_b,
+        "legacy_sim_s": t_leg,
+        "legacy_events": len(tasks),
+        "wall_s_legacy": wall_l,
+        "events_per_s_legacy": eps_l,
+        "eps_speedup": eps_b / eps_l,
+    }
+
+
+def bench_parity(P: int = 200, t_end: float = 900.0) -> dict:
+    """Batched drain == per-event dispatch, completion for completion."""
+    arr = _arrivals(P, t_end)
+    vec = _sim(P).run(arr, _bindings(P), t_end, initial_replicas=P)
+    tasks = [(float(t), "sort", ZONE) for t in arr.times]
+    leg = _sim(P).run(tasks, _bindings(P), t_end, initial_replicas=P)
+    cv = vec.completed_log.view()["completion"]
+    cl = np.array([t.completion for t in leg.completed])
+    ok = len(cv) == len(cl) and bool(np.array_equal(cv, cl))
+    csv_row("fleet_scale_parity", float(len(cv)), f"identical={ok}")
+    return {"P": P, "n_events": int(len(cv)), "identical": ok}
+
+
+def bench_multi_fleet(t_end: float = 1800.0, budget: int = 192) -> dict:
+    """Three fleets with out-of-phase diurnal load under one chip budget."""
+    from repro.core import (
+        ARIMAD1Forecaster,
+        FleetController,
+        PPAConfig,
+        TargetSpec,
+        ThresholdPolicy,
+    )
+    from repro.serving.fleet import FleetConfig
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+    from repro.workloads import poisson_arrivals
+
+    rng = np.random.default_rng(0)
+    n_win = int(np.ceil(t_end / WINDOW_S))
+    t_win = np.arange(n_win) * WINDOW_S
+    specs, requests = [], {}
+    for i in range(3):
+        name = f"fleet-{i}"
+        specs.append(
+            FleetSpec(
+                name,
+                FleetConfig(total_chips=budget, chips_per_replica=16, seed=i),
+                weight=1.0,
+            )
+        )
+        phase = 2.0 * np.pi * i / 3.0
+        rates = 2.0 * (1.0 + 0.8 * np.sin(2 * np.pi * t_win / t_end + phase))
+        arr = poisson_arrivals(rates, t_end, WINDOW_S, seed=10 + i)
+        ntok = rng.integers(16, 64, len(arr.times))
+        requests[name] = [(float(t), int(n)) for t, n in zip(arr.times, ntok)]
+    # slot-utilisation threshold: vals[0] = 100 * busy_slots, 8 slots per
+    # replica -> 560 targets ~70 % slot utilisation per replica
+    ctrl = FleetController(
+        PPAConfig(threshold=560.0, stabilization_s=60.0),
+        [TargetSpec(s.name, ThresholdPolicy(560.0, 1)) for s in specs],
+        model=ARIMAD1Forecaster(),  # unfitted -> reactive decisions
+    )
+    sim = MultiFleetSim(specs, budget, ctrl)
+    # straggler wave on fleet-0: its first replicas slow to 30 % mid-run
+    wave = t_end / 3.0 + np.arange(3) * WINDOW_S
+    events = sim.fleets["fleet-0"].core.events
+    events.push_batch(wave, "slow", [{"rid": r, "speed": 0.3} for r in range(3)])
+    events.push_batch(wave + 120, "slow", [{"rid": r, "speed": 1.0} for r in range(3)])
+    sim.run(requests, t_end)
+    grants = [g for _, g in sim.alloc_log]
+    moves = sum(1 for a, b in zip(grants, grants[1:]) if a != b)
+    rt = sim.response_times()
+    out = {
+        "fleets": len(specs),
+        "budget_chips": budget,
+        "peak_chips": sim.peak_chips(),
+        "budget_respected": sim.peak_chips() <= budget,
+        "peak_live_chips": max((c for _, c in sim.usage_log), default=0),
+        "reallocations": moves,
+        "n_requests": int(len(rt)),
+        "p95_response_s": float(np.percentile(rt, 95)) if len(rt) else None,
+    }
+    csv_row(
+        "fleet_scale_multi_fleet",
+        float(len(rt)),
+        f"peak={out['peak_chips']}/{budget} chips, {moves} reallocations",
+    )
+    return out
+
+
+def check_baseline(results: dict, path: Path) -> list[str]:
+    """>2x events/sec regression vs the checked-in baseline fails CI."""
+    base = json.loads(path.read_text())
+    errors = []
+    for point in results["sweep"]:
+        ref = base.get("events_per_s_batched", {}).get(str(point["P"]))
+        if ref is None:
+            continue
+        if point["events_per_s_batched"] < ref / 2.0:
+            errors.append(
+                f"P={point['P']}: {point['events_per_s_batched']:,.0f} ev/s "
+                f"< half of baseline {ref:,.0f}"
+            )
+    return errors
+
+
+def run(smoke: bool = False, baseline: Path | None = None) -> dict:
+    sweep = SMOKE_SWEEP if smoke else FULL_SWEEP
+    results = {
+        "mode": "smoke" if smoke else "full",
+        "load": LOAD,
+        "service_s": SERVICE_S,
+        "sweep": [bench_point(P, t) for P, t in sweep],
+        "parity": bench_parity(),
+        "multi_fleet": bench_multi_fleet(t_end=600.0 if smoke else 1800.0),
+    }
+    save_bench("fleet_scale", results)
+    assert results["parity"]["identical"], "batched drain lost seed parity"
+    assert results["multi_fleet"]["budget_respected"], "chip budget exceeded"
+    if not smoke:
+        p4 = next(p for p in results["sweep"] if p["P"] == 10_000)
+        wall, speedup = p4["wall_s_batched"], p4["eps_speedup"]
+        assert wall < 60.0, f"10^4-pod 2 h run took {wall:.1f}s (bar: <60s)"
+        assert speedup >= 10.0, f"{speedup:.1f}x at P=10^4 (bar: >=10x)"
+    if baseline is not None:
+        errors = check_baseline(results, baseline)
+        if errors:
+            raise SystemExit("bench regression: " + "; ".join(errors))
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check-baseline", type=Path, default=None)
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, baseline=args.check_baseline)
+    print(json.dumps(out, indent=1, default=float))

@@ -5,9 +5,9 @@ import json
 import time
 from pathlib import Path
 
-import numpy as np
 
-ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+ROOT = Path(__file__).resolve().parent.parent
+ART = ROOT / "artifacts" / "bench"
 
 _PRE_CACHE = {}
 
@@ -26,6 +26,15 @@ def pretrain_series(records: int = 1800, seed: int = 99):
 def save(name: str, payload: dict):
     ART.mkdir(parents=True, exist_ok=True)
     (ART / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
+
+
+def save_bench(name: str, payload: dict):
+    """Artifact copy + a repo-root ``BENCH_<name>.json`` (the CI bench-smoke
+    lane uploads the root files and diffs them against checked-in
+    baselines)."""
+    save(name, payload)
+    (ROOT / f"BENCH_{name}.json").write_text(
+        json.dumps(payload, indent=1, default=float))
 
 
 def timed(fn, *args, **kw):

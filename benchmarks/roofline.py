@@ -24,7 +24,7 @@ NOTE = {
 
 
 def build_table(mesh: str = "16x16"):
-    from repro.analysis.costs import analytic_cell, CHIPS
+    from repro.analysis.costs import analytic_cell
     from repro.configs import SHAPES, get_config
     from repro.configs.base import shape_applicable
     from repro.launch.mesh import kv_repeat_for

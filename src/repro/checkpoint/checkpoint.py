@@ -48,15 +48,15 @@ def save_checkpoint(ckpt_dir, step: int, tree, keep_last: int = 3):
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
     leaves, treedef = _flatten(tree)
-    np_leaves = [np.asarray(l) for l in leaves]
-    arrays = {f"a{i}": _to_savable(l) for i, l in enumerate(np_leaves)}
+    np_leaves = [np.asarray(x) for x in leaves]
+    arrays = {f"a{i}": _to_savable(x) for i, x in enumerate(np_leaves)}
     np.savez(tmp / "arrays.npz", **arrays)
     manifest = {
         "step": step,
         "n_leaves": len(leaves),
         "treedef": str(treedef),
-        "shapes": [list(l.shape) for l in np_leaves],
-        "dtypes": [l.dtype.name for l in np_leaves],
+        "shapes": [list(x.shape) for x in np_leaves],
+        "dtypes": [x.dtype.name for x in np_leaves],
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     (tmp / "COMMITTED").write_text("ok")

@@ -20,6 +20,24 @@ instead of the seed's O(P) scan, with identical tie-breaking), injected
 events live on a heap, and the completion log is append-only.  Seeded runs
 reproduce the seed engine's response-time distributions exactly
 (tests/test_control_plane.py).
+
+Fleet-scale batch mode (DESIGN.md §3, "Fleet scale"): passing a
+``WindowedArrivals`` trace to ``run`` switches the sim onto the vectorised
+substrate — per-zone ``ArrayServerPool``s drained one window chunk at a
+time (``drain_window``), a structured-numpy ``CompletionLog`` instead of
+per-task objects, and ``WindowAccumulator`` zone-level busy accounting
+instead of per-pod dicts.  This scales runs to 10⁴–10⁵ pods
+(benchmarks/bench_fleet_scale.py); for a *single-zone* trace with
+homogeneous node speeds the batched drain produces the *identical*
+completion sequence as per-event dispatch (tests/test_fleet_scale.py).
+Known deviations: multi-zone traces consume the service-jitter stream one
+zone chunk at a time instead of in global arrival order, so completions
+are statistically identical but not bitwise vs. the per-event engine;
+pod *attribution* of a task may differ when a busy pod frees mid-chunk
+(starts/completions unchanged); and on the failure path, re-dispatch
+order follows log order instead of pod order and a dead pod's
+already-executed busy time stays in the zone-level metric (the per-event
+path drops the pod's whole busy history).
 """
 from __future__ import annotations
 
@@ -31,7 +49,9 @@ import numpy as np
 
 from repro.cluster.topology import Node, Topology, paper_topology
 from repro.core.metrics import Snapshot
-from repro.sim import SimCore
+from repro.sim import (ArrayServerPool, CompletionLog, SimCore,
+                       WindowAccumulator, drain_window)
+from repro.workloads.fleet_scale import WindowedArrivals
 
 
 @dataclasses.dataclass
@@ -103,6 +123,9 @@ class ClusterSim:
         self.samples = self.core.exporter.samples
         self.replica_log: dict[str, list[tuple[float, int]]] = defaultdict(list)
         self.rir_log: dict[str, list[tuple[float, float]]] = defaultdict(list)
+        # fleet-scale batch mode (activated by run(WindowedArrivals, ...))
+        self._vec = False
+        self.completed_log: CompletionLog | None = None
 
     # ------------------------------------------------------------ pods -----
     def _schedule_pod(self, zone: str, t: float) -> PodState | None:
@@ -127,12 +150,31 @@ class ClusterSim:
         self.core.pool(pod.zone).invalidate(pod)
 
     def zone_pods(self, zone: str, t: float | None = None):
+        if self._vec:
+            pool = self._apools.get(zone)
+            if pool is None:
+                return []
+            slots = pool.live_slots()
+            if t is not None:
+                slots = slots[pool.ready[slots] <= t]
+            lst = self._slot_pod[zone]
+            return [lst[s] for s in slots]
         ps = self.core.live(zone)
         if t is not None:
             ps = [p for p in ps if p.available(t)]
         return ps
 
+    def _n_live(self, zone: str) -> int:
+        """Live-pod count without materialising the pod list (the control
+        loop calls this every tick; at 10⁵ pods a list build is O(P))."""
+        if self._vec:
+            pool = self._apools.get(zone)
+            return pool.n_live if pool is not None else 0
+        return len(self.zone_pods(zone))
+
     def scale_to(self, zone: str, n: int, t: float):
+        if self._vec:
+            return self._vec_scale_to(zone, n, t)
         cur = self.core.live(zone)
         if len(cur) < n:
             for _ in range(n - len(cur)):
@@ -147,6 +189,15 @@ class ClusterSim:
         """Mark current pods ready at ``t`` (pre-warmed initial capacity —
         the paper's runs start with warm pods, startup latency applies only
         to scale-ups)."""
+        if self._vec:
+            for z in ([zone] if zone is not None else list(self._apools)):
+                pool = self._apools[z]
+                slots = pool.live_slots()
+                pool.make_ready(slots, t)
+                lst = self._slot_pod[z]
+                for s in slots:
+                    lst[s].ready_at = lst[s].free_at = t
+            return
         pods = self.pods if zone is None else self.core.by_group[zone]
         for p in pods:
             if not p.dead and not p.draining:
@@ -195,6 +246,8 @@ class ClusterSim:
         self.core.events.push(t + duration, "slow", node=node_name, factor=1.0)
 
     def _apply_events(self, t: float):
+        if self._vec:
+            return self._vec_apply_events(t)
         for _, kind, arg in self.core.events.pop_due(t):
             node = next(n for n in self.topo.nodes if n.name == arg["node"])
             if kind == "fail":
@@ -228,6 +281,8 @@ class ClusterSim:
     # --------------------------------------------------------- metrics -----
     def sample_zone(self, zone: str, t: float) -> Snapshot:
         """Window [t-w, t) exporter readout -> [CPU, RAM, NetIn, NetOut, rate]."""
+        if self._vec:
+            return self._vec_sample_zone(zone, t)
         w = self.cfg.control_interval_s
         exporter = self.core.exporter
         win = exporter.window_index(t)
@@ -267,7 +322,14 @@ class ClusterSim:
         ``bindings`` is either a list of per-zone ``AutoscalerBinding`` (the
         paper's one-loop-per-target layout) or a batched ``FleetController``
         (core/controller.py) driving all its targets with a single forecast
-        dispatch per tick."""
+        dispatch per tick.
+
+        ``tasks`` may instead be a ``WindowedArrivals`` trace, which
+        switches the whole run onto the fleet-scale vectorised path:
+        completions land in ``self.completed_log`` (a structured-numpy
+        ``CompletionLog``) rather than ``self.completed``."""
+        if isinstance(tasks, WindowedArrivals):
+            self._vec_init(tasks)
         if getattr(bindings, "is_batched", False):
             controller = bindings
             zone_min = {z: controller.min_replicas(z)
@@ -279,6 +341,8 @@ class ClusterSim:
         for zone, min_rep in zone_min.items():
             self.scale_to(zone, max(initial_replicas, min_rep), 0.0)
             self.make_ready_now(zone)        # initial pods are ready at t=0
+        if self._vec:
+            return self._drive_vec(tasks, t_end, control_tick)
         return self._drive(tasks, t_end, control_tick)
 
     def _drive(self, tasks, t_end: float, control_tick):
@@ -306,7 +370,7 @@ class ClusterSim:
         def control_tick(tick: float):
             for b in bindings:
                 snap = self.sample_zone(b.zone, tick)
-                cur = len(self.zone_pods(b.zone))
+                cur = self._n_live(b.zone)
                 max_rep = self.topo.max_replicas(b.zone, self.cfg.pod_cpu_m)
                 if b.kind == "ppa":
                     b.scaler.observe(snap)
@@ -328,7 +392,7 @@ class ClusterSim:
             cur, max_r = {}, {}
             for z in zone_min:
                 controller.observe(z, self.sample_zone(z, tick))
-                cur[z] = len(self.zone_pods(z))
+                cur[z] = self._n_live(z)
                 max_r[z] = self.topo.max_replicas(z, self.cfg.pod_cpu_m)
             results = controller.control_step(tick, max_r, cur)
             for z in zone_min:
@@ -338,8 +402,268 @@ class ClusterSim:
             controller.maybe_update(tick)
         return control_tick
 
+    # ===================================================================== #
+    #  Fleet-scale vectorised path (DESIGN.md §3, "Fleet scale")            #
+    # ===================================================================== #
+    def _vec_init(self, arr: WindowedArrivals):
+        if self.pods:
+            raise ValueError("batch mode must start from an empty sim")
+        cfg = self.cfg
+        if abs(arr.window_s - cfg.control_interval_s) > 1e-9:
+            raise ValueError("WindowedArrivals.window_s must equal "
+                             "control_interval_s")
+        self._vec = True
+        self._kind_names = arr.kind_names
+        # same rule as _service_time: 'sort' gets sort_service_s, any
+        # other kind gets eigen_service_s
+        self._kind_base = np.array([cfg.sort_service_s if k == "sort"
+                                    else cfg.eigen_service_s
+                                    for k in arr.kind_names])
+        self.completed_log = CompletionLog()
+        self._apools: dict[str, ArrayServerPool] = {}
+        self._slot_pod: dict[str, list[PodState]] = {}
+        self._slot_speed: dict[str, np.ndarray] = {}
+        self._slot_created: dict[str, np.ndarray] = {}
+        self._slot_node: dict[str, np.ndarray] = {}
+        self._slot_pid: dict[str, np.ndarray] = {}
+        self._znodes: dict[str, list[Node]] = {}
+        self._znode_free: dict[str, np.ndarray] = {}
+        self._zone_busy: dict[str, WindowAccumulator] = {}
+        self._zone_code: dict[str, int] = {}
+        self._pid_slot: dict[int, tuple[str, int]] = {}
+
+    def _vec_zone(self, zone: str) -> ArrayServerPool:
+        if zone not in self._apools:
+            self._apools[zone] = ArrayServerPool()
+            self._slot_pod[zone] = []
+            self._slot_speed[zone] = np.ones(64)
+            self._slot_created[zone] = np.zeros(64)
+            self._slot_node[zone] = np.zeros(64, np.int64)
+            self._slot_pid[zone] = np.full(64, -1, np.int64)
+            self._znodes[zone] = list(self.topo.zone_nodes(zone))
+            self._znode_free[zone] = np.array(
+                [float(n.free_m) for n in self._znodes[zone]])
+            self._zone_busy[zone] = WindowAccumulator(
+                self.cfg.control_interval_s)
+            self._zone_code.setdefault(zone, len(self._zone_code))
+        return self._apools[zone]
+
+    def _vec_append_slot(self, zone: str, slot: int, speed: float,
+                         created: float, node_idx: int, pid: int):
+        for name in ("_slot_speed", "_slot_created", "_slot_node",
+                     "_slot_pid"):
+            arrs = getattr(self, name)
+            arr = arrs[zone]
+            if slot >= len(arr):
+                buf = np.zeros(len(arr) * 2, arr.dtype)
+                buf[:len(arr)] = arr
+                arrs[zone] = buf
+        self._slot_speed[zone][slot] = speed
+        self._slot_created[zone][slot] = created
+        self._slot_node[zone][slot] = node_idx
+        self._slot_pid[zone][slot] = pid
+
+    def _vec_schedule_pod(self, zone: str, t: float) -> int | None:
+        """Array-mode pod scheduling: argmax over the zone's node free-CPU
+        array (same first-max choice as the seed's ``max(free_m)`` scan,
+        O(nodes) in numpy instead of a Python node loop per pod)."""
+        pool = self._vec_zone(zone)
+        free = self._znode_free[zone]
+        if free.size == 0:
+            return None
+        ni = int(np.argmax(free))
+        if free[ni] < self.cfg.pod_cpu_m:
+            return None
+        node = self._znodes[zone][ni]
+        node.alloc_m += self.cfg.pod_cpu_m
+        free[ni] -= self.cfg.pod_cpu_m
+        pod = PodState(self._next_pid, zone, node, self.cfg.pod_cpu_m,
+                       created=t, ready_at=t + self.cfg.startup_s,
+                       free_at=t + self.cfg.startup_s)
+        self._next_pid += 1
+        slot = pool.add(t, key=pod.free_at, ready_at=pod.ready_at)
+        self._vec_append_slot(zone, slot, node.speed_factor, t, ni, pod.pid)
+        self._slot_pod[zone].append(pod)
+        self._pid_slot[pod.pid] = (zone, slot)
+        self.pods.append(pod)
+        return slot
+
+    def _vec_drain_slot(self, zone: str, slot: int):
+        pod = self._slot_pod[zone][slot]
+        pod.draining = True
+        ni = int(self._slot_node[zone][slot])
+        node = self._znodes[zone][ni]
+        node.alloc_m -= pod.cpu_m
+        if not node.failed:
+            self._znode_free[zone][ni] = float(node.free_m)
+        self._apools[zone].invalidate(slot)
+
+    def _vec_scale_to(self, zone: str, n: int, t: float):
+        pool = self._vec_zone(zone)
+        cur = pool.n_live
+        if cur < n:
+            for _ in range(n - cur):
+                if self._vec_schedule_pod(zone, t) is None:
+                    break
+        elif cur > n:
+            # newest-created first, creation order within equal created —
+            # the same choice as the heap path's stable sort on -created
+            slots = pool.live_slots()
+            order = np.argsort(-self._slot_created[zone][slots],
+                               kind="stable")
+            for s in slots[order][:cur - n]:
+                self._vec_drain_slot(zone, int(s))
+
+    # -------------------------------------------------- batched dispatch --
+    def _vec_dispatch_window(self, zone: str, times: np.ndarray,
+                             kinds: np.ndarray):
+        """Drain one (window, zone) arrival chunk through the array pool:
+        vectorised idle rounds, batch completion logging, batch busy
+        accounting — the per-event Python loop amortised away."""
+        pool = self._vec_zone(zone)
+        cfg = self.cfg
+
+        def service_fn(slots, i0, i1):
+            jit = self.rng.lognormal(0.0, cfg.service_jitter, i1 - i0)
+            speed = self._slot_speed[zone]      # re-read: on_cold may grow
+            return (self._kind_base[kinds[i0:i1]] * jit
+                    / np.maximum(speed[slots], 1e-3))
+
+        def on_cold(t):
+            s = self._vec_schedule_pod(zone, t)
+            return -1 if s is None else s
+
+        slots, starts, comps, svcs = drain_window(
+            pool, times, service_fn, on_cold, cold_timeout_s=60.0)
+        ok = slots >= 0
+        self._zone_busy[zone].add_batch(starts[ok], comps[ok])
+        pids = np.full(len(slots), -1, np.int64)
+        pids[ok] = self._slot_pid[zone][slots[ok]]
+        self.completed_log.append_batch(times, starts, comps, svcs, pids,
+                                        kinds, self._zone_code[zone])
+        self.core.exporter.count(zone, int(np.count_nonzero(ok)))
+
+    def _drive_vec(self, arr: WindowedArrivals, t_end: float, control_tick):
+        cfg = self.cfg
+        ticks = np.arange(cfg.control_interval_s, t_end,
+                          cfg.control_interval_s)
+        for j, tick in enumerate(ticks):
+            self._apply_events(float(tick))
+            for zone, times, kinds in arr.window_chunks(j + 1):
+                self._vec_dispatch_window(zone, times, kinds)
+            self.completed_log.seal_window()
+            control_tick(float(tick))
+        # exclusive lower bound: with no ticks at all, drain from t=0 too
+        t_last = float(ticks[-1]) if len(ticks) else -1.0
+        for zone, times, kinds in arr.tail_chunks(t_last, t_end):
+            self._vec_dispatch_window(zone, times, kinds)
+        self.completed_log.seal_window()
+        return self
+
+    # ------------------------------------------------- failures, metrics --
+    def _vec_redispatch(self, rows: np.ndarray, t: float):
+        """Re-dispatch orphaned completion-log rows in place."""
+        log = self.completed_log
+        zone_of = {c: z for z, c in self._zone_code.items()}
+        for r in rows:
+            zone = zone_of[int(log.view()["group"][r])]
+            pool = self._apools[zone]
+            slot = pool.select(t)
+            if slot < 0:
+                s = self._vec_schedule_pod(zone, t)
+                slot = -1 if s is None else s
+            if slot < 0:
+                log.amend(r, start=np.nan, completion=t + 60.0,
+                          service=np.nan, server=-1, redispatched=True)
+                continue
+            start = max(t, float(pool.key[slot]), float(pool.ready[slot]))
+            kind = int(log.view()["kind"][r])
+            jit = float(self.rng.lognormal(0.0, self.cfg.service_jitter))
+            speed = max(float(self._slot_speed[zone][slot]), 1e-3)
+            service = float(self._kind_base[kind]) * jit / speed
+            comp = start + service
+            pool.key[slot] = comp
+            self._zone_busy[zone].add(start, comp)
+            log.amend(r, start=start, completion=comp, service=service,
+                      server=int(self._slot_pid[zone][slot]),
+                      redispatched=True)
+            self.core.exporter.count(zone)
+
+    def _vec_apply_events(self, t: float):
+        for _, kind, arg in self.core.events.pop_due(t):
+            node = next(n for n in self.topo.nodes if n.name == arg["node"])
+            zone = node.zone
+            known = zone in self._znodes and node in self._znodes[zone]
+            if kind == "fail":
+                node.failed = True
+                if not known:
+                    continue
+                ni = self._znodes[zone].index(node)
+                self._znode_free[zone][ni] = 0.0
+                pool = self._apools[zone]
+                on_node = np.flatnonzero(
+                    self._slot_node[zone][:pool.n] == ni)
+                lst = self._slot_pod[zone]
+                victims = [int(s) for s in on_node if not lst[s].dead]
+                for s in victims:
+                    pod = lst[s]
+                    pod.dead = True
+                    if not pod.draining:
+                        node.alloc_m -= pod.cpu_m
+                if victims:
+                    pool.invalidate(np.asarray(victims))
+                    vpids = self._slot_pid[zone][victims]
+                    rows = self.completed_log.view()
+                    orphan = np.flatnonzero(
+                        np.isin(rows["server"], vpids)
+                        & (rows["completion"] > t) & ~rows["redispatched"])
+                    if orphan.size:
+                        # cancel the un-executed remainder of each orphan's
+                        # old interval, then re-dispatch in log order
+                        st = np.maximum(rows["start"][orphan], t)
+                        self._zone_busy[zone].add_batch(
+                            st, rows["completion"][orphan], sign=-1.0)
+                        self._vec_redispatch(orphan, t)
+            elif kind == "recover":
+                node.failed = False
+                if known:
+                    ni = self._znodes[zone].index(node)
+                    self._znode_free[zone][ni] = float(node.free_m)
+            elif kind == "slow":
+                node.speed_factor = arg["factor"]
+                if known:
+                    ni = self._znodes[zone].index(node)
+                    pool = self._apools[zone]
+                    on_node = self._slot_node[zone][:pool.n] == ni
+                    self._slot_speed[zone][:pool.n][on_node] = arg["factor"]
+
+    def _vec_sample_zone(self, zone: str, t: float) -> Snapshot:
+        cfg = self.cfg
+        w = cfg.control_interval_s
+        exporter = self.core.exporter
+        win = exporter.window_index(t)
+        pool = self._vec_zone(zone)
+        busy_s = self._zone_busy[zone].get(win)
+        cpu_used_m = busy_s / w * cfg.pod_cpu_m
+        busy_avg = cpu_used_m / max(cfg.pod_cpu_m, 1)
+        ram = cfg.ram_per_pod_mb * busy_avg
+        n_req = exporter.take_count(zone)
+        rate = n_req / w
+        net_in, net_out = n_req * 2.0, n_req * 1.0
+        requested = cfg.pod_cpu_m * pool.ready_live_count(t)
+        if requested > 0:
+            rir = max(requested - cpu_used_m, 0.0) / requested
+            self.rir_log[zone].append((t, rir))
+        raw = np.array([cpu_used_m, ram, net_in, net_out, rate])
+        return Snapshot(t, exporter.push(zone, t, raw))
+
     # ------------------------------------------------------------ stats ----
     def response_times(self, kind: str | None = None) -> np.ndarray:
+        if self._vec:
+            if kind is not None and kind not in self._kind_names:
+                return np.zeros(0)           # same as the per-event path
+            kc = None if kind is None else self._kind_names.index(kind)
+            return np.asarray(self.completed_log.response_times(kc))
         ts = [t.response for t in self.completed
               if (kind is None or t.kind == kind) and math.isfinite(t.completion)]
         return np.asarray(ts)

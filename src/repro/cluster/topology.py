@@ -56,3 +56,19 @@ def paper_topology(n_edge_zones: int = 2) -> Topology:
         nodes += [Node(f"edge{z}-{i}", f"edge-{z}", 2000, 2048)
                   for i in range(2)]
     return Topology(nodes)
+
+
+def fleet_topology(pods_per_zone: int, zones: list[str] | None = None,
+                   pods_per_node: int = 64, pod_cpu_m: int = 500) -> Topology:
+    """Fleet-scale topology: enough homogeneous worker nodes per zone to
+    host ``pods_per_zone`` pods of ``pod_cpu_m`` each (DESIGN.md §3,
+    "Fleet scale" — the 10⁴–10⁵-pod bench substrate).  Node size is
+    expressed in pods (64 x 500m = a 32-core worker)."""
+    zones = zones or ["fleet-0"]
+    node_cpu_m = pods_per_node * pod_cpu_m
+    n_nodes = -(-pods_per_zone // pods_per_node)    # ceil
+    nodes = []
+    for z in zones:
+        nodes += [Node(f"{z}-n{i}", z, node_cpu_m, node_cpu_m // 2)
+                  for i in range(n_nodes)]
+    return Topology(nodes)

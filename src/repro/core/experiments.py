@@ -17,7 +17,6 @@ from repro.cluster import (AutoscalerBinding, ClusterSim, SimConfig,
                            paper_topology)
 from repro.core import (HPA, PPA, PPAConfig, MetricsHistory, ThresholdPolicy,
                         Updater, UpdatePolicy, make_forecaster)
-from repro.workloads import random_access
 
 ZONES = ("edge-0", "edge-1", "cloud")
 

@@ -21,7 +21,6 @@ stacks the parameter pytrees and vmaps the forward — still one dispatch.
 from __future__ import annotations
 
 import functools
-import json
 import pickle
 from pathlib import Path
 

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
 
 import numpy as np
 
@@ -19,7 +18,7 @@ from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import Forecaster
 from repro.core.metrics import MetricsHistory, Snapshot
 from repro.core.policies import Policy
-from repro.core.updater import Updater, UpdatePolicy
+from repro.core.updater import Updater
 
 
 @dataclasses.dataclass

@@ -9,7 +9,6 @@ accumulator keeps SGD/Adam convergence (Seide et al. / 1-bit Adam lineage).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

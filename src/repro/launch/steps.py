@@ -6,17 +6,15 @@ by both the dry-run and the real launchers.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.distributed.sharding import named_sharding, logical_to_pspec
 from repro.launch import specs as SP
-from repro.models.params import Spec, abstract_params, tree_axes
+from repro.models.params import abstract_params
 from repro.models.registry import build_model
-from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.optimizer import AdamWConfig, adamw_update
 
 
 def _replicated(mesh):

@@ -17,7 +17,6 @@ Positions are absolute: q_offset is the position of q[:, 0]; kv positions are
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -117,7 +116,7 @@ def blocked_attention(q, k, v, *, causal=True, window=None, cap=None,
         a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
 
         def kv_step(carry, kv):
-            mprev, l, acc = carry
+            mprev, lse, acc = carry
             j, kblk, vblk = kv
             k_pos = (first + j) * block_kv + jnp.arange(block_kv)
             s = _scores(qblk, kblk, scale, cap)          # (B,Hkv,G,bq,bkv)
@@ -127,11 +126,11 @@ def blocked_attention(q, k, v, *, causal=True, window=None, cap=None,
             mnew = jnp.maximum(mprev, s.max(-1))
             p = jnp.exp(s - mnew[..., None])
             alpha = jnp.exp(mprev - mnew)
-            l = l * alpha + p.sum(-1)
+            lse = lse * alpha + p.sum(-1)
             pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
                             preferred_element_type=jnp.float32)
             acc = acc * alpha[..., None] + pv
-            return (mnew, l, acc), None
+            return (mnew, lse, acc), None
 
         (mf, lf, af), _ = jax.lax.scan(
             kv_step, (m0, l0, a0), (jnp.arange(nw), kwin, vwin))

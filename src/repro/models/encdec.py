@@ -10,18 +10,16 @@ the encoder output at prefill time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.attention import attention, decode_attention
+from repro.models.attention import attention
 from repro.models.params import Spec, init_params, abstract_params
 from repro.models.transformer import (
-    attn_specs, mlp_specs_full, attn_sublayer, mlp_sublayer, _qkv,
-    _cache_append, _quant_kv)
+    attn_specs, mlp_specs_full, attn_sublayer, mlp_sublayer)
 
 
 def cross_attn_specs(cfg: ModelConfig) -> dict:

@@ -19,7 +19,6 @@ params and is index-selected inside the scan body.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -1,3 +1,5 @@
 from repro.serving.engine import DecodeEngine
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.fleet import ServingFleet, FleetConfig
+from repro.serving.multi_fleet import (ChipBudgetArbiter, FleetSpec,
+                                       MultiFleetSim)

@@ -79,6 +79,7 @@ class ServeRequest:
 class ServingFleet:
     def __init__(self, cfg: FleetConfig | None = None):
         self.cfg = cfg or FleetConfig()
+        self.chip_budget = self.cfg.total_chips
         self.core = SimCore(self.cfg.control_interval_s, two_phase=False,
                             ma_windows=1)
         self.replicas: list[_Replica] = self.core.servers
@@ -93,7 +94,16 @@ class ServingFleet:
     # ----------------------------------------------------------- scaling ---
     @property
     def max_replicas(self) -> int:
-        return self.cfg.total_chips // self.cfg.chips_per_replica
+        return self.chip_budget // self.cfg.chips_per_replica
+
+    def set_chip_budget(self, chips: int, t: float):
+        """Re-point this fleet's chip allocation (the multi-fleet arbiter's
+        per-tick lever, serving/multi_fleet.py).  Shrinking below current
+        usage drains the newest replicas immediately."""
+        self.chip_budget = int(chips)
+        cur = len(self.core.live(_GROUP))
+        if cur > self.max_replicas:
+            self.scale_to(self.max_replicas, t)
 
     @staticmethod
     def _effective(r: _Replica) -> float:

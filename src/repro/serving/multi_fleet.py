@@ -1,0 +1,206 @@
+"""Multi-fleet serving: several ``ServingFleet`` pools sharing one chip budget.
+
+The single-fleet model (serving/fleet.py) bounds replicas by its own chip
+budget — Algorithm 1's "max_replicas limited by system resources" with chips
+as the resource.  At production scale the binding constraint moves up a
+level: *many* model fleets (chat, code, embeddings, ...) contend for one
+accelerator pool, and the interesting control problem is reallocating chips
+*between* fleets as their load curves move out of phase.
+
+``MultiFleetSim`` drives N fleets from one batched ``FleetController``
+(DESIGN.md §5 — one forecast dispatch answers every fleet per tick) and a
+``ChipBudgetArbiter`` that turns the controller's per-fleet replica demands
+into a feasible chip allocation each tick:
+
+1. every fleet is granted its floor (``min_replicas`` worth of chips);
+2. if the remaining demand fits the remaining budget, grant it all;
+3. otherwise split the remaining chips in proportion to ``weight x excess
+   demand``, in whole-replica units, largest-remainder rounding (ties by
+   fleet order) — deterministic, so seeded runs reproduce exactly.
+
+The arbiter is deliberately myopic (per-tick, no carry-over): fairness over
+time comes from the forecaster seeing each fleet's future, not from debt
+bookkeeping.  Grants are the *scheduling* invariant (never exceed the
+budget); when a shrink drains replicas, the drained replicas finish their
+in-flight requests first — the same graceful-termination transient a
+Kubernetes drain has — so instantaneous live occupancy (``chips_in_use``,
+``usage_log``) can briefly exceed a fleet's new grant during handover.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.serving.fleet import FleetConfig, ServingFleet
+
+
+@dataclasses.dataclass
+class FleetSpec:
+    """One named fleet under the shared budget."""
+
+    name: str
+    cfg: FleetConfig
+    weight: float = 1.0  # arbiter priority under contention
+
+
+class ChipBudgetArbiter:
+    """Deterministic per-tick chip allocation across contending fleets."""
+
+    def __init__(self, total_chips: int):
+        self.total_chips = int(total_chips)
+
+    def allocate(
+        self,
+        demands: dict[str, int],
+        chips_per: dict[str, int],
+        floors: dict[str, int],
+        weights: dict[str, float],
+    ) -> dict[str, int]:
+        """Map per-fleet replica demands to granted chips.
+
+        ``demands``/``floors`` are replica counts, ``chips_per`` the chip
+        cost of one replica.  Returns whole-replica chip grants summing to
+        at most ``total_chips``.
+        """
+        names = list(demands)
+        grant = {n: min(floors[n], demands[n]) * chips_per[n] for n in names}
+        budget = self.total_chips - sum(grant.values())
+        if budget < 0:
+            raise ValueError("replica floors exceed the chip budget")
+        excess = {n: max(demands[n] - floors[n], 0) * chips_per[n] for n in names}
+        total_excess = sum(excess.values())
+        if total_excess <= budget:
+            for n in names:
+                grant[n] += excess[n]
+            return grant
+        # contention: weighted proportional share, whole replicas only.
+        # A fleet's share is capped at its own demand; the freed surplus
+        # cycles back (largest remainder first) until the budget is spent
+        # or every demand is met — no chips sit idle while demand is unmet.
+        wsum = sum(weights[n] * excess[n] for n in names)
+        shares = {n: budget * weights[n] * excess[n] / wsum for n in names}
+        cap_reps = {n: excess[n] // chips_per[n] for n in names}
+        extra_reps = {}
+        order = []
+        for n in names:
+            reps = min(int(shares[n] // chips_per[n]), cap_reps[n])
+            extra_reps[n] = reps
+            frac = shares[n] / chips_per[n] - reps
+            order.append((-frac, names.index(n), n))
+        left = budget - sum(extra_reps[n] * chips_per[n] for n in names)
+        order.sort()
+        progressed = True
+        while left > 0 and progressed:
+            progressed = False
+            for _, _, n in order:
+                if extra_reps[n] < cap_reps[n] and left >= chips_per[n]:
+                    extra_reps[n] += 1
+                    left -= chips_per[n]
+                    progressed = True
+        for n in names:
+            grant[n] += extra_reps[n] * chips_per[n]
+        return grant
+
+
+class MultiFleetSim:
+    """N discrete-event serving fleets + one batched controller + arbiter.
+
+    ``controller`` is a ``FleetController`` whose target names match the
+    fleet spec names (its per-target ``min_replicas`` are the arbiter
+    floors).  Each tick: per-fleet metrics -> one batched ``control_step``
+    -> arbiter -> ``set_chip_budget`` + ``scale_to`` per fleet.
+    """
+
+    def __init__(self, specs: list[FleetSpec], total_chips: int, controller):
+        if not specs:
+            raise ValueError("MultiFleetSim needs at least one fleet")
+        names = {s.name for s in specs}
+        if names != set(controller.target_names):
+            raise ValueError("controller targets must match fleet names")
+        self.specs = {s.name: s for s in specs}
+        self.controller = controller
+        self.arbiter = ChipBudgetArbiter(total_chips)
+        self.fleets = {s.name: ServingFleet(s.cfg) for s in specs}
+        self.alloc_log: list[tuple[float, dict[str, int]]] = []
+        self.usage_log: list[tuple[float, int]] = []  # live-chip occupancy
+        w = {s.cfg.control_interval_s for s in specs}
+        if len(w) != 1:
+            raise ValueError("fleets must share one control interval")
+        self.window_s = w.pop()
+
+    def chips_in_use(self) -> int:
+        return sum(
+            len(f.live_replicas()) * f.cfg.chips_per_replica
+            for f in self.fleets.values()
+        )
+
+    def run(
+        self, requests: dict[str, list[tuple[float, int]]], t_end: float
+    ) -> "MultiFleetSim":
+        """``requests``: per-fleet sorted (arrival_t, n_tokens) lists."""
+        ctrl = self.controller
+        for n, f in self.fleets.items():
+            f.set_chip_budget(self.arbiter.total_chips, 0.0)
+            f.scale_to(ctrl.min_replicas(n), 0.0)
+            f.make_ready_now(0.0)
+        idx = {n: 0 for n in self.fleets}
+        ticks = np.arange(self.window_s, t_end, self.window_s)
+        for tick in ticks:
+            tick = float(tick)
+            cur, max_r = {}, {}
+            for n, f in self.fleets.items():
+                f._apply_events(tick)
+                idx[n] = self._dispatch_until(n, tick, idx[n], requests)
+                ctrl.observe(n, f.sample(tick))
+                cur[n] = len(f.live_replicas())
+                max_r[n] = self.arbiter.total_chips // f.cfg.chips_per_replica
+            results = ctrl.control_step(tick, max_r, cur)
+            demands = {
+                n: max(results[n].replicas, ctrl.min_replicas(n))
+                for n in self.fleets
+            }
+            grant = self.arbiter.allocate(
+                demands,
+                {n: f.cfg.chips_per_replica for n, f in self.fleets.items()},
+                {n: ctrl.min_replicas(n) for n in self.fleets},
+                {n: self.specs[n].weight for n in self.fleets},
+            )
+            for n, f in self.fleets.items():
+                f.set_chip_budget(grant[n], tick)
+                granted_reps = grant[n] // f.cfg.chips_per_replica
+                f.scale_to(min(demands[n], granted_reps), tick)
+                f.replica_log.append((tick, granted_reps))
+            self.alloc_log.append((tick, grant))
+            self.usage_log.append((tick, self.chips_in_use()))
+            ctrl.maybe_update(tick)
+        for n in self.fleets:
+            idx[n] = self._dispatch_until(n, t_end, idx[n], requests)
+        return self
+
+    def _dispatch_until(self, name, t, i, requests) -> int:
+        from repro.serving.fleet import ServeRequest
+
+        reqs = requests.get(name, [])
+        fleet = self.fleets[name]
+        while i < len(reqs) and reqs[i][0] <= t:
+            at, ntok = reqs[i]
+            fleet.dispatch(ServeRequest(at, ntok), at)
+            i += 1
+        return i
+
+    # ----------------------------------------------------------- stats ----
+    def response_times(self, name: str | None = None) -> np.ndarray:
+        fleets = [self.fleets[name]] if name else list(self.fleets.values())
+        out = [
+            r.response
+            for f in fleets
+            for r in f.completed
+            if math.isfinite(r.completion)
+        ]
+        return np.asarray(out)
+
+    def peak_chips(self) -> int:
+        return max((sum(g.values()) for _, g in self.alloc_log), default=0)

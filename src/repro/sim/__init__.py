@@ -2,4 +2,6 @@
 # Kubernetes cluster simulator (repro.cluster) and the TPU serving fleet
 # (repro.serving.fleet) are thin domain adapters over this core.
 from repro.sim.events import EventQueue
-from repro.sim.core import ServerPool, SimCore, WindowedExporter, account_busy
+from repro.sim.core import (ArrayServerPool, CompletionLog, ServerPool,
+                            SimCore, WindowAccumulator, WindowedExporter,
+                            account_busy, drain_window)

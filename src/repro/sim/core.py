@@ -38,6 +38,25 @@ The seed engines selected a server for every task with an O(P) scan
 The pool is duck-typed: any object with ``dead``/``draining`` attributes can
 be registered; pool bookkeeping lives in ``_pool_*`` attributes attached at
 registration.
+
+Fleet-scale layer (DESIGN.md §3, "Fleet scale"): the heap path above is
+O(log P) per dispatch but still pays one Python iteration per event, which
+caps experiments around 10³ servers.  For 10⁴–10⁵ servers the same
+selection semantics are re-implemented on flat numpy arrays:
+
+* ``ArrayServerPool`` — selection state (key / ready_at / live) in
+  preallocated arrays; same priority order as ``ServerPool`` (idle in
+  creation order -> earliest busy -> earliest pending);
+* ``drain_window`` — drains a sorted same-window arrival batch in
+  vectorised idle chunks (one numpy round per chunk instead of one Python
+  iteration per task); completion-sequence-exact vs. per-event dispatch
+  for a fixed pool with homogeneous server speeds (server *attribution*
+  may differ when a busy server frees mid-chunk — both candidates are
+  idle, so starts and completions are unchanged);
+* ``CompletionLog`` — preallocated structured-numpy completion log
+  (append-only, amortised O(1), slice-queryable by control window);
+* ``WindowAccumulator`` — vectorised per-window busy-time accounting
+  (``account_busy`` as array math over interval batches).
 """
 from __future__ import annotations
 
@@ -241,3 +260,310 @@ class SimCore:
 
     def account_busy(self, busy: dict, start: float, end: float):
         account_busy(busy, start, end, self.window_s)
+
+
+# ===================================================================== #
+#  Fleet-scale substrate: array-backed pool, log and accounting          #
+# ===================================================================== #
+
+COMPLETION_DTYPE = np.dtype([
+    ("arrival", np.float64),
+    ("start", np.float64),
+    ("completion", np.float64),
+    ("service", np.float64),
+    ("server", np.int64),        # domain server id (pod pid / replica rid)
+    ("kind", np.int16),          # workload kind code
+    ("group", np.int16),         # scaling-group (zone / fleet) code
+    ("redispatched", np.bool_),
+])
+
+
+class CompletionLog:
+    """Preallocated structured-numpy completion log.
+
+    Replaces the per-task Python object list on the fleet-scale path:
+    appends are amortised O(1) (capacity doubling), batch appends are one
+    array copy, redispatch mutates rows in place (``amend``), and the log
+    is slice-queryable by control window — the driver calls
+    ``seal_window`` once per tick and ``window_rows(w)`` returns the rows
+    dispatched in window ``w`` as a zero-copy view.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self._buf = np.zeros(max(int(capacity), 16), COMPLETION_DTYPE)
+        self.n = 0
+        self._offsets: list[int] = [0]   # row offset where window w begins
+
+    def _grow(self, need: int):
+        cap = len(self._buf)
+        while cap < need:
+            cap *= 2
+        if cap != len(self._buf):
+            buf = np.zeros(cap, COMPLETION_DTYPE)
+            buf[:self.n] = self._buf[:self.n]
+            self._buf = buf
+
+    # ------------------------------------------------------------ write --
+    def append_batch(self, arrival, start, completion, service, server,
+                     kind=0, group=0, redispatched=False) -> slice:
+        """Append ``len(arrival)`` rows at once; returns their row slice."""
+        k = len(arrival)
+        self._grow(self.n + k)
+        rows = self._buf[self.n:self.n + k]
+        rows["arrival"], rows["start"] = arrival, start
+        rows["completion"], rows["service"] = completion, service
+        rows["server"], rows["kind"] = server, kind
+        rows["group"], rows["redispatched"] = group, redispatched
+        out = slice(self.n, self.n + k)
+        self.n += k
+        return out
+
+    def append(self, arrival, start, completion, service, server,
+               kind=0, group=0) -> int:
+        self._grow(self.n + 1)
+        self._buf[self.n] = (arrival, start, completion, service, server,
+                             kind, group, False)
+        self.n += 1
+        return self.n - 1
+
+    def amend(self, idx, **fields):
+        """In-place row mutation (failure / straggler re-dispatch)."""
+        for name, val in fields.items():
+            self._buf[name][idx] = val
+
+    # ------------------------------------------------------------- read --
+    def seal_window(self):
+        """Mark the end of the current control window's appends."""
+        self._offsets.append(self.n)
+
+    def window_rows(self, w: int) -> np.ndarray:
+        """Rows dispatched in sealed window ``w`` (zero-copy view)."""
+        if w + 1 >= len(self._offsets):
+            return self._buf[self.n:self.n]
+        return self._buf[self._offsets[w]:self._offsets[w + 1]]
+
+    def view(self) -> np.ndarray:
+        return self._buf[:self.n]
+
+    def response_times(self, kind: int | None = None) -> np.ndarray:
+        rows = self.view()
+        mask = np.isfinite(rows["completion"])
+        if kind is not None:
+            mask &= rows["kind"] == kind
+        rows = rows[mask]
+        return rows["completion"] - rows["arrival"]
+
+    def __len__(self):
+        return self.n
+
+
+class WindowAccumulator:
+    """Vectorised per-window busy-time accounting for one scaling group.
+
+    The heap path credits [start, end) intervals into per-server Python
+    dicts (``account_busy``) and sums over servers at sample time — O(P)
+    per tick.  At fleet scale the exporter only ever reads the *group*
+    total, so this accumulates straight into a preallocated per-window
+    array: ``add_batch`` is a handful of numpy ops per interval-span
+    offset (service times rarely span more than 2 windows) and ``get`` is
+    O(1) at sample time.
+    """
+
+    def __init__(self, window_s: float, n_windows: int = 256):
+        self.window_s = window_s
+        self._buf = np.zeros(max(int(n_windows), 8))
+
+    def _ensure(self, w: int):
+        if w >= len(self._buf):
+            cap = len(self._buf)
+            while cap <= w:
+                cap *= 2
+            buf = np.zeros(cap)
+            buf[:len(self._buf)] = self._buf
+            self._buf = buf
+
+    def add_batch(self, starts: np.ndarray, ends: np.ndarray,
+                  sign: float = 1.0):
+        """Credit (``sign=1``) or cancel (``sign=-1``) interval batches."""
+        if len(starts) == 0:
+            return
+        w = self.window_s
+        i0 = (np.asarray(starts) // w).astype(np.int64)
+        i1 = (np.asarray(ends) // w).astype(np.int64)
+        self._ensure(int(i1.max()))
+        for d in range(int((i1 - i0).max()) + 1):
+            win = i0 + d
+            m = win <= i1
+            if not m.any():
+                break
+            lo = np.maximum(starts[m], win[m] * w)
+            hi = np.minimum(ends[m], (win[m] + 1) * w)
+            contrib = np.maximum(hi - lo, 0.0)
+            np.add.at(self._buf, win[m], sign * contrib)
+
+    def add(self, start: float, end: float, sign: float = 1.0):
+        self.add_batch(np.asarray([start]), np.asarray([end]), sign)
+
+    def get(self, w: int) -> float:
+        return float(self._buf[w]) if 0 <= w < len(self._buf) else 0.0
+
+
+class ArrayServerPool:
+    """Flat-array server pool for fleet-scale groups (10⁴–10⁵ servers).
+
+    Selection state lives in preallocated numpy arrays instead of heaps of
+    Python tuples; slots are assigned in registration order, so the slot
+    index doubles as the seed's insertion-sequence tie-breaker.  The
+    selection priority is identical to ``ServerPool``:
+
+    - idle  (live, ``ready_at <= t``, ``key <= t``)  -> lowest slot;
+    - busy  (live, ``ready_at <= t``, ``key > t``)   -> min key, tie slot;
+    - pending (live, ``ready_at > t``)               -> min key, tie slot.
+
+    ``select`` is O(P) in numpy (the busy/overload fallback); the hot path
+    is ``idle_slots`` + caller-side vectorised chunk assignment
+    (``drain_window``), which amortises the per-event Python cost across
+    whole arrival chunks.
+    """
+
+    def __init__(self, capacity: int = 256):
+        cap = max(int(capacity), 16)
+        self.key = np.full(cap, np.inf)
+        self.ready = np.full(cap, np.inf)
+        self.live = np.zeros(cap, np.bool_)
+        self.n = 0
+        self.n_live = 0
+
+    def _grow(self):
+        cap = len(self.key) * 2
+        for name in ("key", "ready"):
+            buf = np.full(cap, np.inf)
+            buf[:self.n] = getattr(self, name)[:self.n]
+            setattr(self, name, buf)
+        live = np.zeros(cap, np.bool_)
+        live[:self.n] = self.live[:self.n]
+        self.live = live
+
+    # ------------------------------------------------------------ write --
+    def add(self, t: float, key: float, ready_at: float) -> int:
+        if self.n == len(self.key):
+            self._grow()
+        slot = self.n
+        self.key[slot] = key
+        self.ready[slot] = ready_at
+        self.live[slot] = True
+        self.n += 1
+        self.n_live += 1
+        return slot
+
+    def update(self, slot: int, key: float):
+        self.key[slot] = key
+
+    def invalidate(self, slots):
+        """Drain/death: drop slots from selection (vectorised)."""
+        slots = np.atleast_1d(slots)
+        was = self.live[slots]
+        self.live[slots] = False
+        self.n_live -= int(np.count_nonzero(was))
+
+    def make_ready(self, slots, t: float):
+        """Force slots ready-now (pre-warmed capacity)."""
+        slots = np.atleast_1d(slots)
+        self.ready[slots] = t
+        self.key[slots] = t
+
+    # ------------------------------------------------------------- read --
+    def live_slots(self) -> np.ndarray:
+        return np.flatnonzero(self.live[:self.n])
+
+    def ready_live_count(self, t: float) -> int:
+        return int(np.count_nonzero(self.live[:self.n]
+                                    & (self.ready[:self.n] <= t)))
+
+    def idle_slots(self, t: float, limit: int) -> np.ndarray:
+        """Live, ready and idle slots at ``t``, ascending slot order."""
+        m = (self.live[:self.n] & (self.ready[:self.n] <= t)
+             & (self.key[:self.n] <= t))
+        return np.flatnonzero(m)[:limit]
+
+    def select(self, t: float) -> int:
+        """Single-server selection with the exact ``ServerPool`` priority
+        (the overload / spin-up fallback path); -1 when the pool is empty."""
+        live = self.live[:self.n]
+        key, ready = self.key[:self.n], self.ready[:self.n]
+        ready_m = live & (ready <= t)
+        idle = np.flatnonzero(ready_m & (key <= t))
+        if idle.size:
+            return int(idle[0])
+        busy = np.flatnonzero(ready_m)
+        if busy.size:
+            return int(busy[np.argmin(key[busy])])
+        pend = np.flatnonzero(live & (ready > t))
+        if pend.size:
+            return int(pend[np.argmin(key[pend])])
+        return -1
+
+
+def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
+                 on_cold=None, cold_timeout_s: float = 60.0):
+    """Drain one window's sorted arrival batch through an array pool in
+    vectorised idle chunks.
+
+    Each round gathers every idle slot at the chunk head's arrival time
+    and assigns the next ``k`` arrivals to them in (arrival order ->
+    creation order) — one numpy round instead of ``k`` Python dispatches.
+    A slot idle at the chunk head stays idle until assigned, so every
+    chunk task starts at its own arrival time, exactly as per-event
+    dispatch; when no slot is idle the round falls back to exact
+    single-task selection (min-key busy server, then pending).  With
+    homogeneous server speeds the resulting (start, service, completion)
+    sequence is *identical* to one-at-a-time dispatch for a fixed pool
+    (tests/test_fleet_scale.py property-checks this, overload included).
+
+    ``service_fn(slots, i0, i1)`` returns service times for tasks
+    ``i0:i1`` assigned to ``slots`` — it must draw any randomness for
+    tasks in index order so the RNG stream matches sequential dispatch
+    (numpy ``Generator`` batch draws equal scalar draws).  ``on_cold(t)``
+    may register a new server and return its slot (the cluster's
+    cold-zone safety net); tasks that still find no server get
+    ``slot == -1``, ``completion = t + cold_timeout_s`` and NaN
+    start/service, like the seed's dropped-task sentinel.
+
+    Returns ``(slots, starts, completions, services)`` arrays.
+    """
+    n = len(times)
+    slots = np.empty(n, np.int64)
+    starts = np.full(n, np.nan)
+    comps = np.empty(n, np.float64)
+    svcs = np.full(n, np.nan)
+    i = 0
+    while i < n:
+        t0 = float(times[i])
+        idle = pool.idle_slots(t0, n - i)
+        k = len(idle)
+        if k:
+            # idle slots at t0 stay idle until assigned: start == arrival
+            st = times[i:i + k]
+            sv = service_fn(idle, i, i + k)
+            cm = st + sv
+            pool.key[idle] = cm
+            slots[i:i + k] = idle
+            starts[i:i + k], comps[i:i + k] = st, cm
+            svcs[i:i + k] = sv
+            i += k
+            continue
+        s = pool.select(t0)
+        if s < 0 and on_cold is not None:
+            s = on_cold(t0)
+        if s < 0:
+            slots[i] = -1
+            comps[i] = t0 + cold_timeout_s
+            i += 1
+            continue
+        st = max(t0, float(pool.key[s]), float(pool.ready[s]))
+        sv = float(service_fn(np.asarray([s]), i, i + 1)[0])
+        pool.key[s] = st + sv
+        slots[i], starts[i] = s, st
+        comps[i], svcs[i] = st + sv, sv
+        i += 1
+    return slots, starts, comps, svcs

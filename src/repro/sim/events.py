@@ -22,6 +22,15 @@ class EventQueue:
     def push(self, t: float, kind: str, **payload):
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
+    def push_batch(self, ts, kind: str, payloads=None):
+        """Schedule one event per entry of ``ts`` (fleet-scale scenario
+        injection: arrays of failure/straggler times in one call).
+        ``payloads`` is an optional parallel list of payload dicts."""
+        for i, t in enumerate(ts):
+            payload = payloads[i] if payloads is not None else {}
+            heapq.heappush(self._heap,
+                           (float(t), next(self._seq), kind, payload))
+
     def pop_due(self, t: float) -> list[tuple[float, str, dict]]:
         """All events with fire time <= t, in (time, insertion) order."""
         fired = []

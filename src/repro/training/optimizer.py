@@ -7,7 +7,6 @@ decay match the standard AdamW definition.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,10 @@ def schedule(c: AdamWConfig, step: jax.Array) -> jax.Array:
 
 def adamw_init(params, c: AdamWConfig):
     dt = jnp.dtype(c.moments_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),
@@ -49,8 +51,8 @@ def adamw_init(params, c: AdamWConfig):
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def adamw_update(grads, state, params, c: AdamWConfig):

@@ -15,14 +15,12 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
                               save_checkpoint)
 from repro.configs.base import ModelConfig
 from repro.data import SyntheticLMData
-from repro.launch.steps import make_train_step, abstract_opt_state
-from repro.models.registry import build_model
+from repro.launch.steps import make_train_step
 from repro.training.optimizer import AdamWConfig, adamw_init
 
 

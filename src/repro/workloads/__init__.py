@@ -1,2 +1,3 @@
 from repro.workloads.random_access import random_access
 from repro.workloads.nasa import nasa_trace, nasa_requests
+from repro.workloads.fleet_scale import WindowedArrivals, poisson_arrivals

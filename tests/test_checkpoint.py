@@ -1,5 +1,4 @@
 """Checkpoint atomicity, roundtrip fidelity, garbage collection, async."""
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -2,9 +2,6 @@
 capacity limits, failure recovery and straggler behaviour."""
 import math
 
-import numpy as np
-import pytest
-
 from repro.cluster import AutoscalerBinding, ClusterSim, SimConfig, paper_topology
 from repro.core.hpa import HPA
 from repro.workloads import random_access
@@ -64,7 +61,6 @@ def test_node_failure_redispatches_tasks():
     sim = ClusterSim(paper_topology(), SimConfig(seed=0))
     sim.inject_node_failure(120.0, "edge0-0", recover_after=240.0)
     sim = _run(tasks, T, sim=sim)
-    n_redis = sum(1 for t in sim.completed if t.redispatched)
     finite = all(math.isfinite(t.completion) for t in sim.completed)
     assert finite
     failed_node = next(n for n in sim.topo.nodes if n.name == "edge0-0")

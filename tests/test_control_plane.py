@@ -9,10 +9,7 @@
   onto sibling pods of the same failed node, and node CPU accounting stays
   consistent (the seed engine got both wrong).
 """
-import math
-
 import numpy as np
-import pytest
 
 from repro.cluster import AutoscalerBinding, ClusterSim, SimConfig, paper_topology
 from repro.cluster.topology import Node, Topology

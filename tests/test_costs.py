@@ -3,7 +3,6 @@ UNROLLED config (scan bodies are undercounted by XLA — the reason the
 analytic model exists; see costs.py)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.costs import analytic_cell
 from repro.configs.base import ModelConfig, ShapeSpec

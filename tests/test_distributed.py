@@ -8,7 +8,6 @@ import sys
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.collectives import dequantize_int8, quantize_int8

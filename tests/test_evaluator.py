@@ -1,6 +1,5 @@
 """Property tests for Algorithm 1 (Evaluator) — the paper's five guarantees:
 proactive, limitation-aware, robust, model-agnostic, confidence-considered."""
-import math
 
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -1,0 +1,326 @@
+"""Fleet-scale sim layer (DESIGN.md §3, "Fleet scale"): array-backed
+completion log, vectorised arrival batching, and the multi-fleet chip
+arbiter.
+
+The load-bearing property: for a fixed pool with homogeneous node speeds,
+the batched drain produces the *identical* completion sequence as
+one-at-a-time dispatch — same RNG stream, same selection semantics —
+overload (busy/pending fallback) included.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import AutoscalerBinding, ClusterSim, SimConfig
+from repro.cluster.topology import fleet_topology
+from repro.core.hpa import HPA
+from repro.sim import ArrayServerPool, CompletionLog, WindowAccumulator
+from repro.sim.core import account_busy
+from repro.workloads import WindowedArrivals, poisson_arrivals
+
+
+def _fixed_bindings(zone, P):
+    return [AutoscalerBinding(zone, HPA(1e18, min_replicas=P), "hpa", P)]
+
+
+def _run_pair(P, t_end, rate, seed, svc=2.0):
+    """The same trace through the batched and the per-event engine."""
+    arr = poisson_arrivals(rate, t_end, 15.0, zone="z", seed=seed)
+    cfg = dict(seed=0, sort_service_s=svc)
+    vec = ClusterSim(fleet_topology(P, zones=["z"]), SimConfig(**cfg))
+    vec.run(arr, _fixed_bindings("z", P), t_end, initial_replicas=P)
+    tasks = [(float(t), "sort", "z") for t in arr.times]
+    leg = ClusterSim(fleet_topology(P, zones=["z"]), SimConfig(**cfg))
+    leg.run(tasks, _fixed_bindings("z", P), t_end, initial_replicas=P)
+    return vec, leg
+
+
+# ------------------------------------------------- batched == sequential ---
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    P=st.integers(2, 40),
+    load=st.floats(0.2, 2.5),  # > 1.0 exercises the busy/pending fallback
+)
+def test_batched_drain_identical_completion_sequence(seed, P, load):
+    svc = 2.0
+    rate = load * P / svc
+    vec, leg = _run_pair(P, 450.0, rate, seed, svc)
+    cv = vec.completed_log.view()["completion"]
+    cl = np.array([t.completion for t in leg.completed])
+    assert len(cv) == len(cl)
+    np.testing.assert_array_equal(cv, cl)
+    av = vec.completed_log.view()["arrival"]
+    al = np.array([t.arrival for t in leg.completed])
+    np.testing.assert_array_equal(av, al)
+
+
+def test_batched_drain_identical_seeded():
+    """Deterministic backstop for the hypothesis property (runs even when
+    hypothesis is not installed), overloaded and underloaded."""
+    for seed, load in [(1, 0.5), (2, 1.8), (3, 0.9)]:
+        P = 20
+        vec, leg = _run_pair(P, 600.0, load * P / 2.0, seed)
+        np.testing.assert_array_equal(
+            vec.completed_log.view()["completion"],
+            np.array([t.completion for t in leg.completed]),
+        )
+
+
+def test_batched_metrics_match_per_event_engine():
+    """Exporter samples, RIR and replica logs agree with the per-event
+    engine on a dynamic (HPA-scaled) run."""
+    P = 16
+    svc = 2.0
+    arr = poisson_arrivals(3.0, 900.0, 15.0, zone="z", seed=7)
+
+    def binds():
+        return [AutoscalerBinding("z", HPA(800.0, min_replicas=2), "hpa", 2)]
+
+    def sim():
+        return ClusterSim(
+            fleet_topology(P, zones=["z"]), SimConfig(seed=0, sort_service_s=svc)
+        )
+
+    vec = sim().run(arr, binds(), 900.0, initial_replicas=2)
+    tasks = [(float(t), "sort", "z") for t in arr.times]
+    leg = sim().run(tasks, binds(), 900.0, initial_replicas=2)
+    sv = np.stack([v for _, v in vec.samples["z"]])
+    sl = np.stack([v for _, v in leg.samples["z"]])
+    np.testing.assert_allclose(sv, sl, rtol=1e-12, atol=1e-12)
+    assert vec.replica_log["z"] == leg.replica_log["z"]
+    rv, rl = np.sort(vec.response_times()), np.sort(leg.response_times())
+    assert len(rv) == len(rl)
+    for q in (50, 95):
+        pv, pl = np.percentile(rv, q), np.percentile(rl, q)
+        assert abs(pv - pl) <= 0.01 * pl
+
+
+def test_batched_failure_and_straggler_path():
+    """Vec-mode event handling: node failure orphans are re-dispatched
+    (never back onto a dead pod), stragglers slow service."""
+    P = 8
+    t_end = 600.0
+    arr = poisson_arrivals(2.0, t_end, 15.0, zone="z", seed=11)
+    sim = ClusterSim(
+        fleet_topology(P, zones=["z"], pods_per_node=4),
+        SimConfig(seed=0, sort_service_s=6.0),
+    )
+    sim.inject_node_failure(120.0, "z-n0", recover_after=240.0)
+    sim.inject_straggler(300.0, "z-n1", factor=0.25, duration=120.0)
+    sim.run(arr, _fixed_bindings("z", P), t_end, initial_replicas=P)
+    rows = sim.completed_log.view()
+    assert np.isfinite(rows["completion"]).all()
+    assert rows["redispatched"].any()
+    dead_pids = {p.pid for p in sim.pods if p.dead}
+    redis = rows[rows["redispatched"]]
+    assert not set(redis["server"].tolist()) & dead_pids
+    node = next(n for n in sim.topo.nodes if n.name == "z-n0")
+    assert not node.failed  # recovered
+
+
+# ------------------------------------------------------- CompletionLog -----
+def test_completion_log_append_amend_and_windows():
+    log = CompletionLog(capacity=4)
+    s = log.append_batch(
+        arrival=np.array([1.0, 2.0, 3.0]),
+        start=np.array([1.0, 2.0, 3.0]),
+        completion=np.array([2.0, 4.0, 6.0]),
+        service=np.array([1.0, 2.0, 3.0]),
+        server=np.array([0, 1, 2]),
+        kind=np.array([0, 1, 0], np.int16),
+    )
+    assert (s.start, s.stop) == (0, 3)
+    log.seal_window()
+    for i in range(20):  # force several growth doublings
+        log.append(10.0 + i, 10.0 + i, 11.0 + i, 1.0, i)
+    log.seal_window()
+    assert len(log) == 23
+    assert len(log.window_rows(0)) == 3
+    assert len(log.window_rows(1)) == 20
+    assert len(log.window_rows(7)) == 0
+    np.testing.assert_array_equal(
+        log.window_rows(0)["completion"], [2.0, 4.0, 6.0]
+    )
+    log.amend(1, completion=9.0, redispatched=True)
+    assert log.view()["completion"][1] == 9.0
+    assert log.view()["redispatched"][1]
+    rt = log.response_times()
+    assert len(rt) == 23 and rt[0] == 1.0
+    assert len(log.response_times(kind=1)) == 1
+
+
+def test_window_accumulator_matches_scalar_account_busy():
+    rng = np.random.default_rng(0)
+    w = 15.0
+    starts = rng.uniform(0, 300, 200)
+    ends = starts + rng.uniform(0.1, 40, 200)  # spans multiple windows
+    acc = WindowAccumulator(w, n_windows=4)  # force growth
+    acc.add_batch(starts, ends)
+    ref: dict = {}
+    from collections import defaultdict
+
+    ref = defaultdict(float)
+    for s, e in zip(starts, ends):
+        account_busy(ref, s, e, w)
+    for win, val in ref.items():
+        assert abs(acc.get(win) - val) < 1e-9, win
+    # sign=-1 cancels exactly
+    acc.add_batch(starts, ends, sign=-1.0)
+    for win in ref:
+        assert abs(acc.get(win)) < 1e-9
+
+
+def test_array_pool_selection_priority():
+    """Mirror of the heap ServerPool ordering test: idle in creation
+    order, then earliest busy, then earliest pending."""
+    pool = ArrayServerPool(capacity=2)  # force growth too
+    a = pool.add(0.0, key=0.0, ready_at=0.0)
+    b = pool.add(0.0, key=0.0, ready_at=0.0)
+    c = pool.add(0.0, key=10.0, ready_at=10.0)
+    assert pool.select(1.0) == a
+    pool.update(a, 5.0)
+    assert pool.select(1.0) == b
+    pool.update(b, 3.0)
+    assert pool.select(2.0) == b  # both busy: earliest horizon
+    pool.update(b, 7.0)
+    pool.invalidate(b)
+    assert pool.select(2.0) == a
+    pool.update(a, 9.0)
+    pool.invalidate(a)
+    assert pool.select(2.0) == c  # pending fallback
+    assert pool.n_live == 1
+    assert pool.select(11.0) == c  # promoted after ready_at
+    assert pool.ready_live_count(11.0) == 1
+    # before any ready_at the only live (pending) server is still selected
+    assert pool.select(-1.0) == c
+
+
+# ----------------------------------------------------- WindowedArrivals ----
+def test_windowed_arrivals_boundaries_and_conversion():
+    tasks = [(0.0, "sort", "a"), (7.5, "eigen", "b"), (15.0, "sort", "a"),
+             (15.1, "sort", "b"), (29.9, "eigen", "a")]
+    arr = WindowedArrivals.from_tasks(tasks, 15.0)
+    assert arr.n_windows >= 2
+    w1 = list(arr.window_chunks(1))
+    # t == 15.0 lands in window 1 (dispatched before the tick's control
+    # step), exactly like the per-event driver's ``t <= tick``
+    got = sorted((z, float(t)) for z, ts, _ in w1 for t in ts)
+    assert got == [("a", 0.0), ("a", 15.0), ("b", 7.5)]
+    w2 = list(arr.window_chunks(2))
+    got2 = sorted((z, float(t)) for z, ts, _ in w2 for t in ts)
+    assert got2 == [("a", 29.9), ("b", 15.1)]
+    tail = list(arr.tail_chunks(15.0, 29.9))
+    assert sorted((z, float(t)) for z, ts, _ in tail for t in ts) == got2
+
+
+def test_poisson_arrivals_deterministic_and_windowed():
+    a = poisson_arrivals(5.0, 300.0, 15.0, seed=4)
+    b = poisson_arrivals(5.0, 300.0, 15.0, seed=4)
+    np.testing.assert_array_equal(a.times, b.times)
+    assert np.all(np.diff(a.times) >= 0)
+    assert a.times[-1] <= 300.0
+    rates = np.zeros(20)
+    rates[3] = 10.0  # only window 4 (t in (45, 60]) has load
+    c = poisson_arrivals(rates, 300.0, 15.0, seed=4)
+    assert len(c) > 0
+    assert np.all((c.times > 45.0 - 15.0) & (c.times <= 60.0))
+
+
+def test_event_queue_push_batch_orders_with_payloads():
+    from repro.sim import EventQueue
+
+    q = EventQueue()
+    q.push_batch([30.0, 10.0], "slow", [{"rid": 0}, {"rid": 1}])
+    q.push_batch([20.0], "fail", [{"rid": 2}])
+    fired = q.pop_due(40.0)
+    assert [(t, k, p["rid"]) for t, k, p in fired] == [
+        (10.0, "slow", 1), (20.0, "fail", 2), (30.0, "slow", 0)]
+
+
+# ------------------------------------------------------- multi-fleet -------
+def test_chip_arbiter_floors_weights_and_conservation():
+    from repro.serving.multi_fleet import ChipBudgetArbiter
+
+    arb = ChipBudgetArbiter(96)
+    names = ["a", "b", "c"]
+    chips_per = {n: 16 for n in names}
+    floors = {n: 1 for n in names}
+    # no contention: everyone gets their demand
+    grant = arb.allocate({"a": 2, "b": 1, "c": 2}, chips_per, floors,
+                         {n: 1.0 for n in names})
+    assert grant == {"a": 32, "b": 16, "c": 32}
+    # contention: floors respected, whole replicas, budget conserved
+    grant = arb.allocate({"a": 6, "b": 6, "c": 6}, chips_per, floors,
+                         {"a": 1.0, "b": 1.0, "c": 4.0})
+    assert sum(grant.values()) <= 96
+    assert all(grant[n] >= 16 and grant[n] % 16 == 0 for n in names)
+    assert grant["c"] >= grant["a"]  # weight bias
+    # surplus recycling: a high-weight fleet with tiny demand must not
+    # strand budget — the other fleet's unmet demand absorbs it
+    grant = arb.allocate({"a": 1, "b": 6}, chips_per, {"a": 0, "b": 0},
+                         {"a": 100.0, "b": 1.0})
+    assert grant == {"a": 16, "b": 80}   # all 96 chips placed
+    with pytest.raises(ValueError):
+        ChipBudgetArbiter(16).allocate(
+            {"a": 2, "b": 2}, {"a": 16, "b": 16},
+            {"a": 1, "b": 1}, {"a": 1.0, "b": 1.0})
+
+
+def test_multi_fleet_budget_and_completion():
+    from repro.core import (ARIMAD1Forecaster, FleetController, PPAConfig,
+                            TargetSpec, ThresholdPolicy)
+    from repro.serving.fleet import FleetConfig
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+
+    rng = np.random.default_rng(1)
+    T = 600.0
+    specs = [FleetSpec(f"f{i}", FleetConfig(total_chips=96,
+                                            chips_per_replica=16, seed=i))
+             for i in range(2)]
+    ctrl = FleetController(
+        PPAConfig(threshold=560.0, stabilization_s=0.0),
+        [TargetSpec(s.name, ThresholdPolicy(560.0, 1)) for s in specs],
+        model=ARIMAD1Forecaster())
+    reqs = {s.name: sorted((float(t), int(rng.integers(16, 64)))
+                           for t in rng.uniform(0, T, 300))
+            for s in specs}
+    sim = MultiFleetSim(specs, total_chips=64, controller=ctrl).run(reqs, T)
+    assert sim.peak_chips() <= 64
+    rt = sim.response_times()
+    assert len(rt) == 600 and np.isfinite(rt).all()
+    for _, grant in sim.alloc_log:
+        assert sum(grant.values()) <= 64
+        assert all(g % 16 == 0 for g in grant.values())
+
+
+# ----------------------------------------------------------- slow lane -----
+@pytest.mark.slow
+def test_ten_thousand_pod_run_under_a_minute():
+    """The acceptance bar's scale point: 10^4 pods, 2 h sim < 60 s."""
+    import time
+
+    P, T, svc = 10_000, 7200.0, 8.0
+    arr = poisson_arrivals(0.6 * P / svc, T, 15.0, zone="z", seed=3)
+    sim = ClusterSim(fleet_topology(P, zones=["z"]),
+                     SimConfig(seed=0, sort_service_s=svc))
+    t0 = time.time()
+    sim.run(arr, _fixed_bindings("z", P), T, initial_replicas=P)
+    wall = time.time() - t0
+    assert wall < 60.0, wall
+    assert len(sim.completed_log) == len(arr)
+    assert np.isfinite(sim.completed_log.view()["completion"]).all()
+    # the fixed fleet absorbs the offered load: responses stay ~service
+    assert np.percentile(sim.response_times(), 95) < 5 * svc
+
+
+@pytest.mark.slow
+def test_multi_fleet_long_run_reallocates_chips():
+    from benchmarks.bench_fleet_scale import bench_multi_fleet
+
+    out = bench_multi_fleet(t_end=1800.0, budget=192)
+    assert out["budget_respected"]
+    assert out["reallocations"] > 0
+    assert out["n_requests"] > 0

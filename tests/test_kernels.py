@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
 executed in interpret mode (TPU is the compile target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

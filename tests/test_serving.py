@@ -4,7 +4,6 @@ accounting, and the PPA-scaled fleet."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import smoke_config
 from repro.models.registry import build_model

@@ -2,7 +2,6 @@
 axis, multi-pod batch spanning; exercised on a subprocess-free 1-device mesh
 plus pure-logic checks (hypothesis)."""
 import numpy as np
-import jax
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -4,7 +4,6 @@ and the fault-tolerance story."""
 import numpy as np
 import pytest
 
-from repro.cluster import SimConfig
 from repro.core.experiments import collect_series, run_scenario, welch_t
 from repro.core.updater import UpdatePolicy
 from repro.workloads import nasa_requests, nasa_trace, random_access

@@ -1,7 +1,6 @@
 """Training-substrate integration: loss decreases, clipping, schedules,
 failure recovery produces bit-identical resumption of the data order."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

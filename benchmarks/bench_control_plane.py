@@ -1,6 +1,6 @@
-"""Batched control plane + sim core benchmarks (DESIGN.md §3/§5).
+"""Batched + sharded control plane benchmarks (DESIGN.md §5).
 
-Two claims are measured (the PR's acceptance bar):
+Four claims are measured (the PRs' acceptance bars):
 
 1. **Control latency** — at Z=16 zones, one batched ``FleetController``
    tick (single vmapped/jitted forecast dispatch) is >= 5x faster than Z
@@ -8,12 +8,22 @@ Two claims are measured (the PR's acceptance bar):
 2. **Sim-core parity** — a seeded ``ClusterSim`` run on the heap-based sim
    core reproduces the frozen seed engine's response-time distribution
    within 1 % at p50/p95 (it is in fact exact), while dispatching faster.
+3. **Shard sweep** — Z in {16, 64, 256, 1024} targets: the
+   ``ShardedControlPlane`` (columnar staged tick, S shards) sustains
+   >= 3x the single ``FleetController`` ticks/sec at Z >= 256.
+4. **Refit overlap** — a vmapped batch refit of Z=64 per-target LSTMs runs
+   off the tick critical path: the max tick latency while the refit is in
+   flight stays far below the blocking (in-loop) refit stall.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_control_plane [--quick]
+         [--check-baseline benchmarks/baselines/control_plane_baseline.json]
 """
 from __future__ import annotations
 
+import copy
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -119,13 +129,245 @@ def bench_sim_core_parity(t_minutes: int = 20):
     return stats
 
 
-def run(quick: bool = False):
+def _clone_models(Z: int, traces, window: int = 4, hidden: int = 50,
+                  n_base: int = 8, epochs: int = 20,
+                  finetune_epochs: int = 30):
+    """Z homogeneous fitted per-target LSTMs, cheaply: fit n_base distinct
+    models, clone params, refit each clone's scaler on its own trace (the
+    sweep measures tick throughput, not forecast skill)."""
+    from repro.core import LSTMForecaster
+
+    names = list(traces)
+    base = []
+    for i in range(min(n_base, Z)):
+        m = LSTMForecaster(window=window, hidden=hidden, epochs=epochs,
+                           finetune_epochs=finetune_epochs, seed=i)
+        m.fit(traces[names[i]][:120], from_scratch=True)
+        base.append(m)
+    models = []
+    for i in range(Z):
+        m = copy.deepcopy(base[i % len(base)])
+        m.scaler.fit(traces[names[i]][:120])
+        models.append(m)
+    return models
+
+
+def bench_shard_sweep(zs=(16, 64, 256, 1024), n_shards: int = 8,
+                      ticks: int = 30, warmup: int = 3, hidden: int = 16):
+    """Single FleetController vs ShardedControlPlane (sync + async ticks)
+    across the Z sweep; each point drives `ticks` full control ticks
+    (observe every target + one control_step).
+
+    The sweep's LSTMs default to ``hidden=16``: the point of the sweep is
+    the control-plane host cost the sharded refactor removes, and on the
+    2-core CI container the paper-faithful LSTM(50) batched-GEMV forward
+    (identical device work on BOTH paths) would otherwise dominate the
+    tick and mask it.  ``run()`` also records a paper-fidelity hidden=50
+    reference point at Z=256 (no gate)."""
+    from repro.core import (FleetController, PPAConfig, ShardedControlPlane,
+                            Snapshot, TargetSpec, ThresholdPolicy)
+
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    out = []
+    for Z in zs:
+        traces = _traces(Z)
+        names = list(traces)
+        models = _clone_models(Z, traces, hidden=hidden)
+
+        def specs():
+            return [TargetSpec(n, ThresholdPolicy(100.0, 1),
+                               model=copy.deepcopy(m))
+                    for n, m in zip(names, models)]
+
+        # pre-build per-tick inputs so the timer sees only the plane APIs
+        ks = [130 + (j % 60) for j in range(warmup + ticks)]
+        snap_rows = [np.stack([traces[n][k] for n in names]) for k in ks]
+
+        def drive_single():
+            ctrl = FleetController(cfg, specs())
+            for n in names:
+                for k in range(120, 130):
+                    ctrl.observe(n, Snapshot(15.0 * k, traces[n][k]))
+            times = []
+            for j, rows in enumerate(snap_rows):
+                t = 1e4 + 15.0 * j
+                t0 = time.perf_counter()
+                for i, n in enumerate(names):
+                    ctrl.observe(n, Snapshot(t, rows[i]))
+                ctrl.control_step(t, 64, 2)
+                times.append(time.perf_counter() - t0)
+            return times[warmup:]
+
+        def drive_sharded(async_ticks):
+            plane = ShardedControlPlane(cfg, specs(), n_shards=n_shards,
+                                        async_ticks=async_ticks)
+            for n in names:
+                for k in range(120, 130):
+                    plane.observe(n, Snapshot(15.0 * k, traces[n][k]))
+            times = []
+            for j, rows in enumerate(snap_rows):
+                t = 1e4 + 15.0 * j
+                t0 = time.perf_counter()
+                if async_ticks:
+                    # double-buffered: window-t forecast in flight while
+                    # window-(t+1) metrics are collected
+                    plane.begin_tick(t, 64, 2)
+                    plane.observe_batch(t + 15.0, rows)
+                    plane.finish_tick()
+                else:
+                    plane.observe_batch(t, rows)
+                    plane.control_step(t, 64, 2)
+                times.append(time.perf_counter() - t0)
+            plane.shutdown()
+            return times[warmup:]
+
+        single = float(np.mean(drive_single()))
+        sync = float(np.mean(drive_sharded(False)))
+        asy = float(np.mean(drive_sharded(True)))
+        best = min(sync, asy)
+        point = {
+            "Z": Z, "n_shards": n_shards, "hidden": hidden,
+            "single_tick_ms": single * 1e3,
+            "sharded_tick_ms": sync * 1e3,
+            "sharded_async_tick_ms": asy * 1e3,
+            "single_ticks_per_s": 1.0 / single,
+            "sharded_ticks_per_s": 1.0 / best,
+            "speedup": single / best,
+        }
+        out.append(point)
+        csv_row(f"shard_sweep_Z{Z}", best * 1e6,
+                f"single={single * 1e3:.2f}ms sharded={best * 1e3:.2f}ms "
+                f"= {point['speedup']:.1f}x (bar at Z>=256: >=3x)")
+    return out
+
+
+def bench_refit_overlap(Z: int = 64, n_shards: int = 8, ticks: int = 60,
+                        trigger: int = 20):
+    """The updater-cadence claim: a vmapped batch refit of Z per-target
+    LSTMs runs off the tick critical path.  Measures (a) the async plane's
+    max tick latency while the refit is in flight, (b) the blocking
+    in-loop refit stall on the single controller, (c) refit wall latency
+    and how many ticks overlapped it."""
+    from repro.core import (FleetController, MetricsHistory, PPAConfig,
+                            ShardedControlPlane, Snapshot, TargetSpec,
+                            ThresholdPolicy, Updater, UpdatePolicy)
+    from repro.core.forecaster import lstm_fit_batch_stacked
+
+    traces = _traces(Z, T=300)
+    names = list(traces)
+    models = _clone_models(Z, traces, finetune_epochs=60)
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                    update_interval_s=trigger * 15.0)
+
+    def specs():
+        return [TargetSpec(n, ThresholdPolicy(100.0, 1),
+                           model=copy.deepcopy(m))
+                for n, m in zip(names, models)]
+
+    # warm the vmapped-fit jit cache with the exact refit shapes so both
+    # paths below time compute, not compilation
+    warm = [copy.deepcopy(m) for m in models]
+    series = {n: traces[n][130:130 + trigger] for n in names}
+    lstm_fit_batch_stacked(warm, [series[n] for n in names])
+
+    def drive(plane, async_mode):
+        tick_s, inflight_ticks = [], 0
+        for j in range(ticks):
+            t = 15.0 * (j + 1)
+            k = 130 + (j % 100)
+            rows = np.stack([traces[n][k] for n in names])
+            t0 = time.perf_counter()
+            if async_mode:
+                plane.observe_batch(t, rows)
+            else:
+                for i, n in enumerate(names):
+                    plane.observe(n, Snapshot(t, rows[i]))
+            plane.control_step(t, 64, 2)
+            plane.maybe_update(t)
+            dt = time.perf_counter() - t0
+            tick_s.append(dt)
+            if async_mode and plane.refit_inflight:
+                inflight_ticks += 1
+        return tick_s, inflight_ticks
+
+    plane = ShardedControlPlane(cfg, specs(), n_shards=n_shards,
+                                updater=Updater(UpdatePolicy.FINETUNE),
+                                async_ticks=True)
+    async_ticks_s, overlapped = drive(plane, True)
+    plane.flush_updates()
+    refit_wall_s = (plane.refit_log[-1]["applied"]
+                    - plane.refit_log[-1]["submitted"]
+                    if plane.refit_log else float("nan"))
+    plane.shutdown()
+
+    ctrl = FleetController(cfg, specs(),
+                           updater=Updater(UpdatePolicy.FINETUNE))
+    block_ticks_s, _ = drive(ctrl, False)
+
+    baseline_tick = float(np.median(async_ticks_s))
+    max_inflight = float(np.max(async_ticks_s[trigger:])
+                         if len(async_ticks_s) > trigger
+                         else np.max(async_ticks_s))
+    block_stall = float(np.max(block_ticks_s))
+    out = {
+        "Z": Z, "n_shards": n_shards,
+        "refit_wall_s": refit_wall_s,
+        "ticks_overlapped": overlapped,
+        "median_tick_ms": baseline_tick * 1e3,
+        "max_tick_ms_refit_inflight": max_inflight * 1e3,
+        "blocking_refit_stall_ms": block_stall * 1e3,
+        "nonblocking": max_inflight < 0.5 * block_stall,
+    }
+    csv_row("refit_overlap", max_inflight * 1e6,
+            f"async max tick {max_inflight * 1e3:.2f}ms vs blocking stall "
+            f"{block_stall * 1e3:.1f}ms, refit={refit_wall_s * 1e3:.1f}ms "
+            f"over {overlapped} ticks")
+    return out
+
+
+def check_baseline(results: dict, path: Path) -> list[str]:
+    """>2x ticks/sec regression vs the checked-in baseline fails CI (the
+    same guard shape as bench_fleet_scale)."""
+    base = json.loads(path.read_text())
+    errors = []
+    for point in results.get("shard_sweep", []):
+        ref = base.get("sharded_ticks_per_s", {}).get(str(point["Z"]))
+        if ref is None:
+            continue
+        if point["sharded_ticks_per_s"] < ref / 2.0:
+            errors.append(
+                f"Z={point['Z']}: {point['sharded_ticks_per_s']:,.0f} "
+                f"ticks/s < half of baseline {ref:,.0f}")
+    return errors
+
+
+def run(quick: bool = False, baseline: Path | None = None):
     lat = bench_control_latency(Z=16, iters=30 if quick else 100)
     par = bench_sim_core_parity(t_minutes=10 if quick else 20)
-    payload = {"control_latency": lat, "sim_core_parity": par}
+    sweep = bench_shard_sweep(zs=(16, 64, 256) if quick
+                              else (16, 64, 256, 1024),
+                              ticks=15 if quick else 30)
+    # paper-fidelity reference: same sweep point with the LSTM(50) forward
+    # (device-bound on the CI box; recorded, not gated)
+    fidelity = bench_shard_sweep(zs=(256,), ticks=10 if quick else 20,
+                                 hidden=50)[0]
+    refit = bench_refit_overlap(Z=64, ticks=40 if quick else 60)
+    payload = {"control_latency": lat, "sim_core_parity": par,
+               "shard_sweep": sweep, "fidelity_point": fidelity,
+               "refit_overlap": refit}
     save_bench("control_plane", payload)
     assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
     assert par["parity_ok"], f"sim-core parity broken: {par}"
+    assert refit["nonblocking"], f"refit blocked the tick loop: {refit}"
+    if not quick:
+        for p in sweep:
+            if p["Z"] >= 256:
+                assert p["speedup"] >= 3.0, \
+                    f"Z={p['Z']}: sharded {p['speedup']:.1f}x < 3x"
+    if baseline is not None:
+        errors = check_baseline(payload, baseline)
+        if errors:
+            raise SystemExit("bench regression: " + "; ".join(errors))
     return payload
 
 
@@ -135,6 +377,7 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI bench-smoke lane: same as --quick")
+    ap.add_argument("--check-baseline", type=Path, default=None)
     args = ap.parse_args()
-    out = run(quick=args.quick or args.smoke)
-    print(out)
+    out = run(quick=args.quick or args.smoke, baseline=args.check_baseline)
+    print(json.dumps(out, indent=1, default=float))

@@ -12,3 +12,7 @@ from repro.core.updater import Updater, UpdatePolicy
 from repro.core.hpa import HPA
 from repro.core.ppa import PPA, PPAConfig, ScaleDownStabilizer
 from repro.core.controller import FleetController, TargetSpec
+from repro.core.control_plane import (ShardedControlPlane, Tick, TickResult,
+                                      shard_assignment, stage_collect,
+                                      stage_formulate, stage_forecast,
+                                      stage_evaluate, stage_actuate)

@@ -1,0 +1,914 @@
+"""Staged, sharded, async control plane (DESIGN.md §5, "Sharded async").
+
+PR 1 batched Z targets into one forecast dispatch per tick, but the tick
+itself stayed a monolithic synchronous function and model refits stalled
+the whole loop — capping the control plane near ~10^3 targets.  This module
+splits the tick into explicit stages
+
+    collect -> formulate -> batched forecast -> evaluate -> actuate
+
+shared by ``FleetController`` (which now composes them, core/controller.py)
+and the ``ShardedControlPlane`` below, which takes the plane past 10^3
+targets:
+
+* **sharding** — targets are partitioned across S controller shards by a
+  deterministic crc32 hash (NOT Python's per-process-salted ``hash``) or an
+  explicit assignment map; each shard forecasts on stacked (Z/S, W, M)
+  tensors over columnar host state (ring-buffered metric windows,
+  vectorised scaler / ThresholdPolicy / ScaleDownStabilizer arithmetic), so
+  a tick costs O(S) array programs instead of O(Z) per-target object calls;
+* **double-buffered async ticks** — ``begin_tick`` snapshots each shard's
+  formulated windows and dispatches its forecast on a worker pool; the
+  driver keeps collecting window-(t+1) metrics while window-t forecasts are
+  in flight, and ``finish_tick`` is the only barrier (at actuation);
+* **off-critical-path refits** — ``maybe_update`` snapshots histories and
+  submits ONE vmapped batch fit for all Z per-target LSTMs
+  (``lstm_fit_batch_stacked``) to the pool; finished fits are installed
+  between ticks (``poll_updates``), so P2/P3 updates never stall the loop.
+
+Decision semantics are identical to ``FleetController`` by construction:
+the vectorised fast path reproduces ``Evaluator.decide_from_prediction`` +
+``ThresholdPolicy`` + ``ScaleDownStabilizer`` elementwise, and shards whose
+targets don't vectorise (heterogeneous models or non-threshold policies)
+fall back to an embedded ``FleetController``.  ``tests/test_sharded_plane``
+asserts seeded decision equivalence for any shard count, async on or off.
+"""
+from __future__ import annotations
+
+import collections.abc as cabc
+import dataclasses
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.evaluator import EvalResult
+from repro.core.forecaster import (LSTMForecaster, _lstm_forward_stacked,
+                                   lstm_stack_signature, stack_params,
+                                   stack_scaler_stats, transform_stacked)
+from repro.core.metrics import N_METRICS, MetricsHistory, Snapshot
+from repro.core.policies import ThresholdPolicy
+
+# ======================================================================= #
+#  The staged tick pipeline (composed by FleetController and the shards)  #
+# ======================================================================= #
+
+
+@dataclasses.dataclass
+class Tick:
+    """Context flowing through one control tick's stages."""
+    t: float
+    names: list[str]
+    max_r: dict[str, int]
+    cur_r: dict[str, int]
+    recents: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    preds: dict = dataclasses.field(default_factory=dict)
+    results: dict[str, EvalResult] = dataclasses.field(default_factory=dict)
+
+
+def as_replica_map(val, names) -> dict[str, int]:
+    """Broadcast a scalar replica bound to every target."""
+    if isinstance(val, dict):
+        return {n: int(val[n]) for n in names}
+    return {n: int(val) for n in names}
+
+
+def validate_targets(targets, model, updater) -> bool:
+    """Shared constructor validation for ``FleetController`` and
+    ``ShardedControlPlane``; returns the per-target-models flag."""
+    if not targets:
+        raise ValueError("control plane needs at least one target")
+    per_target = [t.model is not None for t in targets]
+    if any(per_target) and not all(per_target):
+        raise ValueError("either every target has its own model "
+                         "(per-target mode) or none does (shared mode)")
+    per_target_models = all(per_target)
+    if not per_target_models and model is None:
+        raise ValueError("shared mode needs a model")
+    path = getattr(updater, "model_path", None) if updater else None
+    if per_target_models and path and "{target}" not in str(path):
+        # one shared path would make Z targets overwrite each other's
+        # saved weights (Updater.path_for resolves the template)
+        raise ValueError("per-target mode needs a per-target model_path "
+                         "template (use a '{target}' placeholder), not "
+                         "one shared path")
+    return per_target_models
+
+
+def stage_collect(ctrl, exporter, groups=None, cursors=None) -> dict:
+    """Pull newly exported samples into the controller's history via the
+    exporter's cursor API (``WindowedExporter.read_new``) — pure reads over
+    the append-only samples log, so an async tick can keep collecting while
+    the previous window's forecast is in flight.  Returns the advanced
+    cursors (pass them back on the next call)."""
+    groups = list(groups) if groups is not None else list(ctrl.target_names)
+    cursors = {} if cursors is None else cursors
+    for g in groups:
+        new, cursors[g] = exporter.read_new(g, cursors.get(g, 0))
+        for ts, row in new:
+            ctrl.observe(g, Snapshot(float(ts), np.asarray(row, np.float64)))
+    return cursors
+
+
+def stage_formulate(ctrl, tick: Tick) -> Tick:
+    """Stack each target's recent metric rows into its forecast window."""
+    for n in tick.names:
+        st = ctrl.targets[n]
+        tick.recents[n] = (np.stack(st.recent) if st.recent
+                           else np.zeros((1, N_METRICS)))
+    return tick
+
+
+def stage_forecast(ctrl, tick: Tick) -> Tick:
+    """One batched forecast dispatch for every predictable target."""
+    tick.preds = ctrl._predict_all(tick.names, tick.recents)
+    return tick
+
+
+def stage_evaluate(ctrl, tick: Tick) -> Tick:
+    """Algorithm 1's decision half + scale-down stabilization per target."""
+    for n in tick.names:
+        st = ctrl.targets[n]
+        mean, std, bayes = tick.preds.get(n, (None, None, False))
+        res = ctrl._evaluators[n].decide_from_prediction(
+            tick.recents[n], mean, std, bayes, tick.max_r[n], tick.cur_r[n])
+        if res.raw_prediction is not None:
+            st.predictions.append((tick.t, res.raw_prediction))
+        res.replicas = st.stabilizer.apply(tick.t, res.replicas,
+                                           tick.cur_r[n], tick.max_r[n])
+        st.decisions.append(res)
+        tick.results[n] = res
+    return tick
+
+
+def stage_actuate(tick: Tick, actuator=None) -> dict[str, EvalResult]:
+    """Apply the decisions through an optional ``actuator(name, replicas)``
+    callback — the only stage with side effects outside the controller; the
+    async plane barriers exactly here."""
+    if actuator is not None:
+        for n, res in tick.results.items():
+            actuator(n, res.replicas)
+    return tick.results
+
+
+def prediction_mse(predictions, actual_series, actual_times, idx) -> float:
+    """One-step-ahead MSE of a (t, prediction) log (paper Figs. 7-8)."""
+    if not predictions:
+        return float("nan")
+    errs = []
+    for t, pred in predictions:
+        j = np.searchsorted(actual_times, t, side="right")
+        if j < len(actual_series):
+            errs.append((pred[idx] - actual_series[j, idx]) ** 2)
+    return float(np.mean(errs)) if errs else float("nan")
+
+
+# ======================================================================= #
+#  Sharding                                                               #
+# ======================================================================= #
+
+
+def shard_assignment(names, n_shards: int, assignment=None
+                     ) -> dict[str, int]:
+    """Deterministic target->shard map.  An explicit ``assignment`` entry
+    wins; everything else hashes with crc32, which is stable across
+    processes (Python's ``hash`` is salted per run)."""
+    out = {}
+    for n in names:
+        s = assignment.get(n) if assignment else None
+        if s is None:
+            s = zlib.crc32(n.encode()) % n_shards
+        if not 0 <= int(s) < n_shards:
+            raise ValueError(f"target {n!r} assigned to shard {s} "
+                             f"outside [0, {n_shards})")
+        out[n] = int(s)
+    return out
+
+
+def _vectorizable(specs, shared_model) -> bool:
+    """True when a shard's targets run on the columnar fast path: every
+    policy a ThresholdPolicy and (shared mode) any batched forecaster, or
+    (per-target mode) homogeneous stackable LSTMs."""
+    if not all(type(s.policy) is ThresholdPolicy for s in specs):
+        return False
+    if shared_model is not None:
+        return True
+    models = [s.model for s in specs]
+    if not all(type(m) is LSTMForecaster for m in models):
+        return False
+    sig = lstm_stack_signature(models[0])
+    return all(lstm_stack_signature(m) == sig for m in models)
+
+
+def predict_from_stack(cache, idx, wins, m0, n_total: int) -> np.ndarray:
+    """Transform -> vmapped stacked forward -> residual -> inverse, from a
+    stacked-params cache: the ONE implementation behind both the per-shard
+    and fused dispatch paths (their elementwise equivalence to the scalar
+    decision path is this module's central invariant).
+
+    ``idx`` indexes the candidate targets into the cache's arrays;
+    ``wins`` is their gathered (C, W, M) window batch; ``n_total`` is the
+    cache's full target count (``idx`` covering it skips the gather)."""
+    mean_s = cache["mean"][idx]
+    std_s = cache["std"][idx]
+    z = transform_stacked(wins, mean_s, std_s)
+    stacked = (cache["stacked"] if len(idx) == n_total
+               else jax.tree.map(lambda leaf: leaf[idx], cache["stacked"]))
+    preds = np.asarray(_lstm_forward_stacked(
+        stacked, jnp.asarray(z), use_pallas=m0.use_pallas))
+    if m0.residual:
+        preds = z[:, -1] + preds
+    return preds * std_s + mean_s
+
+
+class _Immediate:
+    """Future stand-in for the synchronous path."""
+
+    def __init__(self, value):
+        self._value = value
+
+    def result(self):
+        return self._value
+
+
+# ======================================================================= #
+#  Columnar shard (the fast path)                                         #
+# ======================================================================= #
+
+
+class _VecShard:
+    """One shard's Zs targets on columnar state: a (Zs, R, M) metric ring,
+    stacked scaler/params caches, and vectorised policy + stabilizer math
+    that is elementwise-identical to the per-target scalar objects."""
+
+    vectorized = True
+
+    def __init__(self, cfg, specs, model):
+        self.cfg = cfg
+        self.specs = list(specs)
+        self.names = [s.name for s in specs]
+        self.index = {n: i for i, n in enumerate(self.names)}
+        Zs = len(self.names)
+        self.model = model                                   # shared or None
+        self.models = None if model is not None else [s.model for s in specs]
+        self.window = (model.window if model is not None
+                       else self.models[0].window)
+        self.R = max(self.window + 1, 8)
+        self.ring = np.zeros((Zs, self.R, N_METRICS))
+        self.count = np.zeros(Zs, np.int64)
+        self.histories = [MetricsHistory() for _ in specs]
+        # vectorised ThresholdPolicy parameters
+        self.thr = np.array([s.policy.threshold for s in specs], np.float64)
+        self.pol_minr = np.array([s.policy.min_replicas for s in specs],
+                                 np.int64)
+        self.tol = np.array([s.policy.tolerance for s in specs], np.float64)
+        # vectorised scale-down stabilizer: per-tick (t, clamped desired)
+        self._stab: list[tuple[float, np.ndarray]] = []
+        self._stack_cache: dict = {}
+        # columnar tick records: (t, replicas, key, predicted, conf, max_r,
+        # means | None, cand); EvalResults materialise lazily from these
+        self.ticks: list[tuple] = []
+        self._dec_cache: dict[str, list] = {}
+        self._pred_cache: dict[str, tuple[int, list]] = {}
+
+    # ------------------------------------------------------------ collect --
+    # ``keep_history`` is set by the plane: histories only feed the
+    # updater, so a plane without one skips Z list appends per tick
+    keep_history = True
+
+    def observe(self, name: str, snap: Snapshot):
+        i = self.index[name]
+        self.ring[i, :-1] = self.ring[i, 1:]
+        self.ring[i, -1] = snap.values
+        self.count[i] += 1
+        if self.keep_history:
+            self.histories[i].append(snap)
+
+    def observe_batch(self, t: float, rows: np.ndarray):
+        """One ring shift for the whole shard instead of Zs row shifts."""
+        self.ring[:, :-1] = self.ring[:, 1:]
+        self.ring[:, -1] = rows
+        self.count += 1
+        if self.keep_history:
+            for i, h in enumerate(self.histories):
+                h.append_row(t, rows[i])
+
+    # ---------------------------------------------------------- formulate --
+    def snapshot(self):
+        """Copy the formulated window batch — the tick's double buffer: the
+        driver may keep observing the next window while this snapshot's
+        forecast is in flight."""
+        return self.ring.copy(), self.count.copy()
+
+    # ----------------------------------------------------------- forecast --
+    def forecast(self, state):
+        """Batched forecast over the snapshot.  Returns (means, stds, bayes,
+        cand): means (Zs, M) with NaN rows for reactive targets.  Reads
+        models/scalers only — safe on a worker thread."""
+        ring, count = state
+        Zs = len(self.names)
+        means = np.full((Zs, N_METRICS), np.nan)
+        stds = None
+        bayes = False
+        cand = np.zeros(Zs, bool)
+        if self.model is not None:
+            try:
+                ok = self.model.valid()
+            except Exception:
+                ok = False
+            if ok:
+                cand = count >= self.model.window + 1
+            if cand.any():
+                try:
+                    mm, ss = self.model.predict_batch(ring[cand])
+                    means[cand] = mm
+                    bayes = self.model.is_bayesian
+                    if ss is not None:
+                        stds = np.full((Zs, N_METRICS), np.nan)
+                        stds[cand] = ss
+                except Exception:
+                    # robust: batched model failure -> every target reactive
+                    means[:] = np.nan
+                    stds = None
+                    cand = np.zeros(Zs, bool)
+        else:
+            gens = tuple(m._fit_count for m in self.models)
+            cache = self._stack_cache
+            if cache.get("gens") != gens:
+                valid = np.array([self._model_ok(m) for m in self.models])
+                cache.clear()
+                cache["gens"] = gens
+                cache["valid"] = valid
+                if valid.any():
+                    cache["stacked"] = stack_params(self.models)
+                    cache["mean"], cache["std"] = \
+                        stack_scaler_stats(self.models)
+            cand = cache["valid"] & (count >= self.window + 1)
+            if cand.any():
+                try:
+                    means[cand] = self._predict_stacked(ring, cand)
+                except Exception:
+                    means[:] = np.nan
+                    cand = np.zeros(Zs, bool)
+        return means, stds, bayes, cand
+
+    @staticmethod
+    def _model_ok(m) -> bool:
+        try:
+            return bool(m.valid())
+        except Exception:
+            return False
+
+    def _predict_stacked(self, ring, cand):
+        """Vectorised ``lstm_predict_batch_stacked``: broadcast scaler
+        transform + one vmapped forward for the shard's candidates."""
+        m0 = self.models[0]
+        idx = np.flatnonzero(cand)
+        return predict_from_stack(self._stack_cache, idx,
+                                  ring[idx, -m0.window:, :], m0,
+                                  len(self.models))
+
+    # ----------------------------------------------------------- evaluate --
+    def decide(self, t, state, preds, max_r, cur_r):
+        """Vectorised Evaluator.decide_from_prediction + ThresholdPolicy +
+        ScaleDownStabilizer — the arithmetic matches the scalar objects
+        elementwise (property-tested in tests/test_sharded_plane.py)."""
+        ring, count = state
+        means, stds, bayes, cand = preds
+        k = self.cfg.key_metric_idx
+        Zs = len(self.names)
+        cur = self._as_array(cur_r)
+        maxr = self._as_array(max_r)
+        current_key = np.where(count > 0, ring[:, -1, k], 0.0)
+        mk = means[:, k]
+        conf = np.ones(Zs, bool)
+        if bayes and stds is not None:
+            conf[cand] = stds[cand, k] <= self.cfg.confidence_threshold
+        predicted = cand & conf & np.isfinite(mk)
+        key = np.where(predicted, mk, current_key)
+        # ThresholdPolicy, vectorised
+        with np.errstate(divide="ignore", invalid="ignore"):
+            dead = (cur > 0) & (np.abs(key / (self.thr * cur) - 1.0)
+                                <= self.tol)
+        n = np.maximum(np.ceil(np.maximum(key, 0.0) / self.thr),
+                       self.pol_minr)
+        n = np.where(dead | ~np.isfinite(key),
+                     np.maximum(cur, self.pol_minr), n)
+        n = np.minimum(n.astype(np.int64), maxr)
+        # ScaleDownStabilizer, vectorised (shared timestamps per tick)
+        self._stab.append((t, n))
+        self._stab = [(tt, d) for tt, d in self._stab
+                      if tt >= t - self.cfg.stabilization_s]
+        maxrec = np.max(np.stack([d for _, d in self._stab]), axis=0)
+        final = np.where(n < cur, np.minimum(maxrec, maxr), n)
+        rec = (t, final, key, predicted, conf, maxr,
+               means if cand.any() else None, cand)
+        self.ticks.append(rec)
+        return rec
+
+    def _as_array(self, val) -> np.ndarray:
+        if isinstance(val, dict):
+            return np.array([int(val[n]) for n in self.names], np.int64)
+        return np.full(len(self.names), int(val), np.int64)
+
+    # ------------------------------------------------------------ readout --
+    def result_for(self, name: str, rec) -> EvalResult:
+        return self._eval_result(rec, self.index[name])
+
+    @staticmethod
+    def _eval_result(rec, i: int) -> EvalResult:
+        t, reps, key, pred, conf, maxr, means, cand = rec
+        raw = (means[i].copy() if means is not None and cand[i] else None)
+        return EvalResult(replicas=int(reps[i]), key_metric=float(key[i]),
+                          predicted=bool(pred[i]),
+                          confidence_ok=bool(conf[i]),
+                          max_replicas=int(maxr[i]), raw_prediction=raw)
+
+    def decisions(self, name: str) -> list[EvalResult]:
+        i = self.index[name]
+        cache = self._dec_cache.setdefault(name, [])
+        for rec in self.ticks[len(cache):]:
+            cache.append(self._eval_result(rec, i))
+        return cache
+
+    def predictions(self, name: str) -> list[tuple[float, np.ndarray]]:
+        i = self.index[name]
+        seen, cache = self._pred_cache.get(name, (0, []))
+        for rec in self.ticks[seen:]:
+            t, _, _, _, _, _, means, cand = rec
+            if means is not None and cand[i]:
+                cache.append((t, means[i].copy()))
+        self._pred_cache[name] = (len(self.ticks), cache)
+        return cache
+
+    def target_models(self):
+        return list(self.models) if self.models is not None else None
+
+
+# ======================================================================= #
+#  Heterogeneous shard (embedded FleetController fallback)                #
+# ======================================================================= #
+
+
+class _CtrlShard:
+    """Fallback shard for target sets the columnar path can't take
+    (heterogeneous models, non-threshold policies): delegates to an
+    embedded ``FleetController`` running the same staged tick."""
+
+    vectorized = False
+
+    def __init__(self, cfg, specs, model):
+        from repro.core.controller import FleetController
+        self.ctrl = FleetController(cfg, list(specs), model=model)
+        self.names = [s.name for s in specs]
+
+    def observe(self, name, snap):
+        self.ctrl.observe(name, snap)
+
+    def observe_batch(self, t, rows):
+        for n, row in zip(self.names, rows):
+            self.ctrl.observe(n, Snapshot(t, row))
+
+    def snapshot(self):
+        out = {}
+        for n in self.names:
+            st = self.ctrl.targets[n]
+            out[n] = (np.stack(st.recent) if st.recent
+                      else np.zeros((1, N_METRICS)))
+        return out
+
+    def forecast(self, state):
+        return self.ctrl._predict_all(self.names, state)
+
+    def decide(self, t, state, preds, max_r, cur_r):
+        tick = Tick(t=t, names=self.names,
+                    max_r=as_replica_map(max_r, self.names),
+                    cur_r=as_replica_map(cur_r, self.names))
+        tick.recents = state
+        tick.preds = preds
+        stage_evaluate(self.ctrl, tick)
+        return tick.results
+
+    def result_for(self, name, rec) -> EvalResult:
+        return rec[name]
+
+    def decisions(self, name):
+        return self.ctrl.decisions(name)
+
+    def predictions(self, name):
+        return self.ctrl.predictions(name)
+
+    @property
+    def histories(self):
+        return [self.ctrl.targets[n].history for n in self.names]
+
+    def target_models(self):
+        if not self.ctrl.per_target_models:
+            return None
+        return [self.ctrl.targets[n].spec.model for n in self.names]
+
+
+# ======================================================================= #
+#  The sharded plane                                                      #
+# ======================================================================= #
+
+
+class TickResult(cabc.Mapping):
+    """Mapping name -> EvalResult over one tick, materialised lazily from
+    the shards' columnar records (building Z dataclasses per tick is the
+    single-controller path's dominant host cost at Z >= 10^3)."""
+
+    def __init__(self, plane, per_shard, t):
+        self._plane = plane
+        self._per_shard = per_shard          # list of (shard, record)
+        self._by_shard = {id(s): rec for s, rec in per_shard}
+        self.t = t
+        self._cache: dict[str, EvalResult] = {}
+
+    def __getitem__(self, name: str) -> EvalResult:
+        res = self._cache.get(name)
+        if res is None:
+            shard = self._plane._shard_of[name]
+            res = shard.result_for(name, self._by_shard[id(shard)])
+            self._cache[name] = res
+        return res
+
+    def __iter__(self):
+        return iter(self._plane._names)
+
+    def __len__(self):
+        return len(self._plane._names)
+
+
+class ShardedControlPlane:
+    """S-shard staged control plane with double-buffered async ticks and
+    off-critical-path batched refits.  API-compatible with
+    ``FleetController`` (observe / control_step / maybe_update / decisions)
+    plus the staged surface: ``observe_batch``, ``begin_tick`` /
+    ``finish_tick``, ``poll_updates`` / ``flush_updates``."""
+
+    is_batched = True
+
+    def __init__(self, cfg, targets, model=None, updater=None,
+                 n_shards: int = 1, assignment=None,
+                 async_ticks: bool = False, async_updates: bool | None = None,
+                 coalesce_dispatch: bool = True,
+                 max_workers: int | None = None):
+        self.per_target_models = validate_targets(targets, model, updater)
+        self.cfg = cfg
+        self.model = model
+        self.updater = updater
+        self.n_shards = int(n_shards)
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.async_ticks = bool(async_ticks)
+        self.async_updates = (self.async_ticks if async_updates is None
+                              else bool(async_updates))
+        self._names = [t.name for t in targets]
+        self._min_r = {t.name: t.min_replicas for t in targets}
+        self.assign = shard_assignment(self._names, self.n_shards,
+                                       assignment)
+        by_shard: dict[int, list] = {}
+        for t in targets:
+            by_shard.setdefault(self.assign[t.name], []).append(t)
+        self.shards = []
+        self._shard_rows: list[tuple[object, np.ndarray]] = []
+        self._shard_of: dict[str, object] = {}
+        pos = {n: i for i, n in enumerate(self._names)}
+        for s in sorted(by_shard):
+            specs = by_shard[s]
+            shard = (_VecShard(cfg, specs, model)
+                     if _vectorizable(specs, model)
+                     else _CtrlShard(cfg, specs, model))
+            self.shards.append(shard)
+            self._shard_rows.append(
+                (shard, np.array([pos[sp.name] for sp in specs], np.int64)))
+            for sp in specs:
+                self._shard_of[sp.name] = shard
+        # one worker per shard, plus a dedicated slot for the refit compute
+        # so an in-flight update never queues ahead of a tick's forecast
+        workers = len(self.shards) + (1 if self.async_updates else 0)
+        self._pool = (ThreadPoolExecutor(
+            max_workers=max_workers or max(workers, 1),
+            thread_name_prefix="ctrl-plane")
+            if (self.async_ticks or self.async_updates) else None)
+        self._pending = None             # in-flight tick
+        self._refit = None               # (t, future|None, _PendingUpdate)
+        self._last_update_t = 0.0
+        self.refit_log: list[dict] = []  # wall-clock overlap bookkeeping
+        # fused (coalesced) dispatch: on a single accelerator the S logical
+        # shards gang their forecast tensors into ONE device dispatch per
+        # tick (per-shard dispatch overhead dominates otherwise); with
+        # coalesce_dispatch=False every shard dispatches its own (Z/S, W, M)
+        # batch — the multi-device deployment shape
+        self._offsets, off = [], 0
+        for shard in self.shards:
+            self._offsets.append(off)
+            off += len(shard.names)
+        self._all_models = None
+        fused = coalesce_dispatch and all(s.vectorized for s in self.shards)
+        if fused and self.per_target_models:
+            models = [m for s in self.shards for m in s.target_models()]
+            sig = lstm_stack_signature(models[0])
+            fused = all(lstm_stack_signature(m) == sig for m in models)
+            if fused:
+                self._all_models = models
+        self._fused = fused
+        self._fused_cache: dict = {}
+        # fused-cache invalidation: model params only change through the
+        # plane's own update loop, so an epoch counter (bumped on refit
+        # commit) replaces a per-tick O(Z) fit-generation sweep
+        self._models_epoch = 0
+        if updater is None:
+            # histories only feed the updater — skip Z appends per tick
+            for shard in self.shards:
+                if shard.vectorized:
+                    shard.keep_history = False
+
+    # ------------------------------------------------------------ access --
+    @property
+    def target_names(self) -> list[str]:
+        return list(self._names)
+
+    def min_replicas(self, name: str) -> int:
+        return self._min_r[name]
+
+    def model_for(self, name: str):
+        if not self.per_target_models:
+            return self.model
+        models = self._shard_of[name].target_models()
+        return models[self._shard_of[name].names.index(name)]
+
+    def decisions(self, name: str) -> list[EvalResult]:
+        return self._shard_of[name].decisions(name)
+
+    def predictions(self, name: str) -> list[tuple[float, np.ndarray]]:
+        return self._shard_of[name].predictions(name)
+
+    def prediction_mse(self, name, actual_series, actual_times,
+                       metric_idx=None) -> float:
+        idx = self.cfg.key_metric_idx if metric_idx is None else metric_idx
+        return prediction_mse(self.predictions(name), actual_series,
+                              actual_times, idx)
+
+    # ----------------------------------------------------------- collect --
+    def observe(self, name: str, snap: Snapshot):
+        self._shard_of[name].observe(name, snap)
+
+    def observe_batch(self, t: float, values):
+        """Batched collect: ``values`` is {name: row} or a (Z, M) array in
+        target-list order — one ring shift per shard instead of Z calls."""
+        if isinstance(values, dict):
+            rows = np.asarray([values[n] for n in self._names], np.float64)
+        else:
+            rows = np.asarray(values, np.float64)
+        for shard, idx in self._shard_rows:
+            shard.observe_batch(t, rows[idx])
+
+    # -------------------------------------------------------- control loop -
+    def begin_tick(self, t: float, max_replicas, current_replicas):
+        """Formulate + dispatch forecasts (double buffer): snapshots every
+        shard's windows and hands the forecast work to the worker pool in
+        async mode — fused (one gang dispatch for all shards) or per shard.
+        Observations arriving after ``begin_tick`` belong to the next
+        window and cannot affect this tick's decisions."""
+        if self._pending is not None:
+            raise RuntimeError("previous tick not finished "
+                               "(finish_tick barrier missing)")
+        states = [shard.snapshot() for shard in self.shards]
+        go_async = self._pool is not None and self.async_ticks
+        if self._fused:
+            preps = self._prepare_fused(states)
+            fut = (self._pool.submit(self._forecast_fused, preps) if go_async
+                   else _Immediate(self._forecast_fused(preps)))
+            futs = [fut]
+        else:
+            futs = [(self._pool.submit(shard.forecast, state) if go_async
+                     else _Immediate(shard.forecast(state)))
+                    for shard, state in zip(self.shards, states)]
+        self._pending = (t, max_replicas, current_replicas, states, futs)
+        return self
+
+    def finish_tick(self) -> TickResult:
+        """The actuation barrier: joins the in-flight forecasts, evaluates
+        and stabilises every shard, and installs any finished refit."""
+        if self._pending is None:
+            raise RuntimeError("no tick in flight (call begin_tick first)")
+        t, max_r, cur_r, states, futs = self._pending
+        self._pending = None
+        if self._fused:
+            preds_list = futs[0].result()
+        else:
+            preds_list = [f.result() for f in futs]
+        per_shard = []
+        for shard, state, preds in zip(self.shards, states, preds_list):
+            rec = shard.decide(t, state, preds, max_r, cur_r)
+            per_shard.append((shard, rec))
+        self.poll_updates()
+        return TickResult(self, per_shard, t)
+
+    # ------------------------------------------------------ fused dispatch -
+    def _refresh_fused_cache(self) -> dict:
+        """Cache of the globally stacked params + scaler stats for the
+        fused per-target path, invalidated by the plane's refit epoch (an
+        O(1) check per tick; refits through the plane's own update loop
+        bump the epoch on commit)."""
+        models = self._all_models
+        cache = self._fused_cache
+        if cache.get("epoch") != self._models_epoch:
+            valid = np.array([_VecShard._model_ok(m) for m in models])
+            cache.clear()
+            cache["epoch"] = self._models_epoch
+            cache["valid"] = valid
+            if valid.any():
+                cache["stacked"] = stack_params(models)
+                cache["mean"], cache["std"] = stack_scaler_stats(models)
+        return cache
+
+    def _prepare_fused(self, states) -> list[tuple]:
+        """Control-thread half of the fused forecast: candidate masks and
+        window gathers (cheap copies); the transforms and the device
+        dispatch run in ``_forecast_fused`` (overlappable)."""
+        preps = []
+        if self.per_target_models:
+            cache = self._refresh_fused_cache()
+            for shard, (ring, count), off in zip(self.shards, states,
+                                                 self._offsets):
+                Zs = len(shard.names)
+                cand = (cache["valid"][off:off + Zs]
+                        & (count >= shard.window + 1))
+                idx = np.flatnonzero(cand)
+                preps.append((cand, idx + off,
+                              ring[idx, -shard.window:, :]))
+        else:
+            try:
+                ok = bool(self.model.valid())
+            except Exception:
+                ok = False
+            need = self.model.window + 1
+            for shard, (ring, count) in zip(self.shards, states):
+                cand = (count >= need) & ok
+                idx = np.flatnonzero(cand)
+                preps.append((cand, idx, ring[idx]))
+        return preps
+
+    def _forecast_fused(self, preps) -> list[tuple]:
+        """Worker half: ONE device dispatch answers every shard's
+        candidates; results are split back per shard as the same
+        (means, stds, bayes, cand) tuples ``_VecShard.forecast`` returns."""
+        counts = [len(p[2]) for p in preps]
+        means_g = stds_g = None
+        bayes = False
+        if sum(counts):
+            wins = np.concatenate([p[2] for p in preps if len(p[2])])
+            try:
+                if self.per_target_models:
+                    g_idx = np.concatenate([p[1] for p in preps
+                                            if len(p[1])])
+                    means_g = predict_from_stack(
+                        self._fused_cache, g_idx, wins,
+                        self._all_models[0], len(self._all_models))
+                else:
+                    means_g, stds_g = self.model.predict_batch(wins)
+                    bayes = self.model.is_bayesian
+            except Exception:
+                # robust: a failed gang dispatch -> every target reactive
+                means_g = stds_g = None
+                bayes = False
+        out, off = [], 0
+        for shard, (cand, _, w), k in zip(self.shards, preps, counts):
+            Zs = len(shard.names)
+            means = np.full((Zs, N_METRICS), np.nan)
+            stds = None
+            if means_g is None:
+                out.append((means, None, False, np.zeros(Zs, bool)))
+                continue
+            if k:
+                means[cand] = means_g[off:off + k]
+                if stds_g is not None:
+                    stds = np.full((Zs, N_METRICS), np.nan)
+                    stds[cand] = stds_g[off:off + k]
+                off += k
+            out.append((means, stds, bayes, cand))
+        return out
+
+    def control_step(self, t: float, max_replicas, current_replicas
+                     ) -> TickResult:
+        """Synchronous tick: begin + finish back to back."""
+        self.begin_tick(t, max_replicas, current_replicas)
+        return self.finish_tick()
+
+    # --------------------------------------------------------- update loop -
+    def maybe_update(self, t: float):
+        """Non-blocking model update.  Per-target mode snapshots histories
+        and submits ONE vmapped batch refit of all Z targets to the worker
+        pool (sync mode runs it inline); shared mode runs the pooled
+        cross-target fit inline (an in-place shared-model fit cannot safely
+        overlap in-flight forecasts)."""
+        self.poll_updates()
+        if self.updater is None:
+            return
+        if self._pending is not None:
+            # mid-tick (between begin_tick and finish_tick): the inline
+            # branches below mutate params/scalers a worker forecast may
+            # be reading — defer; the timer hasn't advanced, so the next
+            # between-ticks call picks the update up
+            return
+        if t - self._last_update_t < self.cfg.update_interval_s:
+            return
+        if self._refit is not None:
+            return    # previous refit still in flight; retry next tick
+        self._last_update_t = t
+        if self.per_target_models:
+            models, hists, names = [], [], []
+            for shard in self.shards:
+                models.extend(shard.target_models())
+                hists.extend(shard.histories)
+                names.extend(shard.names)
+            pending = self.updater.begin_update_batch(models, hists, t,
+                                                      targets=names)
+            if pending is None:
+                return
+            wall = time.monotonic()
+            if self._pool is not None and self.async_updates:
+                self._refit = (wall, self._pool.submit(pending.compute),
+                               pending)
+            else:
+                pending.compute()
+                pending.commit()
+                self._models_epoch += 1
+                self.refit_log.append(
+                    {"t": t, "submitted": wall,
+                     "applied": time.monotonic(),
+                     "batched": bool(pending.batched), "async": False})
+        else:
+            merged = MetricsHistory()
+            all_hists = [h for shard in self.shards
+                         for h in shard.histories]
+            for h in all_hists:
+                for tt, row in zip(h.times(), h.series()):
+                    merged.append_row(float(tt), row)
+            n_rows = len(merged)
+            self.model = self.updater.update(self.model, merged, t)
+            self._models_epoch += 1
+            for shard in self.shards:
+                if shard.vectorized:
+                    shard.model = self.model
+                else:
+                    shard.ctrl.model = self.model
+            if len(merged) < n_rows:     # updater consumed (cleared) it
+                for h in all_hists:
+                    h.clear()
+
+    def invalidate_models(self):
+        """Force a rebuild of the fused stacked-params cache.  Only needed
+        when per-target models are refit OUTSIDE the plane's update loop
+        (the plane's own refits bump the epoch on commit)."""
+        self._models_epoch += 1
+
+    def poll_updates(self, wait: bool = False) -> bool:
+        """Install a finished background refit (between ticks).  Returns
+        True when a refit was applied."""
+        if self._refit is None:
+            return False
+        if self._pending is not None:
+            # never install while a tick is in flight: a sequential-fallback
+            # commit mutates scalers in place under a live forecast
+            return False
+        wall, fut, pending = self._refit
+        if not (wait or fut.done()):
+            return False
+        self._refit = None               # cleared first: a failed compute
+        try:                             # must not wedge every later tick
+            fut.result()
+        except Exception:
+            # robustness guarantee: a failed refit is dropped and the plane
+            # keeps serving with the previous params (the snapshot history
+            # is lost, like a crashed out-of-band trainer)
+            self.refit_log.append(
+                {"t": pending.t, "submitted": wall,
+                 "applied": time.monotonic(), "failed": True,
+                 "batched": False, "async": True})
+            return False
+        pending.commit()                 # install on the control thread
+        self._models_epoch += 1
+        self.refit_log.append(
+            {"t": pending.t, "submitted": wall,
+             "applied": time.monotonic(),
+             "batched": bool(pending.batched), "async": True})
+        return True
+
+    def flush_updates(self) -> bool:
+        """Barrier for in-flight refits (end of run / tests)."""
+        return self.poll_updates(wait=True)
+
+    @property
+    def refit_inflight(self) -> bool:
+        return self._refit is not None
+
+    def shutdown(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

@@ -17,6 +17,11 @@ Decisions are routed through ``Evaluator.decide_from_prediction`` and the
 same ``ScaleDownStabilizer`` the scalar PPA uses, so batched and per-target
 decisions are identical by construction (tests/test_control_plane.py
 asserts equivalence on seeded multi-zone traces).
+
+The tick itself is composed from the staged pipeline of
+``core/control_plane.py`` (formulate -> batched forecast -> evaluate ->
+actuate); ``ShardedControlPlane`` there runs the same stages sharded,
+double-buffered and with off-critical-path batched refits for Z >> 10^3.
 """
 from __future__ import annotations
 
@@ -24,10 +29,14 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.control_plane import (Tick, as_replica_map, prediction_mse,
+                                      stage_actuate, stage_evaluate,
+                                      stage_forecast, stage_formulate,
+                                      validate_targets)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import (Forecaster, LSTMForecaster,
                                    lstm_predict_batch_stacked)
-from repro.core.metrics import N_METRICS, MetricsHistory, Snapshot
+from repro.core.metrics import MetricsHistory, Snapshot
 from repro.core.policies import Policy
 from repro.core.ppa import PPAConfig, ScaleDownStabilizer
 from repro.core.updater import Updater
@@ -60,21 +69,7 @@ class FleetController:
     def __init__(self, cfg: PPAConfig, targets: list[TargetSpec],
                  model: Forecaster | None = None,
                  updater: Updater | None = None):
-        if not targets:
-            raise ValueError("FleetController needs at least one target")
-        per_target = [t.model is not None for t in targets]
-        if any(per_target) and not all(per_target):
-            raise ValueError("either every target has its own model "
-                             "(per-target mode) or none does (shared mode)")
-        self.per_target_models = all(per_target)
-        if not self.per_target_models and model is None:
-            raise ValueError("shared mode needs a model")
-        if (self.per_target_models and updater is not None
-                and getattr(updater, "model_path", None)):
-            # one shared path would make Z targets overwrite each other's
-            # saved weights; per-target persistence needs per-target paths
-            raise ValueError("per-target mode cannot share a single "
-                             "updater model_path across targets")
+        self.per_target_models = validate_targets(targets, model, updater)
         self.cfg = cfg
         self.model = model
         self.updater = updater
@@ -115,21 +110,36 @@ class FleetController:
         st.recent = st.recent[-max(window + 1, 8):]
 
     # ----------------------------------------------------------- predict --
-    def _predictable(self, name: str) -> bool:
+    def _predictable(self, name: str, recent=None) -> bool:
+        """``recent`` overrides the live window with a tick snapshot —
+        candidacy must be judged on the same data the forecast will read,
+        or an async tick's interleaved observations could flip it."""
         model = self.model_for(name)
         try:
+            n_rows = (len(recent) if recent is not None
+                      else len(self.targets[name].recent))
             return (model is not None and model.valid()
-                    and len(self.targets[name].recent) >= model.window + 1)
+                    and n_rows >= model.window + 1)
         except Exception:
             return False
 
-    def _predict_all(self, names: list[str]) -> dict:
+    def _predict_all(self, names: list[str], recents_map: dict | None = None
+                     ) -> dict:
         """One batched forecast for every predictable target.  Returns
-        {name: (mean, std, is_bayesian)}; missing names -> reactive."""
-        cand = [n for n in names if self._predictable(n)]
+        {name: (mean, std, is_bayesian)}; missing names -> reactive.
+        ``recents_map`` lets the formulate stage supply already-stacked
+        windows (stage_forecast) instead of re-stacking here."""
+        if recents_map is not None:
+            cand = [n for n in names
+                    if self._predictable(n, recents_map[n])]
+        else:
+            cand = [n for n in names if self._predictable(n)]
         if not cand:
             return {}
-        recents = [np.stack(self.targets[n].recent) for n in cand]
+        if recents_map is not None:
+            recents = [recents_map[n] for n in cand]
+        else:
+            recents = [np.stack(self.targets[n].recent) for n in cand]
         try:
             if not self.per_target_models:
                 means, stds = self.model.predict_batch(recents)
@@ -162,31 +172,20 @@ class FleetController:
         return {n: (means[i], stds[i], bayes) for i, n in enumerate(cand)}
 
     # -------------------------------------------------------- control loop -
-    def control_step(self, t: float, max_replicas, current_replicas
-                     ) -> dict[str, EvalResult]:
-        """One batched tick: max_replicas / current_replicas are
-        {name: int} (or a single int broadcast to all targets)."""
+    def control_step(self, t: float, max_replicas, current_replicas,
+                     actuator=None) -> dict[str, EvalResult]:
+        """One batched tick, composed from the staged pipeline
+        (core/control_plane.py): formulate -> batched forecast -> evaluate
+        -> actuate.  max_replicas / current_replicas are {name: int} (or a
+        single int broadcast to all targets)."""
         names = self.target_names
-        max_r = (max_replicas if isinstance(max_replicas, dict)
-                 else {n: int(max_replicas) for n in names})
-        cur_r = (current_replicas if isinstance(current_replicas, dict)
-                 else {n: int(current_replicas) for n in names})
-        preds = self._predict_all(names)
-        results: dict[str, EvalResult] = {}
-        for n in names:
-            st = self.targets[n]
-            recent = (np.stack(st.recent) if st.recent
-                      else np.zeros((1, N_METRICS)))
-            mean, std, bayes = preds.get(n, (None, None, False))
-            res = self._evaluators[n].decide_from_prediction(
-                recent, mean, std, bayes, max_r[n], cur_r[n])
-            if res.raw_prediction is not None:
-                st.predictions.append((t, res.raw_prediction))
-            res.replicas = st.stabilizer.apply(t, res.replicas, cur_r[n],
-                                               max_r[n])
-            st.decisions.append(res)
-            results[n] = res
-        return results
+        tick = Tick(t=t, names=names,
+                    max_r=as_replica_map(max_replicas, names),
+                    cur_r=as_replica_map(current_replicas, names))
+        stage_formulate(self, tick)
+        stage_forecast(self, tick)
+        stage_evaluate(self, tick)
+        return stage_actuate(tick, actuator)
 
     # --------------------------------------------------------- update loop -
     def maybe_update(self, t: float):
@@ -196,9 +195,15 @@ class FleetController:
             return
         self._last_update_t = t
         if self.per_target_models:
-            for st in self.targets.values():
-                st.spec.model = self.updater.update(st.spec.model,
-                                                    st.history, t)
+            # one vmapped batch refit for every eligible target when the
+            # models stack (Updater.update_batch falls back to sequential
+            # fits otherwise) — P2/P3 updates are a single dispatch
+            names = self.target_names
+            models = [self.targets[n].spec.model for n in names]
+            hists = [self.targets[n].history for n in names]
+            self.updater.update_batch(models, hists, t, targets=names)
+            for n, m in zip(names, models):
+                self.targets[n].spec.model = m
         else:
             # pooled cross-target training for the shared model (windows
             # spanning a target boundary are a small, documented artefact)
@@ -217,13 +222,6 @@ class FleetController:
                        actual_times: np.ndarray,
                        metric_idx: int | None = None) -> float:
         """Per-target one-step-ahead MSE (paper Figs. 7-8)."""
-        preds = self.targets[name].predictions
-        if not preds:
-            return float("nan")
         idx = self.cfg.key_metric_idx if metric_idx is None else metric_idx
-        errs = []
-        for t, pred in preds:
-            j = np.searchsorted(actual_times, t, side="right")
-            if j < len(actual_series):
-                errs.append((pred[idx] - actual_series[j, idx]) ** 2)
-        return float(np.mean(errs)) if errs else float("nan")
+        return prediction_mse(self.targets[name].predictions,
+                              actual_series, actual_times, idx)

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import functools
 import pickle
+from collections import defaultdict
 from pathlib import Path
 
 import jax
@@ -66,6 +67,18 @@ class Forecaster:
 
 
 # --------------------------------------------------------------- scaling ---
+Z_CLIP = 10.0   # z-score clamp shared by every transform path
+
+
+def transform_stacked(wins: np.ndarray, mean: np.ndarray, std: np.ndarray
+                      ) -> np.ndarray:
+    """``Scaler.transform`` broadcast over stacked per-target stats:
+    wins (Z, W, M), mean/std (Z, M) -> (Z, W, M).  The vectorised control
+    plane routes through this single definition so its arithmetic can
+    never diverge from the scalar decision path."""
+    return np.clip((wins - mean[:, None]) / std[:, None], -Z_CLIP, Z_CLIP)
+
+
 class Scaler:
     """Per-metric standardisation (the paper's ScalerLink companion)."""
 
@@ -82,7 +95,7 @@ class Scaler:
         self.fitted = True
 
     def transform(self, x):
-        return np.clip((x - self.mean) / self.std, -10.0, 10.0)
+        return np.clip((x - self.mean) / self.std, -Z_CLIP, Z_CLIP)
     def inverse(self, x):    return x * self.std + self.mean
     def inverse_std(self, s): return s * self.std
 
@@ -210,11 +223,18 @@ class LSTMForecaster(Forecaster):
     def predict_batch(self, recents):
         """One device dispatch for Z targets sharing this model: the window
         batch (Z, W, M) rides ``lstm_forward``'s batch axis (which the
-        Pallas kernel tiles), instead of Z separate dispatches."""
+        Pallas kernel tiles), instead of Z separate dispatches.  The scaler
+        transform is broadcast over the whole batch (one numpy program, not
+        Z per-target calls) — elementwise identical to per-target
+        ``transform``."""
         if not self._fitted:
             raise RuntimeError("model not fitted")
-        z = np.stack([self.scaler.transform(
-            np.asarray(r, np.float64)[-self.window:]) for r in recents])
+        if isinstance(recents, np.ndarray) and recents.ndim == 3:
+            wins = np.asarray(recents, np.float64)[:, -self.window:]
+        else:
+            wins = np.stack([np.asarray(r, np.float64)[-self.window:]
+                             for r in recents])
+        z = self.scaler.transform(wins)
         pred = np.asarray(lstm_forward(self.params, jnp.asarray(z),
                                        use_pallas=self.use_pallas))
         if self.residual:
@@ -245,6 +265,27 @@ class LSTMForecaster(Forecaster):
 
 
 # ----------------------------------------------------- stacked batching ---
+def lstm_stack_signature(m: "LSTMForecaster") -> tuple:
+    """The architecture attributes that must match for LSTM params to
+    stack on one leading axis — the single definition every stackability
+    check uses (fitting additionally requires a matching ``opt_cfg``)."""
+    return (m.window, m.hidden, m.residual, m.use_pallas)
+
+
+def stack_params(models) -> dict:
+    """jnp-stack Z models' parameter pytrees on a new leading axis — the
+    one construction every stacked-batch cache (per-target, fused, member)
+    shares; each cache keeps its own invalidation key."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                        *[m.params for m in models])
+
+
+def stack_scaler_stats(models) -> tuple[np.ndarray, np.ndarray]:
+    """(mean (Z, M), std (Z, M)) stacks for ``transform_stacked``."""
+    return (np.stack([m.scaler.mean for m in models]),
+            np.stack([m.scaler.std for m in models]))
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def _lstm_forward_stacked(stacked_params, xs, *, use_pallas: bool = False):
     """stacked_params: pytree with leading target axis Z; xs (Z, W, M) ->
@@ -275,8 +316,7 @@ def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
     if cache is not None and cache.get("key") == key:
         stacked = cache["stacked"]
     else:
-        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                               *[m.params for m in models])
+        stacked = stack_params(models)
         if cache is not None:
             cache["key"] = key
             cache["stacked"] = stacked
@@ -291,6 +331,117 @@ def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
     means = np.stack([m.scaler.inverse(p)
                       for m, p in zip(models, preds)])
     return means, None
+
+
+@functools.partial(jax.jit, static_argnames=("opt_cfg", "epochs",
+                                             "use_pallas"))
+def _lstm_fit_stacked(stacked_params, stacked_opt, X, Y, opt_cfg, epochs,
+                      use_pallas=False):
+    """Fit Z independently parameterised LSTMs in ONE dispatch: params/opt
+    state stacked on a leading target axis, X (Z, N, W, M), Y (Z, N, M);
+    vmap of the scalar ``_lstm_fit`` epoch scan."""
+    def fit_one(p, o, x, y):
+        return _lstm_fit(p, o, x, y, opt_cfg, epochs, use_pallas)
+    return jax.vmap(fit_one)(stacked_params, stacked_opt, X, Y)
+
+
+class BatchFitResult:
+    """Deferred application of a batched fit.
+
+    The device compute happens at construction (``lstm_fit_batch_stacked``);
+    ``apply()`` installs the new params / scalers / fit counters on the
+    models.  The split exists for the async control plane: ``compute`` runs
+    on a worker thread without mutating any model, ``apply`` runs on the
+    control thread between ticks, so an in-flight forecast never reads a
+    half-updated model.
+    """
+
+    def __init__(self):
+        self._groups: list[tuple] = []   # (models, scalers, params, losses)
+
+    def add(self, models, scalers, stacked_params, losses):
+        self._groups.append((models, scalers, stacked_params, losses))
+
+    def block_until_ready(self):
+        for _, _, stacked, _ in self._groups:
+            jax.tree.leaves(stacked)[0].block_until_ready()
+        return self
+
+    def apply(self):
+        for models, scalers, stacked, losses in self._groups:
+            losses = np.asarray(losses)
+            for i, m in enumerate(models):
+                m.scaler = scalers[i]
+                m.params = jax.tree.map(lambda leaf, i=i: leaf[i], stacked)
+                m._fitted = True
+                m._fit_count += 1
+                m._valid_cache = None
+                m.last_losses = losses[i]
+        return self
+
+
+def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
+                           from_scratch: bool = False, apply: bool = True):
+    """Batched counterpart of Z sequential ``LSTMForecaster.fit`` calls:
+    stack the parameter pytrees and training windows on a leading target
+    axis and vmap the whole epoch scan — P2/P3 refits of all Z targets are
+    one jitted dispatch instead of Z (the Updater cadence item, DESIGN.md
+    §5).
+
+    Preconditions for stacking: homogeneous architecture (window / hidden /
+    residual / use_pallas / opt_cfg) and equal-length series (true whenever
+    every target is observed each tick).  Returns ``None`` when they fail —
+    the caller falls back to sequential fits.  Otherwise returns a
+    ``BatchFitResult`` (already applied unless ``apply=False``; models
+    needing full-epoch scratch training and models needing finetune epochs
+    are grouped, one dispatch per group — a single dispatch in the
+    homogeneous steady state).
+    """
+    if not models or not all(type(m) is LSTMForecaster for m in models):
+        return None
+    m0 = models[0]
+    sig = lstm_stack_signature(m0) + (m0.opt_cfg,)
+    if not all(lstm_stack_signature(m) + (m.opt_cfg,) == sig
+               for m in models):
+        return None
+    serieses = [np.asarray(s, np.float64) for s in serieses]
+    if len({s.shape for s in serieses}) != 1:
+        return None
+    result = BatchFitResult()
+    if len(serieses[0]) < m0.window + 8:
+        # below fit()'s minimum-history gate: sequential fits would all
+        # no-op, so the batched path is trivially done
+        return result.apply() if apply else result
+    groups: dict[tuple, list[tuple]] = defaultdict(list)
+    for m, s in zip(models, serieses):
+        scratch = from_scratch or not m._fitted
+        groups[(m.epochs if scratch else m.finetune_epochs,
+                scratch)].append((m, s))
+    W = m0.window
+    for (epochs, scratch), pairs in groups.items():
+        ms, Xs, Ys, ps, scalers = [], [], [], [], []
+        for m, s in pairs:
+            if scratch:
+                sc = Scaler()
+                sc.fit(s)
+                p = _lstm_init(jax.random.PRNGKey(0), N_METRICS, m.hidden,
+                               N_METRICS)
+            else:
+                sc, p = m.scaler, m.params
+            z = sc.transform(s)
+            Xs.append(np.stack([z[i:i + W] for i in range(len(z) - W)]))
+            Ys.append(z[W:] - z[W - 1:-1] if m.residual else z[W:])
+            ms.append(m)
+            ps.append(p)
+            scalers.append(sc)
+        stacked_p = jax.tree.map(lambda *ls: jnp.stack(ls), *ps)
+        stacked_o = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                 *[adamw_init(p, m0.opt_cfg) for p in ps])
+        new_p, _, losses = _lstm_fit_stacked(
+            stacked_p, stacked_o, jnp.asarray(np.stack(Xs)),
+            jnp.asarray(np.stack(Ys)), m0.opt_cfg, epochs, m0.use_pallas)
+        result.add(ms, scalers, new_p, losses)
+    return result.apply() if apply else result
 
 
 # ------------------------------------------------------------------ ARMA ---
@@ -419,6 +570,16 @@ class ARIMAD1Forecaster(ARMAForecaster):
 
 
 # -------------------------------------------------------------- ensemble ---
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _lstm_forward_members(stacked_params, xs, *, use_pallas: bool = False):
+    """stacked_params: pytree with leading member axis E; xs (E, Z, W, M) ->
+    (E, Z, M) — members vmapped, targets on ``lstm_forward``'s own batch
+    axis, so E members x Z targets is one device dispatch."""
+    def fwd(p, x):
+        return lstm_forward(p, x, use_pallas=use_pallas)
+    return jax.vmap(fwd)(stacked_params, xs)
+
+
 class EnsembleForecaster(Forecaster):
     """Deep ensemble of LSTMs — the Bayesian path of Algorithm 1: predictive
     std across members is the (un)certainty compared against the PPA's
@@ -429,6 +590,7 @@ class EnsembleForecaster(Forecaster):
     def __init__(self, n_members: int = 4, **kw):
         self.members = [LSTMForecaster(seed=i, **kw) for i in range(n_members)]
         self.window = self.members[0].window
+        self._stack_cache: dict = {}
 
     def fit(self, series, from_scratch: bool = False):
         for m in self.members:
@@ -440,10 +602,38 @@ class EnsembleForecaster(Forecaster):
         return preds.mean(0), preds.std(0)
 
     def predict_batch(self, recents):
-        # one dispatch per member (each batched over Z), not Z * members
-        preds = np.stack([m.predict_batch(recents)[0]
-                          for m in self.members])     # (members, Z, M)
-        return preds.mean(0), preds.std(0)
+        """E members x Z targets in a SINGLE dispatch: member param pytrees
+        stacked on one leading axis, each member's scaler-transformed
+        (Z, W, M) window batch stacked alongside, ``lstm_forward`` vmapped
+        over the member axis.  The stacked params are cached per member fit
+        generation.  Falls back to one dispatch per member when members are
+        non-stackable (heterogeneous architecture)."""
+        ms = self.members
+        m0 = ms[0]
+        sig = lstm_stack_signature(m0)
+        if not all(type(m) is LSTMForecaster and m._fitted
+                   and lstm_stack_signature(m) == sig for m in ms):
+            preds = np.stack([m.predict_batch(recents)[0] for m in ms])
+            return preds.mean(0), preds.std(0)
+        if isinstance(recents, np.ndarray) and recents.ndim == 3:
+            wins = np.asarray(recents, np.float64)[:, -m0.window:]
+        else:
+            wins = np.stack([np.asarray(r, np.float64)[-m0.window:]
+                             for r in recents])
+        z = np.stack([m.scaler.transform(wins) for m in ms])  # (E, Z, W, M)
+        cache = getattr(self, "_stack_cache", None)
+        if cache is None:
+            cache = self._stack_cache = {}
+        gens = tuple(m._fit_count for m in ms)
+        if cache.get("gens") != gens:
+            cache["gens"] = gens
+            cache["stacked"] = stack_params(ms)
+        preds = np.asarray(_lstm_forward_members(
+            cache["stacked"], jnp.asarray(z), use_pallas=m0.use_pallas))
+        if m0.residual:
+            preds = z[:, :, -1] + preds
+        means = np.stack([m.scaler.inverse(p) for m, p in zip(ms, preds)])
+        return means.mean(0), means.std(0)
 
     def valid(self):
         return all(m.valid() for m in self.members)
@@ -452,8 +642,17 @@ class EnsembleForecaster(Forecaster):
         return {"members": [m.__getstate__() for m in self.members]}
 
     def __setstate__(self, d):
-        for m, s in zip(self.members, d["members"]):
+        # reconstruct members from scratch: __setstate__ runs on a bare
+        # instance (pickle/deepcopy skip __init__), so self.members does
+        # not exist yet
+        self._stack_cache = {}
+        members = []
+        for s in d["members"]:
+            m = LSTMForecaster.__new__(LSTMForecaster)
             m.__setstate__(s)
+            members.append(m)
+        self.members = members
+        self.window = members[0].window if members else 1
 
 
 def make_forecaster(kind: str, **kw) -> Forecaster:

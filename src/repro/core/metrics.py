@@ -43,8 +43,14 @@ class MetricsHistory:
             self._rows = [np.asarray(r, np.float64) for r in data["rows"]]
 
     def append(self, snap: Snapshot):
-        self._t.append(snap.t)
-        self._rows.append(snap.values)
+        self.append_row(snap.t, snap.values)
+
+    def append_row(self, t: float, values: np.ndarray):
+        """``append`` without the Snapshot wrapper — the batched observe
+        path (control_plane.observe_batch) records Z rows per tick and the
+        per-row dataclass construction is measurable at Z >= 10^3."""
+        self._t.append(float(t))
+        self._rows.append(values)
         if len(self._rows) > self.max_len:
             self._t = self._t[-self.max_len:]
             self._rows = self._rows[-self.max_len:]

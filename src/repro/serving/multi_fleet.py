@@ -7,10 +7,14 @@ level: *many* model fleets (chat, code, embeddings, ...) contend for one
 accelerator pool, and the interesting control problem is reallocating chips
 *between* fleets as their load curves move out of phase.
 
-``MultiFleetSim`` drives N fleets from one batched ``FleetController``
-(DESIGN.md §5 — one forecast dispatch answers every fleet per tick) and a
-``ChipBudgetArbiter`` that turns the controller's per-fleet replica demands
-into a feasible chip allocation each tick:
+``MultiFleetSim`` drives N fleets from one batched controller — a
+``FleetController`` or, at fleet-of-fleets scale, a ``ShardedControlPlane``
+(DESIGN.md §5 — one forecast dispatch per controller shard answers every
+fleet per tick; the staged ``begin_tick`` / ``finish_tick`` surface is used
+when the controller exposes it, so per-tick host prep overlaps the
+in-flight forecast and model refits run off the tick critical path) — and
+a ``ChipBudgetArbiter`` that turns the controller's per-fleet replica
+demands into a feasible chip allocation each tick:
 
 1. every fleet is granted its floor (``min_replicas`` worth of chips);
 2. if the remaining demand fits the remaining budget, grant it all;
@@ -147,6 +151,7 @@ class MultiFleetSim:
             f.scale_to(ctrl.min_replicas(n), 0.0)
             f.make_ready_now(0.0)
         idx = {n: 0 for n in self.fleets}
+        staged = hasattr(ctrl, "begin_tick")
         ticks = np.arange(self.window_s, t_end, self.window_s)
         for tick in ticks:
             tick = float(tick)
@@ -157,17 +162,22 @@ class MultiFleetSim:
                 ctrl.observe(n, f.sample(tick))
                 cur[n] = len(f.live_replicas())
                 max_r[n] = self.arbiter.total_chips // f.cfg.chips_per_replica
-            results = ctrl.control_step(tick, max_r, cur)
+            if staged:
+                # staged plane: launch the forecasts, build the arbiter
+                # inputs that don't depend on decisions while they are in
+                # flight, barrier only at actuation (finish_tick)
+                ctrl.begin_tick(tick, max_r, cur)
+            chips_per = {n: f.cfg.chips_per_replica
+                         for n, f in self.fleets.items()}
+            floors = {n: ctrl.min_replicas(n) for n in self.fleets}
+            weights = {n: self.specs[n].weight for n in self.fleets}
+            results = (ctrl.finish_tick() if staged
+                       else ctrl.control_step(tick, max_r, cur))
             demands = {
                 n: max(results[n].replicas, ctrl.min_replicas(n))
                 for n in self.fleets
             }
-            grant = self.arbiter.allocate(
-                demands,
-                {n: f.cfg.chips_per_replica for n, f in self.fleets.items()},
-                {n: ctrl.min_replicas(n) for n in self.fleets},
-                {n: self.specs[n].weight for n in self.fleets},
-            )
+            grant = self.arbiter.allocate(demands, chips_per, floors, weights)
             for n, f in self.fleets.items():
                 f.set_chip_budget(grant[n], tick)
                 granted_reps = grant[n] // f.cfg.chips_per_replica
@@ -178,6 +188,8 @@ class MultiFleetSim:
             ctrl.maybe_update(tick)
         for n in self.fleets:
             idx[n] = self._dispatch_until(n, t_end, idx[n], requests)
+        if hasattr(ctrl, "flush_updates"):
+            ctrl.flush_updates()    # barrier any refit still in flight
         return self
 
     def _dispatch_until(self, name, t, i, requests) -> int:

@@ -218,6 +218,25 @@ class WindowedExporter:
         self.samples[group].append((t, ma))
         return ma
 
+    # --------------------------------------------- overlapped-read API ----
+    # The staged control plane's collect stage reads the exporter while the
+    # sim side keeps pushing (async ticks, DESIGN.md §5): both methods are
+    # pure reads over the append-only samples log, so an overlapped reader
+    # never races the writer and never consumes another reader's data.
+    def latest(self, group: str):
+        """Most recent ``(t, smoothed)`` sample for ``group``; ``None``
+        before the first push."""
+        s = self.samples.get(group)
+        return s[-1] if s else None
+
+    def read_new(self, group: str, cursor: int = 0):
+        """``(samples appended at/after cursor, new cursor)`` — each reader
+        holds its own cursor, nothing is popped or mutated."""
+        s = self.samples.get(group)
+        if not s:
+            return [], 0
+        return s[cursor:], len(s)
+
 
 class SimCore:
     """Registry + pools + events + exporter: the shared substrate a domain

@@ -14,6 +14,10 @@ Four claims are measured (the PRs' acceptance bars):
 4. **Refit overlap** — a vmapped batch refit of Z=64 per-target LSTMs runs
    off the tick critical path: the max tick latency while the refit is in
    flight stays far below the blocking (in-loop) refit stall.
+5. **Policy dispatch** — a mixed Threshold/TargetUtilization policy set
+   (which used to force the O(Z/S)-Python ``_CtrlShard`` fallback) ticks
+   measurably faster on the columnar per-policy dispatch table
+   (DESIGN.md §6) than on the forced fallback.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_control_plane [--quick]
          [--check-baseline benchmarks/baselines/control_plane_baseline.json]
@@ -241,6 +245,94 @@ def bench_shard_sweep(zs=(16, 64, 256, 1024), n_shards: int = 8,
     return out
 
 
+def bench_policy_dispatch(Z: int = 256, n_shards: int = 8, ticks: int = 30,
+                          warmup: int = 3, hidden: int = 16):
+    """The columnar-policy-engine claim (DESIGN.md §6): a heterogeneous
+    policy set (mixed Threshold + TargetUtilization) used to force the
+    O(Z/S)-Python ``_CtrlShard`` fallback; the per-policy dispatch table
+    keeps it columnar.  Three configs on identical traces/models:
+
+    * ``single``   — one FleetController (scalar per-target evaluate);
+    * ``fallback`` — ShardedControlPlane forced onto _CtrlShard shards via
+      an opaque policy wrapper (the pre-dispatch-table cost);
+    * ``columnar`` — the same mixed built-in policies on the dispatch
+      table (one evaluate_batch per policy type per tick).
+    """
+    from repro.core import (FleetController, PPAConfig, ShardedControlPlane,
+                            Snapshot, TargetSpec, TargetUtilizationPolicy,
+                            ThresholdPolicy)
+
+    class _Opaque:
+        """Scalar-only wrapper: forces the _CtrlShard fallback."""
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __call__(self, key, state=None):
+            return self._inner(key, state)
+
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    traces = _traces(Z)
+    names = list(traces)
+    models = _clone_models(Z, traces, hidden=hidden)
+
+    def specs(opaque: bool):
+        out = []
+        for i, (n, m) in enumerate(zip(names, models)):
+            pol = (ThresholdPolicy(100.0, 1) if i % 2
+                   else TargetUtilizationPolicy(0.7, 1))
+            out.append(TargetSpec(n, _Opaque(pol) if opaque else pol,
+                                  model=copy.deepcopy(m)))
+        return out
+
+    ks = [130 + (j % 60) for j in range(warmup + ticks)]
+    snap_rows = [np.stack([traces[n][k] for n in names]) for k in ks]
+
+    def drive(plane):
+        for n in names:
+            for k in range(120, 130):
+                plane.observe(n, Snapshot(15.0 * k, traces[n][k]))
+        times = []
+        for j, rows in enumerate(snap_rows):
+            t = 1e4 + 15.0 * j
+            t0 = time.perf_counter()
+            if hasattr(plane, "observe_batch"):
+                plane.observe_batch(t, rows)
+            else:
+                for i, n in enumerate(names):
+                    plane.observe(n, Snapshot(t, rows[i]))
+            plane.control_step(t, 64, 2)
+            times.append(time.perf_counter() - t0)
+        if hasattr(plane, "shutdown"):
+            plane.shutdown()
+        return float(np.mean(times[warmup:]))
+
+    single = drive(FleetController(cfg, specs(False)))
+    fallback_plane = ShardedControlPlane(cfg, specs(True),
+                                         n_shards=n_shards)
+    assert not any(s.vectorized for s in fallback_plane.shards)
+    fallback = drive(fallback_plane)
+    columnar_plane = ShardedControlPlane(cfg, specs(False),
+                                         n_shards=n_shards)
+    assert all(s.vectorized for s in columnar_plane.shards)
+    columnar = drive(columnar_plane)
+    out = {
+        "Z": Z, "n_shards": n_shards, "hidden": hidden,
+        "single_tick_ms": single * 1e3,
+        "fallback_tick_ms": fallback * 1e3,
+        "columnar_tick_ms": columnar * 1e3,
+        "columnar_ticks_per_s": 1.0 / columnar,
+        "speedup_vs_fallback": fallback / columnar,
+        "speedup_vs_single": single / columnar,
+    }
+    csv_row("policy_dispatch", columnar * 1e6,
+            f"mixed-policy Z={Z}: columnar={columnar * 1e3:.2f}ms vs "
+            f"fallback={fallback * 1e3:.2f}ms "
+            f"({out['speedup_vs_fallback']:.1f}x) vs "
+            f"single={single * 1e3:.2f}ms")
+    return out
+
+
 def bench_refit_overlap(Z: int = 64, n_shards: int = 8, ticks: int = 60,
                         trigger: int = 20):
     """The updater-cadence claim: a vmapped batch refit of Z per-target
@@ -338,6 +430,15 @@ def check_baseline(results: dict, path: Path) -> list[str]:
             errors.append(
                 f"Z={point['Z']}: {point['sharded_ticks_per_s']:,.0f} "
                 f"ticks/s < half of baseline {ref:,.0f}")
+    policy = results.get("policy_dispatch")
+    ref = base.get("policy_dispatch_ticks_per_s", {}).get(
+        str(policy["Z"]) if policy else None)
+    if policy is not None and ref is not None:
+        if policy["columnar_ticks_per_s"] < ref / 2.0:
+            errors.append(
+                f"policy dispatch Z={policy['Z']}: "
+                f"{policy['columnar_ticks_per_s']:,.0f} ticks/s "
+                f"< half of baseline {ref:,.0f}")
     return errors
 
 
@@ -352,13 +453,18 @@ def run(quick: bool = False, baseline: Path | None = None):
     fidelity = bench_shard_sweep(zs=(256,), ticks=10 if quick else 20,
                                  hidden=50)[0]
     refit = bench_refit_overlap(Z=64, ticks=40 if quick else 60)
+    policy = bench_policy_dispatch(Z=64 if quick else 256,
+                                   ticks=15 if quick else 30)
     payload = {"control_latency": lat, "sim_core_parity": par,
                "shard_sweep": sweep, "fidelity_point": fidelity,
-               "refit_overlap": refit}
+               "refit_overlap": refit, "policy_dispatch": policy}
     save_bench("control_plane", payload)
     assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
     assert par["parity_ok"], f"sim-core parity broken: {par}"
     assert refit["nonblocking"], f"refit blocked the tick loop: {refit}"
+    assert policy["speedup_vs_fallback"] >= 1.5, \
+        (f"columnar mixed-policy tick only "
+         f"{policy['speedup_vs_fallback']:.1f}x vs fallback (bar: >=1.5x)")
     if not quick:
         for p in sweep:
             if p["Z"] >= 256:

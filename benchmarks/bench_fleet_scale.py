@@ -1,6 +1,6 @@
-"""Fleet-scale sim benchmark (DESIGN.md §3, "Fleet scale").
+"""Fleet-scale sim benchmark (DESIGN.md §3 "Fleet scale", §6 "Columnar").
 
-Three claims are measured (the PR's acceptance bar):
+Five claims are measured (the PRs' acceptance bars):
 
 1. **Throughput** — the vectorised batch path (``WindowedArrivals`` +
    ``ArrayServerPool`` + ``CompletionLog``) sweeps P in {10^2..10^5} pods;
@@ -12,12 +12,18 @@ Three claims are measured (the PR's acceptance bar):
 3. **Multi-fleet** — several ``ServingFleet`` pools with out-of-phase load
    share one chip budget under a ``ChipBudgetArbiter``; the budget is never
    exceeded and chips actually move between fleets.
+4. **Bulk scale-up** — ONE water-filling placement per scale-up decision
+   (``waterfill_placement``) must beat the sequential per-pod argmax loop
+   by >= 3x at P = 10^4, placements identical.
+5. **Serving drain** — the windowed batch ``ServingFleet`` must beat
+   per-event dispatch by >= 2x events/sec on a fleet-sized request trace.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_fleet_scale [--smoke]
          [--check-baseline benchmarks/baselines/fleet_scale_baseline.json]
 
 ``--smoke`` is the CI lane: small P only, plus a baseline diff that fails
-on a >2x events/sec regression.  Results land in ``BENCH_fleet_scale.json``.
+on a >2x events/sec regression (all lanes).  Results land in
+``BENCH_fleet_scale.json``.
 """
 
 from __future__ import annotations
@@ -184,6 +190,113 @@ def bench_multi_fleet(t_end: float = 1800.0, budget: int = 192) -> dict:
     return out
 
 
+def bench_bulk_scale_up(P: int, trials: int = 3) -> dict:
+    """One vectorised water-filling build-out vs the sequential per-pod
+    argmax loop, placements asserted identical (DESIGN.md §6)."""
+    from repro.cluster import ClusterSim, SimConfig
+    from repro.cluster.topology import fleet_topology
+    from repro.workloads import poisson_arrivals
+
+    arr = poisson_arrivals(1.0, 30.0, WINDOW_S, zone=ZONE, seed=0)
+
+    def mk():
+        sim = ClusterSim(fleet_topology(P), SimConfig(seed=0))
+        sim._vec_init(arr)
+        sim._vec_zone(ZONE)
+        return sim
+
+    wall_b = wall_s = float("inf")
+    for _ in range(trials):
+        bulk, seq = mk(), mk()
+        t0 = time.perf_counter()
+        bulk._vec_scale_to(ZONE, P, 0.0)
+        wall_b = min(wall_b, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _ in range(P):
+            if seq._vec_schedule_pod(ZONE, 0.0) is None:
+                break
+        wall_s = min(wall_s, time.perf_counter() - t0)
+        n = bulk._apools[ZONE].n
+        assert n == seq._apools[ZONE].n == P, "build-out count mismatch"
+        parity = np.array_equal(bulk._slot_node[ZONE][:n], seq._slot_node[ZONE][:n])
+        assert parity, "bulk placement diverged from the sequential plan"
+    out = {
+        "P": P,
+        "wall_s_bulk": wall_b,
+        "wall_s_sequential": wall_s,
+        "pods_per_s_bulk": P / wall_b,
+        "pods_per_s_sequential": P / wall_s,
+        "speedup": wall_s / wall_b,
+    }
+    csv_row(
+        f"bulk_scale_up_P{P}",
+        wall_b * 1e6,
+        f"{out['pods_per_s_bulk']:,.0f} pods/s bulk vs "
+        f"{out['pods_per_s_sequential']:,.0f} sequential "
+        f"= {out['speedup']:.1f}x (bar at P=10^4: >=3x)",
+    )
+    return out
+
+
+def bench_serving_drain(
+    rate: float = 200.0, t_end: float = 1800.0, replicas: int = 64
+) -> dict:
+    """Windowed ``ServingFleet`` drain vs per-event dispatch on a
+    fixed-capacity fleet (isolates dispatch cost), plus a bitwise
+    completion-parity check."""
+    from repro.core.hpa import HPA
+    from repro.serving.fleet import FleetConfig, ServingFleet
+    from repro.workloads import poisson_arrivals
+
+    rng = np.random.default_rng(0)
+    arr = poisson_arrivals(rate, t_end, WINDOW_S, seed=3)
+    ntok = rng.integers(16, 64, len(arr.times))
+    reqs = [(float(t), int(n)) for t, n in zip(arr.times, ntok)]
+    cfg = FleetConfig(total_chips=replicas * 16, chips_per_replica=16, seed=0)
+
+    t0 = time.perf_counter()
+    pe = ServingFleet(cfg).run(
+        list(reqs),
+        HPA(560.0, min_replicas=replicas),
+        "hpa",
+        t_end,
+        min_replicas=replicas,
+    )
+    wall_pe = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bt = ServingFleet(cfg, batch=True).run(
+        (arr.times, ntok.astype(np.float64)),
+        HPA(560.0, min_replicas=replicas),
+        "hpa",
+        t_end,
+        min_replicas=replicas,
+    )
+    wall_bt = time.perf_counter() - t0
+    identical = bool(
+        np.array_equal(
+            bt.completed_log.view()["completion"],
+            np.array([r.completion for r in pe.completed]),
+        )
+    )
+    out = {
+        "events": len(reqs),
+        "wall_s_per_event": wall_pe,
+        "wall_s_batched": wall_bt,
+        "events_per_s_per_event": len(reqs) / wall_pe,
+        "events_per_s_batched": len(reqs) / wall_bt,
+        "speedup": wall_pe / wall_bt,
+        "identical": identical,
+    }
+    csv_row(
+        "serving_drain",
+        wall_bt * 1e6,
+        f"{out['events_per_s_batched']:,.0f} ev/s batched vs "
+        f"{out['events_per_s_per_event']:,.0f} per-event "
+        f"= {out['speedup']:.1f}x, identical={identical}",
+    )
+    return out
+
+
 def check_baseline(results: dict, path: Path) -> list[str]:
     """>2x events/sec regression vs the checked-in baseline fails CI."""
     base = json.loads(path.read_text())
@@ -197,6 +310,21 @@ def check_baseline(results: dict, path: Path) -> list[str]:
                 f"P={point['P']}: {point['events_per_s_batched']:,.0f} ev/s "
                 f"< half of baseline {ref:,.0f}"
             )
+    for point in results.get("bulk_scale_up", []):
+        ref = base.get("buildout_pods_per_s", {}).get(str(point["P"]))
+        if ref is not None and point["pods_per_s_bulk"] < ref / 2.0:
+            errors.append(
+                f"bulk P={point['P']}: {point['pods_per_s_bulk']:,.0f} "
+                f"pods/s < half of baseline {ref:,.0f}"
+            )
+    serving = results.get("serving_drain")
+    ref = base.get("serving_events_per_s_batched")
+    if serving is not None and ref is not None:
+        if serving["events_per_s_batched"] < ref / 2.0:
+            errors.append(
+                f"serving drain: {serving['events_per_s_batched']:,.0f} "
+                f"ev/s < half of baseline {ref:,.0f}"
+            )
     return errors
 
 
@@ -209,15 +337,28 @@ def run(smoke: bool = False, baseline: Path | None = None) -> dict:
         "sweep": [bench_point(P, t) for P, t in sweep],
         "parity": bench_parity(),
         "multi_fleet": bench_multi_fleet(t_end=600.0 if smoke else 1800.0),
+        "bulk_scale_up": [
+            bench_bulk_scale_up(P) for P in ((1000,) if smoke else (1000, 10_000))
+        ],
+        "serving_drain": bench_serving_drain(
+            rate=50.0 if smoke else 200.0,
+            t_end=600.0 if smoke else 1800.0,
+            replicas=16 if smoke else 64,
+        ),
     }
     save_bench("fleet_scale", results)
     assert results["parity"]["identical"], "batched drain lost seed parity"
     assert results["multi_fleet"]["budget_respected"], "chip budget exceeded"
+    assert results["serving_drain"]["identical"], "serving drain lost parity"
     if not smoke:
         p4 = next(p for p in results["sweep"] if p["P"] == 10_000)
         wall, speedup = p4["wall_s_batched"], p4["eps_speedup"]
         assert wall < 60.0, f"10^4-pod 2 h run took {wall:.1f}s (bar: <60s)"
         assert speedup >= 10.0, f"{speedup:.1f}x at P=10^4 (bar: >=10x)"
+        b4 = next(p for p in results["bulk_scale_up"] if p["P"] == 10_000)
+        assert b4["speedup"] >= 3.0, f"build-out {b4['speedup']:.1f}x (bar: >=3x)"
+        sd = results["serving_drain"]["speedup"]
+        assert sd >= 2.0, f"serving drain {sd:.1f}x (bar: >=2x)"
     if baseline is not None:
         errors = check_baseline(results, baseline)
         if errors:

@@ -26,7 +26,11 @@ Fleet-scale batch mode (DESIGN.md §3, "Fleet scale"): passing a
 substrate — per-zone ``ArrayServerPool``s drained one window chunk at a
 time (``drain_window``), a structured-numpy ``CompletionLog`` instead of
 per-task objects, and ``WindowAccumulator`` zone-level busy accounting
-instead of per-pod dicts.  This scales runs to 10⁴–10⁵ pods
+instead of per-pod dicts.  Pods are pure array rows (no ``PodState``
+objects on the hot path — ``sim.pods`` materialises views on demand), and
+scale-ups are ONE vectorised water-filling plan over the node free-CPU
+array per decision (``waterfill_placement``, DESIGN.md §6) instead of a
+per-pod argmax loop.  This scales runs to 10⁴–10⁵ pods
 (benchmarks/bench_fleet_scale.py); for a *single-zone* trace with
 homogeneous node speeds the batched drain produces the *identical*
 completion sequence as per-event dispatch (tests/test_fleet_scale.py).
@@ -50,7 +54,8 @@ import numpy as np
 from repro.cluster.topology import Node, Topology, paper_topology
 from repro.core.metrics import Snapshot
 from repro.sim import (ArrayServerPool, CompletionLog, SimCore,
-                       WindowAccumulator, drain_window)
+                       WindowAccumulator, drain_window, waterfill_placement)
+from repro.sim.core import grow_to
 from repro.workloads.fleet_scale import WindowedArrivals
 
 
@@ -99,6 +104,11 @@ class SimConfig:
     ram_per_pod_mb: float = 256.0
     straggler_redispatch_factor: float = 4.0   # deadline = factor * service
     seed: int = 0
+    # batch-mode CompletionLog memory policy: streaming folds windows older
+    # than ``log_retain_windows`` into per-window stats (10⁸-event runs stay
+    # bounded); the full in-memory log is the default
+    log_streaming: bool = False
+    log_retain_windows: int = 8
 
 
 @dataclasses.dataclass
@@ -117,7 +127,6 @@ class ClusterSim:
         self.rng = np.random.default_rng(self.cfg.seed)
         self.core = SimCore(self.cfg.control_interval_s, two_phase=True,
                             ma_windows=4)
-        self.pods: list[PodState] = self.core.servers
         self._next_pid = 0
         self.completed: list[Task] = []
         self.samples = self.core.exporter.samples
@@ -128,6 +137,30 @@ class ClusterSim:
         self.completed_log: CompletionLog | None = None
 
     # ------------------------------------------------------------ pods -----
+    @property
+    def pods(self) -> list[PodState]:
+        """Every pod ever scheduled, in pid order.  Heap mode returns the
+        live registry; batch mode materialises ``PodState`` *views* from
+        the columnar slot arrays on demand (pods are pure array rows on
+        the hot path — this accessor is for tests and diagnostics)."""
+        if not self._vec:
+            return self.core.servers
+        out = [self._make_pod(z, s) for z in self._apools
+               for s in range(self._apools[z].n)]
+        out.sort(key=lambda p: p.pid)
+        return out
+
+    def _make_pod(self, zone: str, slot: int) -> PodState:
+        pool = self._apools[zone]
+        ni = int(self._slot_node[zone][slot])
+        return PodState(int(self._slot_pid[zone][slot]), zone,
+                        self._znodes[zone][ni], self.cfg.pod_cpu_m,
+                        created=float(self._slot_created[zone][slot]),
+                        ready_at=float(pool.ready[slot]),
+                        free_at=float(pool.key[slot]),
+                        draining=bool(self._slot_draining[zone][slot]),
+                        dead=bool(self._slot_dead[zone][slot]))
+
     def _schedule_pod(self, zone: str, t: float) -> PodState | None:
         """Bin-pack a worker pod onto the zone node with most free capacity."""
         nodes = self.topo.zone_nodes(zone)
@@ -157,8 +190,7 @@ class ClusterSim:
             slots = pool.live_slots()
             if t is not None:
                 slots = slots[pool.ready[slots] <= t]
-            lst = self._slot_pod[zone]
-            return [lst[s] for s in slots]
+            return [self._make_pod(zone, int(s)) for s in slots]
         ps = self.core.live(zone)
         if t is not None:
             ps = [p for p in ps if p.available(t)]
@@ -192,11 +224,7 @@ class ClusterSim:
         if self._vec:
             for z in ([zone] if zone is not None else list(self._apools)):
                 pool = self._apools[z]
-                slots = pool.live_slots()
-                pool.make_ready(slots, t)
-                lst = self._slot_pod[z]
-                for s in slots:
-                    lst[s].ready_at = lst[s].free_at = t
+                pool.make_ready(pool.live_slots(), t)
             return
         pods = self.pods if zone is None else self.core.by_group[zone]
         for p in pods:
@@ -406,7 +434,7 @@ class ClusterSim:
     #  Fleet-scale vectorised path (DESIGN.md §3, "Fleet scale")            #
     # ===================================================================== #
     def _vec_init(self, arr: WindowedArrivals):
-        if self.pods:
+        if self.core.servers or self._next_pid:
             raise ValueError("batch mode must start from an empty sim")
         cfg = self.cfg
         if abs(arr.window_s - cfg.control_interval_s) > 1e-9:
@@ -419,55 +447,65 @@ class ClusterSim:
         self._kind_base = np.array([cfg.sort_service_s if k == "sort"
                                     else cfg.eigen_service_s
                                     for k in arr.kind_names])
-        self.completed_log = CompletionLog()
+        self.completed_log = CompletionLog(
+            streaming=cfg.log_streaming,
+            retain_windows=cfg.log_retain_windows)
         self._apools: dict[str, ArrayServerPool] = {}
-        self._slot_pod: dict[str, list[PodState]] = {}
+        # pods are pure array rows in batch mode: per-slot metadata lives
+        # in flat per-zone arrays (no PodState objects on the hot path)
         self._slot_speed: dict[str, np.ndarray] = {}
         self._slot_created: dict[str, np.ndarray] = {}
         self._slot_node: dict[str, np.ndarray] = {}
         self._slot_pid: dict[str, np.ndarray] = {}
+        self._slot_dead: dict[str, np.ndarray] = {}
+        self._slot_draining: dict[str, np.ndarray] = {}
         self._znodes: dict[str, list[Node]] = {}
         self._znode_free: dict[str, np.ndarray] = {}
+        self._znode_speed: dict[str, np.ndarray] = {}
         self._zone_busy: dict[str, WindowAccumulator] = {}
         self._zone_code: dict[str, int] = {}
-        self._pid_slot: dict[int, tuple[str, int]] = {}
 
     def _vec_zone(self, zone: str) -> ArrayServerPool:
         if zone not in self._apools:
             self._apools[zone] = ArrayServerPool()
-            self._slot_pod[zone] = []
             self._slot_speed[zone] = np.ones(64)
             self._slot_created[zone] = np.zeros(64)
             self._slot_node[zone] = np.zeros(64, np.int64)
             self._slot_pid[zone] = np.full(64, -1, np.int64)
+            self._slot_dead[zone] = np.zeros(64, np.bool_)
+            self._slot_draining[zone] = np.zeros(64, np.bool_)
             self._znodes[zone] = list(self.topo.zone_nodes(zone))
             self._znode_free[zone] = np.array(
                 [float(n.free_m) for n in self._znodes[zone]])
+            self._znode_speed[zone] = np.array(
+                [float(n.speed_factor) for n in self._znodes[zone]])
             self._zone_busy[zone] = WindowAccumulator(
                 self.cfg.control_interval_s)
             self._zone_code.setdefault(zone, len(self._zone_code))
         return self._apools[zone]
 
-    def _vec_append_slot(self, zone: str, slot: int, speed: float,
-                         created: float, node_idx: int, pid: int):
+    def _vec_append_slots(self, zone: str, slots: np.ndarray,
+                          node_seq: np.ndarray, pids: np.ndarray, t: float):
+        """Bulk slot-metadata append: one array write per column for a
+        whole placement batch."""
+        need = int(slots[-1]) + 1
         for name in ("_slot_speed", "_slot_created", "_slot_node",
-                     "_slot_pid"):
+                     "_slot_pid", "_slot_dead", "_slot_draining"):
             arrs = getattr(self, name)
-            arr = arrs[zone]
-            if slot >= len(arr):
-                buf = np.zeros(len(arr) * 2, arr.dtype)
-                buf[:len(arr)] = arr
-                arrs[zone] = buf
-        self._slot_speed[zone][slot] = speed
-        self._slot_created[zone][slot] = created
-        self._slot_node[zone][slot] = node_idx
-        self._slot_pid[zone][slot] = pid
+            arrs[zone] = grow_to(arrs[zone], need)
+        self._slot_speed[zone][slots] = self._znode_speed[zone][node_seq]
+        self._slot_created[zone][slots] = t
+        self._slot_node[zone][slots] = node_seq
+        self._slot_pid[zone][slots] = pids
+        self._slot_dead[zone][slots] = False
+        self._slot_draining[zone][slots] = False
 
     def _vec_schedule_pod(self, zone: str, t: float) -> int | None:
-        """Array-mode pod scheduling: argmax over the zone's node free-CPU
-        array (same first-max choice as the seed's ``max(free_m)`` scan,
-        O(nodes) in numpy instead of a Python node loop per pod)."""
-        pool = self._vec_zone(zone)
+        """Single-pod array-mode scheduling (the cold-zone / re-dispatch
+        safety net): argmax over the zone's node free-CPU array — the same
+        first-max choice as the seed's ``max(free_m)`` scan.  Bulk
+        scale-ups never loop this; they go through ``_vec_scale_up``."""
+        self._vec_zone(zone)
         free = self._znode_free[zone]
         if free.size == 0:
             return None
@@ -477,42 +515,65 @@ class ClusterSim:
         node = self._znodes[zone][ni]
         node.alloc_m += self.cfg.pod_cpu_m
         free[ni] -= self.cfg.pod_cpu_m
-        pod = PodState(self._next_pid, zone, node, self.cfg.pod_cpu_m,
-                       created=t, ready_at=t + self.cfg.startup_s,
-                       free_at=t + self.cfg.startup_s)
-        self._next_pid += 1
-        slot = pool.add(t, key=pod.free_at, ready_at=pod.ready_at)
-        self._vec_append_slot(zone, slot, node.speed_factor, t, ni, pod.pid)
-        self._slot_pod[zone].append(pod)
-        self._pid_slot[pod.pid] = (zone, slot)
-        self.pods.append(pod)
-        return slot
+        return int(self._vec_register(zone, np.array([ni]), t)[0])
 
-    def _vec_drain_slot(self, zone: str, slot: int):
-        pod = self._slot_pod[zone][slot]
-        pod.draining = True
-        ni = int(self._slot_node[zone][slot])
-        node = self._znodes[zone][ni]
-        node.alloc_m -= pod.cpu_m
-        if not node.failed:
-            self._znode_free[zone][ni] = float(node.free_m)
-        self._apools[zone].invalidate(slot)
+    def _vec_register(self, zone: str, node_seq: np.ndarray, t: float
+                      ) -> np.ndarray:
+        """Register placements (node bookkeeping already done): pool slots
+        + metadata columns + pid allocation, all batched."""
+        k = len(node_seq)
+        pool = self._apools[zone]
+        ready = t + self.cfg.startup_s
+        slots = pool.add_batch(k, key=ready, ready_at=ready)
+        pids = np.arange(self._next_pid, self._next_pid + k, dtype=np.int64)
+        self._next_pid += k
+        self._vec_append_slots(zone, slots, node_seq, pids, t)
+        return slots
+
+    def _vec_scale_up(self, zone: str, k: int, t: float) -> int:
+        """Bulk build-out: ONE vectorised water-filling plan over the node
+        free-CPU array per scale-up decision (placement parity with the
+        sequential argmax loop is property-tested), then one batched pool
+        / metadata append.  Returns the number of pods actually placed
+        (capacity may run out)."""
+        self._vec_zone(zone)
+        free = self._znode_free[zone]
+        seq, counts = waterfill_placement(free, self.cfg.pod_cpu_m, k)
+        if not len(seq):
+            return 0
+        free -= counts * float(self.cfg.pod_cpu_m)
+        nodes = self._znodes[zone]
+        for ni in np.flatnonzero(counts):       # touched nodes only
+            nodes[ni].alloc_m += int(counts[ni]) * self.cfg.pod_cpu_m
+        self._vec_register(zone, seq, t)
+        return len(seq)
+
+    def _vec_drain_slots(self, zone: str, slots: np.ndarray):
+        """Graceful drain of a slot batch: one metadata write + one pool
+        invalidate; node bookkeeping touches only affected nodes."""
+        slots = np.atleast_1d(np.asarray(slots))
+        self._slot_draining[zone][slots] = True
+        counts = np.bincount(self._slot_node[zone][slots],
+                             minlength=len(self._znodes[zone]))
+        for ni in np.flatnonzero(counts):
+            node = self._znodes[zone][ni]
+            node.alloc_m -= int(counts[ni]) * self.cfg.pod_cpu_m
+            if not node.failed:
+                self._znode_free[zone][ni] = float(node.free_m)
+        self._apools[zone].invalidate(slots)
 
     def _vec_scale_to(self, zone: str, n: int, t: float):
         pool = self._vec_zone(zone)
         cur = pool.n_live
         if cur < n:
-            for _ in range(n - cur):
-                if self._vec_schedule_pod(zone, t) is None:
-                    break
+            self._vec_scale_up(zone, n - cur, t)
         elif cur > n:
             # newest-created first, creation order within equal created —
             # the same choice as the heap path's stable sort on -created
             slots = pool.live_slots()
             order = np.argsort(-self._slot_created[zone][slots],
                                kind="stable")
-            for s in slots[order][:cur - n]:
-                self._vec_drain_slot(zone, int(s))
+            self._vec_drain_slots(zone, slots[order][:cur - n])
 
     # -------------------------------------------------- batched dispatch --
     def _vec_dispatch_window(self, zone: str, times: np.ndarray,
@@ -601,17 +662,14 @@ class ClusterSim:
                 ni = self._znodes[zone].index(node)
                 self._znode_free[zone][ni] = 0.0
                 pool = self._apools[zone]
-                on_node = np.flatnonzero(
-                    self._slot_node[zone][:pool.n] == ni)
-                lst = self._slot_pod[zone]
-                victims = [int(s) for s in on_node if not lst[s].dead]
-                for s in victims:
-                    pod = lst[s]
-                    pod.dead = True
-                    if not pod.draining:
-                        node.alloc_m -= pod.cpu_m
-                if victims:
-                    pool.invalidate(np.asarray(victims))
+                dead = self._slot_dead[zone]
+                on_node = self._slot_node[zone][:pool.n] == ni
+                victims = np.flatnonzero(on_node & ~dead[:pool.n])
+                dead[victims] = True
+                node.alloc_m -= self.cfg.pod_cpu_m * int(
+                    np.count_nonzero(~self._slot_draining[zone][victims]))
+                if victims.size:
+                    pool.invalidate(victims)
                     vpids = self._slot_pid[zone][victims]
                     rows = self.completed_log.view()
                     orphan = np.flatnonzero(
@@ -633,6 +691,7 @@ class ClusterSim:
                 node.speed_factor = arg["factor"]
                 if known:
                     ni = self._znodes[zone].index(node)
+                    self._znode_speed[zone][ni] = arg["factor"]
                     pool = self._apools[zone]
                     on_node = self._slot_node[zone][:pool.n] == ni
                     self._slot_speed[zone][:pool.n][on_node] = arg["factor"]

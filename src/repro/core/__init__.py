@@ -6,7 +6,8 @@ from repro.core.metrics import (METRIC_NAMES, N_METRICS, KEY_CPU, KEY_CUSTOM,
 from repro.core.forecaster import (Forecaster, LSTMForecaster,
                                    ARMAForecaster, ARIMAD1Forecaster,
                                    EnsembleForecaster, make_forecaster)
-from repro.core.policies import ThresholdPolicy, TargetUtilizationPolicy, make_policy
+from repro.core.policies import (ThresholdPolicy, TargetUtilizationPolicy,
+                                 make_policy, policy_vectorizable)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.updater import Updater, UpdatePolicy
 from repro.core.hpa import HPA

@@ -15,8 +15,10 @@ targets:
   deterministic crc32 hash (NOT Python's per-process-salted ``hash``) or an
   explicit assignment map; each shard forecasts on stacked (Z/S, W, M)
   tensors over columnar host state (ring-buffered metric windows,
-  vectorised scaler / ThresholdPolicy / ScaleDownStabilizer arithmetic), so
-  a tick costs O(S) array programs instead of O(Z) per-target object calls;
+  vectorised scaler / ScaleDownStabilizer arithmetic, and a per-policy
+  dispatch table — one ``Policy.evaluate_batch`` per policy *type* per
+  tick), so a tick costs O(S) array programs instead of O(Z) per-target
+  object calls even for heterogeneous policy sets;
 * **double-buffered async ticks** — ``begin_tick`` snapshots each shard's
   formulated windows and dispatches its forecast on a worker pool; the
   driver keeps collecting window-(t+1) metrics while window-t forecasts are
@@ -28,10 +30,12 @@ targets:
 
 Decision semantics are identical to ``FleetController`` by construction:
 the vectorised fast path reproduces ``Evaluator.decide_from_prediction`` +
-``ThresholdPolicy`` + ``ScaleDownStabilizer`` elementwise, and shards whose
-targets don't vectorise (heterogeneous models or non-threshold policies)
-fall back to an embedded ``FleetController``.  ``tests/test_sharded_plane``
-asserts seeded decision equivalence for any shard count, async on or off.
+each policy's scalar ``__call__`` + ``ScaleDownStabilizer`` elementwise,
+and the few shards whose targets still don't vectorise (heterogeneous
+models, custom policy callables without the ``stack``/``evaluate_batch``
+protocol) fall back to an embedded ``FleetController``.
+``tests/test_sharded_plane`` asserts seeded decision equivalence for any
+shard count, async on or off.
 """
 from __future__ import annotations
 
@@ -50,7 +54,7 @@ from repro.core.forecaster import (LSTMForecaster, _lstm_forward_stacked,
                                    lstm_stack_signature, stack_params,
                                    stack_scaler_stats, transform_stacked)
 from repro.core.metrics import N_METRICS, MetricsHistory, Snapshot
-from repro.core.policies import ThresholdPolicy
+from repro.core.policies import policy_vectorizable
 
 # ======================================================================= #
 #  The staged tick pipeline (composed by FleetController and the shards)  #
@@ -190,9 +194,11 @@ def shard_assignment(names, n_shards: int, assignment=None
 
 def _vectorizable(specs, shared_model) -> bool:
     """True when a shard's targets run on the columnar fast path: every
-    policy a ThresholdPolicy and (shared mode) any batched forecaster, or
-    (per-target mode) homogeneous stackable LSTMs."""
-    if not all(type(s.policy) is ThresholdPolicy for s in specs):
+    policy carries the vectorised protocol (``stack``/``evaluate_batch`` —
+    heterogeneous *types* are fine, the shard dispatches per type) and
+    (shared mode) any batched forecaster, or (per-target mode) homogeneous
+    stackable LSTMs."""
+    if not all(policy_vectorizable(s.policy) for s in specs):
         return False
     if shared_model is not None:
         return True
@@ -260,11 +266,17 @@ class _VecShard:
         self.ring = np.zeros((Zs, self.R, N_METRICS))
         self.count = np.zeros(Zs, np.int64)
         self.histories = [MetricsHistory() for _ in specs]
-        # vectorised ThresholdPolicy parameters
-        self.thr = np.array([s.policy.threshold for s in specs], np.float64)
-        self.pol_minr = np.array([s.policy.min_replicas for s in specs],
-                                 np.int64)
-        self.tol = np.array([s.policy.tolerance for s in specs], np.float64)
+        # per-policy dispatch table: group target indices by policy TYPE and
+        # stack each group's parameters once — decide() then runs ONE
+        # evaluate_batch per type per tick (heterogeneous policy sets cost
+        # O(#types) array programs, never O(Zs) per-target Python)
+        by_type: dict[type, list[int]] = {}
+        for i, s in enumerate(specs):
+            by_type.setdefault(type(s.policy), []).append(i)
+        self._pol_groups = [
+            (cls, np.asarray(idxs, np.int64),
+             cls.stack([specs[i].policy for i in idxs]))
+            for cls, idxs in by_type.items()]
         # vectorised scale-down stabilizer: per-tick (t, clamped desired)
         self._stab: list[tuple[float, np.ndarray]] = []
         self._stack_cache: dict = {}
@@ -373,9 +385,10 @@ class _VecShard:
 
     # ----------------------------------------------------------- evaluate --
     def decide(self, t, state, preds, max_r, cur_r):
-        """Vectorised Evaluator.decide_from_prediction + ThresholdPolicy +
-        ScaleDownStabilizer — the arithmetic matches the scalar objects
-        elementwise (property-tested in tests/test_sharded_plane.py)."""
+        """Vectorised Evaluator.decide_from_prediction + per-type policy
+        dispatch + ScaleDownStabilizer — the arithmetic matches the scalar
+        objects elementwise (property-tested in tests/test_sharded_plane.py
+        and tests/test_columnar.py)."""
         ring, count = state
         means, stds, bayes, cand = preds
         k = self.cfg.key_metric_idx
@@ -389,15 +402,17 @@ class _VecShard:
             conf[cand] = stds[cand, k] <= self.cfg.confidence_threshold
         predicted = cand & conf & np.isfinite(mk)
         key = np.where(predicted, mk, current_key)
-        # ThresholdPolicy, vectorised
-        with np.errstate(divide="ignore", invalid="ignore"):
-            dead = (cur > 0) & (np.abs(key / (self.thr * cur) - 1.0)
-                                <= self.tol)
-        n = np.maximum(np.ceil(np.maximum(key, 0.0) / self.thr),
-                       self.pol_minr)
-        n = np.where(dead | ~np.isfinite(key),
-                     np.maximum(cur, self.pol_minr), n)
-        n = np.minimum(n.astype(np.int64), maxr)
+        # static policies: one evaluate_batch per policy TYPE (the dispatch
+        # table built at construction) — elementwise identical to the
+        # scalar __call__ each Evaluator would make
+        if len(self._pol_groups) == 1:
+            cls, _, stacked = self._pol_groups[0]
+            n = cls.evaluate_batch(stacked, key, cur)
+        else:
+            n = np.empty(Zs, np.int64)
+            for cls, idx, stacked in self._pol_groups:
+                n[idx] = cls.evaluate_batch(stacked, key[idx], cur[idx])
+        n = np.minimum(n, maxr)
         # ScaleDownStabilizer, vectorised (shared timestamps per tick)
         self._stab.append((t, n))
         self._stab = [(tt, d) for tt, d in self._stab
@@ -454,9 +469,12 @@ class _VecShard:
 
 
 class _CtrlShard:
-    """Fallback shard for target sets the columnar path can't take
-    (heterogeneous models, non-threshold policies): delegates to an
-    embedded ``FleetController`` running the same staged tick."""
+    """Last-resort shard for target sets the columnar path can't take —
+    since the per-policy dispatch table this is only heterogeneous /
+    non-stackable model sets and custom policy callables that don't carry
+    the ``stack``/``evaluate_batch`` protocol.  Delegates to an embedded
+    ``FleetController`` running the same staged tick; it doubles as the
+    scalar parity oracle in tests."""
 
     vectorized = False
 

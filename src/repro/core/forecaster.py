@@ -176,6 +176,7 @@ class LSTMForecaster(Forecaster):
         self.opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=None,
                                    warmup_steps=0, total_steps=10**9,
                                    min_lr_ratio=1.0)
+        self._seed = seed
         self.params = _lstm_init(jax.random.PRNGKey(seed), N_METRICS, hidden,
                                  N_METRICS)
         self.scaler = Scaler()
@@ -194,8 +195,11 @@ class LSTMForecaster(Forecaster):
             return self
         if from_scratch or not self._fitted:
             self.scaler.fit(series)
-            self.params = _lstm_init(jax.random.PRNGKey(0), N_METRICS,
-                                     self.hidden, N_METRICS)
+            # the model's own seed, not a shared constant: ensemble members
+            # refit from scratch must stay diverse (the Bayesian std path)
+            self.params = _lstm_init(jax.random.PRNGKey(
+                getattr(self, "_seed", 0)), N_METRICS,
+                self.hidden, N_METRICS)
             epochs = self.epochs
         else:
             epochs = self.finetune_epochs
@@ -345,6 +349,35 @@ def _lstm_fit_stacked(stacked_params, stacked_opt, X, Y, opt_cfg, epochs,
     return jax.vmap(fit_one)(stacked_params, stacked_opt, X, Y)
 
 
+@functools.partial(jax.jit, static_argnames=("opt_cfg", "epochs",
+                                             "use_pallas"))
+def _lstm_fit_stacked_masked(stacked_params, stacked_opt, X, Y, W, opt_cfg,
+                             epochs, use_pallas=False):
+    """``_lstm_fit_stacked`` with a per-window weight mask ``W`` (Z, N):
+    ragged histories pad their window batches to a common N and zero the
+    padding's loss weight, so unequal-length targets still refit in ONE
+    vmapped dispatch.  With ``W[i] = 1`` on the real windows the weighted
+    loss equals the unpadded per-target MSE exactly, so gradients (and the
+    whole epoch scan) match the sequential fit."""
+    def fit_one(p, o, x, y, w):
+        def loss_fn(pp):
+            pred = lstm_forward(pp, x, use_pallas=use_pallas)
+            se = jnp.sum(w[:, None] * (pred - y) ** 2)
+            return se / (jnp.sum(w) * y.shape[-1])
+
+        def epoch(carry, _):
+            params, opt_state = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, _ = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            epoch, (p, o), None, length=epochs)
+        return params, opt_state, losses
+    return jax.vmap(fit_one)(stacked_params, stacked_opt, X, Y, W)
+
+
 class BatchFitResult:
     """Deferred application of a batched fit.
 
@@ -389,14 +422,27 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
     §5).
 
     Preconditions for stacking: homogeneous architecture (window / hidden /
-    residual / use_pallas / opt_cfg) and equal-length series (true whenever
-    every target is observed each tick).  Returns ``None`` when they fail —
-    the caller falls back to sequential fits.  Otherwise returns a
-    ``BatchFitResult`` (already applied unless ``apply=False``; models
-    needing full-epoch scratch training and models needing finetune epochs
-    are grouped, one dispatch per group — a single dispatch in the
-    homogeneous steady state).
+    residual / use_pallas / opt_cfg).  Unequal-length histories stay on the
+    vmapped path via pad-and-mask (``_lstm_fit_stacked_masked``): each
+    group's window batches are zero-padded to the longest target and the
+    padding carries zero loss weight, so ragged fits match their sequential
+    counterparts.  A list of ``EnsembleForecaster``s is flattened to its
+    members (E members x Z targets on the one batch axis).  Returns
+    ``None`` only when the models genuinely can't stack (heterogeneous
+    architectures / non-LSTM types) — the caller falls back to sequential
+    fits.  Otherwise returns a ``BatchFitResult`` (already applied unless
+    ``apply=False``; models needing full-epoch scratch training and models
+    needing finetune epochs are grouped, one dispatch per group — a single
+    dispatch in the homogeneous steady state).
     """
+    if models and all(type(m) is EnsembleForecaster for m in models):
+        # E x Z: every ensemble's members ride the same stacked batch axis,
+        # each member fitting on its ensemble's series
+        flat = [mm for m in models for mm in m.members]
+        flat_series = [s for m, s in zip(models, serieses)
+                       for _ in m.members]
+        return lstm_fit_batch_stacked(flat, flat_series, from_scratch,
+                                      apply)
     if not models or not all(type(m) is LSTMForecaster for m in models):
         return None
     m0 = models[0]
@@ -405,27 +451,29 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
                for m in models):
         return None
     serieses = [np.asarray(s, np.float64) for s in serieses]
-    if len({s.shape for s in serieses}) != 1:
-        return None
+    if len({s.shape[1:] for s in serieses}) != 1:
+        return None                      # metric dimension must agree
     result = BatchFitResult()
-    if len(serieses[0]) < m0.window + 8:
-        # below fit()'s minimum-history gate: sequential fits would all
-        # no-op, so the batched path is trivially done
+    W = m0.window
+    # fit()'s minimum-history gate, per target: short histories no-op
+    # sequentially, so they are simply excluded from the batch
+    eligible = [(m, s) for m, s in zip(models, serieses)
+                if len(s) >= W + 8]
+    if not eligible:
         return result.apply() if apply else result
     groups: dict[tuple, list[tuple]] = defaultdict(list)
-    for m, s in zip(models, serieses):
+    for m, s in eligible:
         scratch = from_scratch or not m._fitted
         groups[(m.epochs if scratch else m.finetune_epochs,
                 scratch)].append((m, s))
-    W = m0.window
     for (epochs, scratch), pairs in groups.items():
         ms, Xs, Ys, ps, scalers = [], [], [], [], []
         for m, s in pairs:
             if scratch:
                 sc = Scaler()
                 sc.fit(s)
-                p = _lstm_init(jax.random.PRNGKey(0), N_METRICS, m.hidden,
-                               N_METRICS)
+                p = _lstm_init(jax.random.PRNGKey(
+                    getattr(m, "_seed", 0)), N_METRICS, m.hidden, N_METRICS)
             else:
                 sc, p = m.scaler, m.params
             z = sc.transform(s)
@@ -437,9 +485,25 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
         stacked_p = jax.tree.map(lambda *ls: jnp.stack(ls), *ps)
         stacked_o = jax.tree.map(lambda *ls: jnp.stack(ls),
                                  *[adamw_init(p, m0.opt_cfg) for p in ps])
-        new_p, _, losses = _lstm_fit_stacked(
-            stacked_p, stacked_o, jnp.asarray(np.stack(Xs)),
-            jnp.asarray(np.stack(Ys)), m0.opt_cfg, epochs, m0.use_pallas)
+        lens = {len(x) for x in Xs}
+        if len(lens) == 1:
+            new_p, _, losses = _lstm_fit_stacked(
+                stacked_p, stacked_o, jnp.asarray(np.stack(Xs)),
+                jnp.asarray(np.stack(Ys)), m0.opt_cfg, epochs,
+                m0.use_pallas)
+        else:
+            # ragged: pad to the longest window batch, mask the padding
+            n_max = max(lens)
+            Xp = np.zeros((len(Xs), n_max) + Xs[0].shape[1:])
+            Yp = np.zeros((len(Ys), n_max) + Ys[0].shape[1:])
+            Wt = np.zeros((len(Xs), n_max))
+            for i, (x, y) in enumerate(zip(Xs, Ys)):
+                Xp[i, :len(x)] = x
+                Yp[i, :len(y)] = y
+                Wt[i, :len(x)] = 1.0
+            new_p, _, losses = _lstm_fit_stacked_masked(
+                stacked_p, stacked_o, jnp.asarray(Xp), jnp.asarray(Yp),
+                jnp.asarray(Wt), m0.opt_cfg, epochs, m0.use_pallas)
         result.add(ms, scalers, new_p, losses)
     return result.apply() if apply else result
 
@@ -593,8 +657,15 @@ class EnsembleForecaster(Forecaster):
         self._stack_cache: dict = {}
 
     def fit(self, series, from_scratch: bool = False):
-        for m in self.members:
-            m.fit(series, from_scratch=from_scratch)
+        """All E members in ONE vmapped dispatch (their param pytrees ride
+        ``lstm_fit_batch_stacked``'s batch axis, matching what
+        ``predict_batch`` does for the forward); heterogeneous member
+        architectures fall back to the member loop."""
+        if lstm_fit_batch_stacked(self.members,
+                                  [series] * len(self.members),
+                                  from_scratch) is None:
+            for m in self.members:
+                m.fit(series, from_scratch=from_scratch)
         return self
 
     def predict(self, recent):

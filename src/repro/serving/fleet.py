@@ -18,6 +18,26 @@ Like ClusterSim, this is a thin adapter over ``repro.sim.SimCore``
 least-loaded-slot ordering, injected events live on a heap, and in-flight
 requests are tracked per replica instead of re-scanning the whole
 completion log on failure.
+
+Windowed batch mode (DESIGN.md §6, "Columnar"): ``ServingFleet(cfg,
+batch=True)`` swaps the per-request heap dispatch for ``drain_window``
+idle-chunk rounds over a slot-level ``ArrayServerPool`` — one server per
+(replica, slot), replicas as pure array rows, completions in a
+structured-numpy ``CompletionLog`` (the ``kind`` column carries an
+int16-clipped copy of ``n_tokens`` for inspection; the authoritative
+per-row token counts live in ``_ntok_rows``) and ``WindowAccumulator``
+fleet-level busy accounting.  For
+a fleet with homogeneous replica speeds the windowed drain produces the
+*bitwise identical* (arrival, start, completion) sequence as per-event
+dispatch whenever the deadline re-dispatch rule doesn't fire (mild
+overload included — the busy fallback is exact); slot-level selection
+order is provably the same as replica-then-slot selection
+(tests/test_columnar.py property-checks it).  Known deviations mirror
+ClusterSim's: replica *attribution* of a request may differ when a busy
+slot frees mid-chunk (starts/completions unchanged), so deadline
+re-dispatches — which exclude the original replica — and severe
+stragglers are statistically equivalent rather than bitwise, and a dead
+replica's already-executed busy time stays in the fleet-level metric.
 """
 from __future__ import annotations
 
@@ -28,7 +48,9 @@ from collections import defaultdict
 import numpy as np
 
 from repro.core.metrics import Snapshot
-from repro.sim import SimCore
+from repro.sim import (ArrayServerPool, CompletionLog, SimCore,
+                       WindowAccumulator)
+from repro.sim.core import grow_to
 
 _GROUP = "fleet"
 
@@ -77,7 +99,7 @@ class ServeRequest:
 
 
 class ServingFleet:
-    def __init__(self, cfg: FleetConfig | None = None):
+    def __init__(self, cfg: FleetConfig | None = None, batch: bool = False):
         self.cfg = cfg or FleetConfig()
         self.chip_budget = self.cfg.total_chips
         self.core = SimCore(self.cfg.control_interval_s, two_phase=False,
@@ -90,6 +112,26 @@ class ServingFleet:
             self.core.exporter.samples[_GROUP]
         self.replica_log: list[tuple[float, int]] = []
         self.rng = np.random.default_rng(self.cfg.seed)
+        # windowed batch mode: slot-level array pool + columnar replicas
+        self._vec = bool(batch)
+        self.completed_log: CompletionLog | None = None
+        if self._vec:
+            self._spool = ArrayServerPool()
+            self._rep_ready = np.zeros(16)
+            self._rep_speed = np.ones(16)
+            self._rep_dead = np.zeros(16, np.bool_)
+            self._rep_draining = np.zeros(16, np.bool_)
+            self._rep_n = 0
+            self.completed_log = CompletionLog()
+            # authoritative per-row n_tokens (the log's int16 kind column
+            # only carries a clipped copy for inspection); row index ==
+            # append order, so it stays aligned with the log's view().
+            # Doubling buffer — an np.concatenate per window would make
+            # total copying quadratic in run length
+            self._ntok_buf = np.zeros(1024, np.float64)
+            self._ntok_n = 0
+            self._busy_acc = WindowAccumulator(self.cfg.control_interval_s)
+            self._cap_log: list[tuple[float, int]] = []
 
     # ----------------------------------------------------------- scaling ---
     @property
@@ -101,7 +143,7 @@ class ServingFleet:
         per-tick lever, serving/multi_fleet.py).  Shrinking below current
         usage drains the newest replicas immediately."""
         self.chip_budget = int(chips)
-        cur = len(self.core.live(_GROUP))
+        cur = len(self.live_replicas())
         if cur > self.max_replicas:
             self.scale_to(self.max_replicas, t)
 
@@ -111,12 +153,18 @@ class ServingFleet:
         return max(min(r.slot_free_at), r.ready_at)
 
     def live_replicas(self, t: float | None = None):
+        """Live (not dead / not draining, optionally ready) replicas — the
+        heap path returns ``_Replica`` objects, batch mode returns rids."""
+        if self._vec:
+            return np.flatnonzero(self._rep_live_mask(t)).tolist()
         rs = self.core.live(_GROUP)
         if t is not None:
             rs = [r for r in rs if r.ready_at <= t]
         return rs
 
     def scale_to(self, n: int, t: float):
+        if self._vec:
+            return self._vec_scale_to(n, t)
         n = min(n, self.max_replicas)
         cur = self.core.live(_GROUP)
         if len(cur) < n:
@@ -134,12 +182,65 @@ class ServingFleet:
 
     def make_ready_now(self, t: float = 0.0):
         """Mark current replicas warm at ``t`` (pre-provisioned capacity)."""
+        if self._vec:
+            S = self.cfg.slots_per_replica
+            live = np.flatnonzero(self._rep_live_mask())
+            slots = (live[:, None] * S + np.arange(S)).ravel()
+            old = np.repeat(self._rep_ready[live], S)
+            key = self._spool.key
+            # undispatched slots carry key == old ready; dispatched slots
+            # keep their completion horizon (same as the heap reset)
+            key[slots] = np.where(key[slots] == old, float(t), key[slots])
+            self._rep_ready[live] = t
+            return
         for r in self.core.live(_GROUP):
             r.ready_at = t
             self.core.pool(_GROUP).reset(r, self._effective(r))
 
+    # ---------------------------------------------- batch-mode replicas ----
+    def _rep_live_mask(self, t: float | None = None) -> np.ndarray:
+        m = ~self._rep_dead[:self._rep_n] & ~self._rep_draining[:self._rep_n]
+        if t is not None:
+            m &= self._rep_ready[:self._rep_n] <= t
+        return m
+
+    def _grow_reps(self, need: int):
+        for name in ("_rep_ready", "_rep_speed", "_rep_dead",
+                     "_rep_draining"):
+            setattr(self, name, grow_to(getattr(self, name), need))
+
+    def _vec_scale_to(self, n: int, t: float):
+        """Columnar scale: spawn is one batched array append (replica rows
+        + S slots each), drain one metadata write + pool invalidate."""
+        n = min(n, self.max_replicas)
+        S = self.cfg.slots_per_replica
+        live = np.flatnonzero(self._rep_live_mask())
+        cur = len(live)
+        if cur < n:
+            k = n - cur
+            self._grow_reps(self._rep_n + k)
+            rids = np.arange(self._rep_n, self._rep_n + k)
+            self._rep_ready[rids] = t + self.cfg.spawn_s
+            self._rep_speed[rids] = 1.0
+            self._rep_n += k
+            # slot key = max(slot_free, ready) = ready until first dispatch;
+            # pool ready stays 0 so selection is single-phase (the heap
+            # fleet pool folds ready into the key the same way)
+            self._spool.add_batch(k * S, key=t + self.cfg.spawn_s,
+                                  ready_at=0.0)
+        elif cur > n:
+            # newest ready_at first, rid order within ties — the same
+            # choice as the heap path's stable sort on -ready_at
+            order = np.argsort(-self._rep_ready[live], kind="stable")
+            victims = live[order][:cur - n]
+            self._rep_draining[victims] = True
+            self._spool.invalidate(
+                (victims[:, None] * S + np.arange(S)).ravel())
+
     # -------------------------------------------------------- dispatching --
     def dispatch(self, req: ServeRequest, t: float):
+        if self._vec:
+            raise RuntimeError("batch-mode fleet: use dispatch_window")
         pool = self.core.pool(_GROUP)
         r = pool.select(t)
         in_pool = r is not None
@@ -183,6 +284,181 @@ class ServingFleet:
                 h.slot_free_at[j] = req.completion
                 pool.update(h, self._effective(h))
 
+    # ------------------------------------------------- windowed dispatch ---
+    def dispatch_window(self, times: np.ndarray, ntokens: np.ndarray):
+        """Drain one sorted same-window arrival chunk through the slot
+        array pool in vectorised idle rounds (``drain_window`` semantics,
+        specialised so the per-event deadline re-dispatch rule runs inside
+        the rounds): each round assigns the next k arrivals to the k idle
+        slots at the chunk head — slot creation order IS the heap path's
+        replica-then-slot order — and only the no-idle-slot fallback pays
+        per-request Python.  Appends one ``CompletionLog`` batch; bitwise
+        start/completion parity with per-event dispatch for homogeneous
+        replica speeds while the deadline re-dispatch rule stays quiet
+        (see the module docstring for the attribution caveat)."""
+        cfg = self.cfg
+        S = cfg.slots_per_replica
+        pool = self._spool
+        times = np.asarray(times, np.float64)
+        ntok = np.asarray(ntokens, np.float64)
+        n = len(times)
+        rids = np.full(n, -1, np.int64)
+        starts = np.empty(n, np.float64)
+        comps = np.empty(n, np.float64)
+        svcs = np.empty(n, np.float64)
+        redis = np.zeros(n, np.bool_)
+        i = 0
+        while i < n:
+            t0 = float(times[i])
+            idle = pool.idle_slots(t0, n - i)
+            k = len(idle)
+            if k:
+                rid = idle // S
+                st = times[i:i + k]
+                sv = (cfg.prefill_s
+                      + ntok[i:i + k] / (cfg.decode_tok_s
+                                         * self._rep_speed[rid]))
+                cm = st + sv
+                pool.key[idle] = cm
+                rids[i:i + k] = rid
+                starts[i:i + k], comps[i:i + k] = st, cm
+                svcs[i:i + k] = sv
+                # busy credits the ORIGINAL interval (the heap path accounts
+                # before any re-dispatch and never re-accounts)
+                self._busy_acc.add_batch(st, cm)
+                # severe-straggler re-dispatch: start == arrival here, so
+                # only speed < 1/deadline_factor replicas can blow the
+                # deadline — flagged at idle-round granularity
+                nominal = cfg.prefill_s + ntok[i:i + k] / cfg.decode_tok_s
+                for j in np.flatnonzero(sv > cfg.deadline_factor * nominal):
+                    newc = self._vec_redispatch_req(
+                        int(rid[j]), float(st[j]), float(nominal[j]))
+                    if newc is not None:
+                        comps[i + j] = newc
+                        redis[i + j] = True
+                i += k
+                continue
+            # fallback: exact per-event selection (min-key slot; overload /
+            # spin-up), deadline re-dispatch rule applied per request
+            s = pool.select(t0)
+            if s < 0:
+                rid1, s = self._vec_last_resort(t0)
+            else:
+                rid1 = s // S
+            st1 = max(t0, float(pool.key[s]), float(self._rep_ready[rid1]))
+            sv1 = (cfg.prefill_s
+                   + float(ntok[i]) / (cfg.decode_tok_s
+                                       * float(self._rep_speed[rid1])))
+            cm1 = st1 + sv1
+            pool.key[s] = cm1
+            self._busy_acc.add(st1, cm1)
+            rids[i], starts[i], comps[i], svcs[i] = rid1, st1, cm1, sv1
+            nominal1 = cfg.prefill_s + float(ntok[i]) / cfg.decode_tok_s
+            if cm1 - t0 > cfg.deadline_factor * nominal1:
+                newc = self._vec_redispatch_req(rid1, t0, nominal1)
+                if newc is not None:
+                    comps[i] = newc
+                    redis[i] = True
+            i += 1
+        self.completed_log.append_batch(
+            times, starts, comps, svcs, rids,
+            kind=np.minimum(ntok, np.iinfo(np.int16).max).astype(np.int16),
+            redispatched=redis)
+        self._ntok_buf = grow_to(self._ntok_buf, self._ntok_n + n)
+        self._ntok_buf[self._ntok_n:self._ntok_n + n] = ntok
+        self._ntok_n += n
+        self.core.exporter.count(_GROUP, n)
+
+    def _slot_keys(self) -> np.ndarray:
+        """(R, S) view of the slot selection keys."""
+        S = self.cfg.slots_per_replica
+        return self._spool.key[:self._rep_n * S].reshape(self._rep_n, S)
+
+    def _vec_redispatch_req(self, orig_rid: int, t: float, nominal: float):
+        """The per-event deadline re-dispatch rule on columnar state: pick
+        the healthy replica whose earliest slot frees first (ties by rid),
+        book ``nominal`` service there; the straggler keeps its abandoned
+        work (same as the heap path).  Returns the new completion or None
+        when no healthy replica exists."""
+        S = self.cfg.slots_per_replica
+        m = self._rep_live_mask(t)
+        m &= self._rep_speed[:self._rep_n] >= 0.9
+        if orig_rid < self._rep_n:
+            m[orig_rid] = False
+        healthy = np.flatnonzero(m)
+        if not healthy.size:
+            return None
+        keys = self._slot_keys()
+        h = int(healthy[int(np.argmin(keys[healthy].min(axis=1)))])
+        j = int(np.argmin(keys[h]))
+        start = max(float(keys[h, j]), float(self._rep_ready[h]), t)
+        comp = start + nominal
+        self._spool.key[h * S + j] = comp
+        return comp
+
+    def _vec_last_resort(self, t: float) -> tuple[int, int]:
+        """Everything dead or draining: book onto the least-loaded
+        not-dead replica (the heap path's drain-last-resort), else cold
+        start one replica."""
+        not_dead = np.flatnonzero(~self._rep_dead[:self._rep_n])
+        if not_dead.size:
+            keys = self._slot_keys()
+            eff = np.maximum(keys[not_dead].min(axis=1), t)
+            rid = int(not_dead[int(np.argmin(eff))])
+            return rid, rid * self.cfg.slots_per_replica + int(
+                np.argmin(keys[rid]))
+        self._vec_scale_to(1, t)
+        s = int(self._spool.select(t))
+        return s // self.cfg.slots_per_replica, s
+
+    def _vec_requeue_row(self, row: int, t: float):
+        """Re-dispatch one orphaned completion-log row (replica failure) —
+        the batch-mode mirror of ``dispatch(req, t)`` with
+        ``redispatched=True``."""
+        cfg = self.cfg
+        pool = self._spool
+        ntokens = float(self._ntok_buf[row])
+        s = int(pool.select(t))
+        if s < 0:
+            rid, s = self._vec_last_resort(t)
+        else:
+            rid = s // cfg.slots_per_replica
+        st = max(t, float(pool.key[s]), float(self._rep_ready[rid]))
+        sv = (cfg.prefill_s
+              + ntokens / (cfg.decode_tok_s * float(self._rep_speed[rid])))
+        cm = st + sv
+        pool.key[s] = cm
+        self._busy_acc.add(st, cm)
+        self.completed_log.amend(row, start=st, completion=cm, service=sv,
+                                 server=rid, redispatched=True)
+        self.core.exporter.count(_GROUP)
+
+    def _vec_apply_events(self, t: float):
+        S = self.cfg.slots_per_replica
+        requeue: list[int] = []
+        for _, kind, arg in self.core.events.pop_due(t):
+            rid = int(arg["rid"])
+            if rid >= self._rep_n:
+                continue
+            if kind == "fail" and not self._rep_dead[rid]:
+                self._rep_dead[rid] = True
+                self._spool.invalidate(np.arange(rid * S, rid * S + S))
+                rows = self.completed_log.view()
+                orphan = np.flatnonzero((rows["server"] == rid)
+                                        & (rows["completion"] > t)
+                                        & ~rows["redispatched"])
+                if orphan.size:
+                    # cancel the un-executed remainder of each orphan's old
+                    # interval, then re-dispatch in log order
+                    st = np.maximum(rows["start"][orphan], t)
+                    self._busy_acc.add_batch(st, rows["completion"][orphan],
+                                             sign=-1.0)
+                    requeue.extend(int(r) for r in orphan)
+            elif kind == "slow":
+                self._rep_speed[rid] = arg["speed"]
+        for r in requeue:
+            self._vec_requeue_row(r, t)
+
     # ---------------------------------------------------------- failures ---
     def inject_failure(self, t: float, rid: int):
         self.core.events.push(t, "fail", rid=rid)
@@ -193,6 +469,8 @@ class ServingFleet:
         self.core.events.push(t + duration, "slow", rid=rid, speed=1.0)
 
     def _apply_events(self, t: float):
+        if self._vec:
+            return self._vec_apply_events(t)
         requeue: list[ServeRequest] = []
         for _, kind, arg in self.core.events.pop_due(t):
             r = self._by_rid.get(arg["rid"])
@@ -212,6 +490,8 @@ class ServingFleet:
 
     # ------------------------------------------------------------ metrics --
     def sample(self, t: float) -> Snapshot:
+        if self._vec:
+            return self._vec_sample(t)
         w = self.cfg.control_interval_s
         exporter = self.core.exporter
         win = exporter.window_index(t)
@@ -228,21 +508,52 @@ class ServingFleet:
         ma = exporter.push(_GROUP, t, vals)
         return Snapshot(t, ma)
 
+    def _vec_sample(self, t: float) -> Snapshot:
+        """Fleet-level columnar readout: same metric vector as the heap
+        path (draining replicas count toward capacity, dead ones don't;
+        busy comes from the WindowAccumulator)."""
+        cfg = self.cfg
+        w = cfg.control_interval_s
+        exporter = self.core.exporter
+        win = exporter.window_index(t)
+        not_dead = ~self._rep_dead[:self._rep_n]
+        cap = int(np.count_nonzero(
+            not_dead & (self._rep_ready[:self._rep_n] <= t))
+        ) * cfg.slots_per_replica
+        self._cap_log.append((t, cap))
+        busy = self._busy_acc.get(win) / w
+        util = 100.0 * busy / max(cap, 1)
+        rate = exporter.take_count(_GROUP) / w
+        vals = np.array([util * max(cap, 1), 0.0, busy, rate * 10, rate])
+        return Snapshot(t, exporter.push(_GROUP, t, vals))
+
     # --------------------------------------------------------------- run ---
-    def run(self, requests: list[tuple[float, int]], scaler, kind: str,
+    def run(self, requests, scaler, kind: str,
             t_end: float, min_replicas: int = 1):
-        """requests: sorted (arrival_t, n_tokens).  scaler: PPA or HPA."""
+        """requests: sorted (arrival_t, n_tokens) list, or in batch mode
+        optionally a ``(times, n_tokens)`` array pair.  scaler: PPA or
+        HPA.  Batch mode drains whole window chunks through
+        ``dispatch_window`` — zero per-request Python on the hot path."""
         self.scale_to(min_replicas, 0.0)
         self.make_ready_now(0.0)
         w = self.cfg.control_interval_s
         ticks = np.arange(w, t_end, w)
+        if self._vec:
+            times, ntoks = _as_request_arrays(requests)
+            lo = 0
         ri = 0
         for tick in ticks:
             self._apply_events(tick)
-            while ri < len(requests) and requests[ri][0] <= tick:
-                at, ntok = requests[ri]
-                self.dispatch(ServeRequest(at, ntok), at)
-                ri += 1
+            if self._vec:
+                hi = int(np.searchsorted(times, tick, side="right"))
+                self.dispatch_window(times[lo:hi], ntoks[lo:hi])
+                self.completed_log.seal_window()
+                lo = hi
+            else:
+                while ri < len(requests) and requests[ri][0] <= tick:
+                    at, ntok = requests[ri]
+                    self.dispatch(ServeRequest(at, ntok), at)
+                    ri += 1
             snap = self.sample(tick)
             cur = len(self.live_replicas(tick))
             if kind == "ppa":
@@ -255,6 +566,11 @@ class ServingFleet:
                 desired = scaler.decide(tick, recent, self.max_replicas, cur)
             self.scale_to(max(desired, min_replicas), tick)
             self.replica_log.append((tick, desired))
+        if self._vec:
+            hi = int(np.searchsorted(times, t_end, side="right"))
+            self.dispatch_window(times[lo:hi], ntoks[lo:hi])
+            self.completed_log.seal_window()
+            return self
         while ri < len(requests) and requests[ri][0] <= t_end:
             at, ntok = requests[ri]
             self.dispatch(ServeRequest(at, ntok), at)
@@ -262,11 +578,20 @@ class ServingFleet:
         return self
 
     def response_times(self) -> np.ndarray:
+        if self._vec:
+            return np.asarray(self.completed_log.response_times())
         return np.asarray([r.response for r in self.completed
                            if math.isfinite(r.completion)])
 
     def idle_fraction(self) -> float:
         w = self.cfg.control_interval_s
+        if self._vec:
+            total_busy = total_cap = 0.0
+            for t, cap in self._cap_log:
+                win = self.core.exporter.window_index(t)
+                total_cap += cap * w
+                total_busy += self._busy_acc.get(win)
+            return 1.0 - total_busy / max(total_cap, 1e-9)
         total_busy, total_cap = 0.0, 0.0
         for t, _ in self.samples:
             win = self.core.exporter.window_index(t)
@@ -275,3 +600,19 @@ class ServingFleet:
             total_cap += len(live) * self.cfg.slots_per_replica * w
             total_busy += sum(r.busy.get(win, 0.0) for r in live)
         return 1.0 - total_busy / max(total_cap, 1e-9)
+
+
+def _as_request_arrays(requests) -> tuple[np.ndarray, np.ndarray]:
+    """Accept a legacy sorted [(t, n_tokens)] sequence or a
+    (times, n_tokens) pair of numpy arrays; return float64 arrays.  The
+    array-pair form is recognised by its ndarray elements — a tuple of
+    two (t, n) request pairs would otherwise be ambiguous with a
+    length-2 times vector."""
+    if (isinstance(requests, tuple) and len(requests) == 2
+            and isinstance(requests[0], np.ndarray)):
+        return (np.asarray(requests[0], np.float64),
+                np.asarray(requests[1], np.float64))
+    if len(requests):
+        arr = np.asarray(requests, np.float64)
+        return arr[:, 0], arr[:, 1]
+    return np.zeros(0), np.zeros(0)

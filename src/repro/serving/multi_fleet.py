@@ -34,7 +34,6 @@ Kubernetes drain has — so instantaneous live occupancy (``chips_in_use``,
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 
@@ -118,7 +117,9 @@ class MultiFleetSim:
     -> arbiter -> ``set_chip_budget`` + ``scale_to`` per fleet.
     """
 
-    def __init__(self, specs: list[FleetSpec], total_chips: int, controller):
+    def __init__(
+        self, specs: list[FleetSpec], total_chips: int, controller, batch: bool = False
+    ):
         if not specs:
             raise ValueError("MultiFleetSim needs at least one fleet")
         names = {s.name for s in specs}
@@ -127,7 +128,10 @@ class MultiFleetSim:
         self.specs = {s.name: s for s in specs}
         self.controller = controller
         self.arbiter = ChipBudgetArbiter(total_chips)
-        self.fleets = {s.name: ServingFleet(s.cfg) for s in specs}
+        # batch=True puts every fleet on the windowed drain (DESIGN.md §6):
+        # with a ShardedControlPlane on top the whole sim is per-event-free
+        self.batch = bool(batch)
+        self.fleets = {s.name: ServingFleet(s.cfg, batch=batch) for s in specs}
         self.alloc_log: list[tuple[float, dict[str, int]]] = []
         self.usage_log: list[tuple[float, int]] = []  # live-chip occupancy
         w = {s.cfg.control_interval_s for s in specs}
@@ -150,6 +154,10 @@ class MultiFleetSim:
             f.set_chip_budget(self.arbiter.total_chips, 0.0)
             f.scale_to(ctrl.min_replicas(n), 0.0)
             f.make_ready_now(0.0)
+        if self.batch:
+            from repro.serving.fleet import _as_request_arrays
+
+            requests = {n: _as_request_arrays(requests.get(n, [])) for n in self.fleets}
         idx = {n: 0 for n in self.fleets}
         staged = hasattr(ctrl, "begin_tick")
         ticks = np.arange(self.window_s, t_end, self.window_s)
@@ -195,8 +203,14 @@ class MultiFleetSim:
     def _dispatch_until(self, name, t, i, requests) -> int:
         from repro.serving.fleet import ServeRequest
 
-        reqs = requests.get(name, [])
         fleet = self.fleets[name]
+        if self.batch:
+            times, ntoks = requests[name]
+            hi = int(np.searchsorted(times, t, side="right"))
+            fleet.dispatch_window(times[i:hi], ntoks[i:hi])
+            fleet.completed_log.seal_window()
+            return hi
+        reqs = requests.get(name, [])
         while i < len(reqs) and reqs[i][0] <= t:
             at, ntok = reqs[i]
             fleet.dispatch(ServeRequest(at, ntok), at)
@@ -206,13 +220,7 @@ class MultiFleetSim:
     # ----------------------------------------------------------- stats ----
     def response_times(self, name: str | None = None) -> np.ndarray:
         fleets = [self.fleets[name]] if name else list(self.fleets.values())
-        out = [
-            r.response
-            for f in fleets
-            for r in f.completed
-            if math.isfinite(r.completion)
-        ]
-        return np.asarray(out)
+        return np.concatenate([f.response_times() for f in fleets])
 
     def peak_chips(self) -> int:
         return max((sum(g.values()) for _, g in self.alloc_log), default=0)

@@ -4,4 +4,4 @@
 from repro.sim.events import EventQueue
 from repro.sim.core import (ArrayServerPool, CompletionLog, ServerPool,
                             SimCore, WindowAccumulator, WindowedExporter,
-                            account_busy, drain_window)
+                            account_busy, drain_window, waterfill_placement)

@@ -80,6 +80,19 @@ def account_busy(busy: dict, start: float, end: float, window_s: float):
             busy[i] += hi - lo
 
 
+def grow_to(arr: np.ndarray, need: int, fill=0) -> np.ndarray:
+    """Return ``arr`` or a doubled-capacity copy covering ``need`` slots —
+    the one growth policy every flat-array store here shares."""
+    cap = len(arr)
+    if need <= cap:
+        return arr
+    while cap < need:
+        cap *= 2
+    buf = np.full(cap, fill, arr.dtype) if fill else np.zeros(cap, arr.dtype)
+    buf[:len(arr)] = arr
+    return buf
+
+
 class ServerPool:
     """Heap-based server selection for one scaling group."""
 
@@ -306,12 +319,32 @@ class CompletionLog:
     is slice-queryable by control window — the driver calls
     ``seal_window`` once per tick and ``window_rows(w)`` returns the rows
     dispatched in window ``w`` as a zero-copy view.
+
+    **Streaming mode** (``streaming=True``): the full log holds ~43 B per
+    event, which caps runs near 10⁸ events.  Streaming keeps only the most
+    recent ``retain_windows`` sealed windows of raw rows; each older window
+    is folded into a per-window aggregate (count, redispatch count,
+    response-time sum / sum-of-squares / min / max) on ``seal_window`` and
+    its rows are compacted away, so resident memory is bounded by the
+    busiest ``retain_windows``-window span regardless of run length.
+    ``stats()`` / ``window_stats(w)`` read flushed and retained windows
+    uniformly; ``len()`` still counts every event ever appended.  Caveats:
+    ``response_times()``/``view()`` see retained rows only, and in-place
+    ``amend`` (failure re-dispatch) can only reach retained rows — size
+    ``retain_windows`` to cover the longest service time.
     """
 
-    def __init__(self, capacity: int = 1024):
+    def __init__(self, capacity: int = 1024, streaming: bool = False,
+                 retain_windows: int = 8):
         self._buf = np.zeros(max(int(capacity), 16), COMPLETION_DTYPE)
         self.n = 0
         self._offsets: list[int] = [0]   # row offset where window w begins
+        self.streaming = bool(streaming)
+        self.retain_windows = max(int(retain_windows), 1)
+        self._first_window = 0           # windows folded into _win_stats
+        self._n_flushed = 0              # rows compacted out of the buffer
+        self._win_stats: list[tuple] = []
+        self._warned_inflight = False
 
     def _grow(self, need: int):
         cap = len(self._buf)
@@ -352,19 +385,99 @@ class CompletionLog:
 
     # ------------------------------------------------------------- read --
     def seal_window(self):
-        """Mark the end of the current control window's appends."""
+        """Mark the end of the current control window's appends.  In
+        streaming mode, windows falling off the retention span are folded
+        into per-window aggregates and their rows compacted away."""
         self._offsets.append(self.n)
+        if self.streaming:
+            excess = len(self._offsets) - 1 - self.retain_windows
+            if excess > 0:
+                self._flush(excess)
+
+    def _flush(self, k: int):
+        """Fold the oldest ``k`` sealed windows into stats, drop their
+        rows (one array copy over the retained span).  Rows whose booked
+        completion is still in flight relative to the newest retained
+        arrival become invisible to ``amend`` (failure re-dispatch) once
+        flushed — warn so the operator can widen ``retain_windows``."""
+        cut = self._offsets[k]
+        if cut and self.n:
+            now_proxy = float(self._buf[:self.n]["arrival"].max())
+            if (self._buf[:cut]["completion"] > now_proxy).any() \
+                    and not self._warned_inflight:
+                self._warned_inflight = True
+                import warnings
+                warnings.warn(
+                    "CompletionLog streaming flush dropped rows whose "
+                    "completion is still in flight; in-place amendment "
+                    "(failure re-dispatch) cannot reach them — increase "
+                    "retain_windows to cover the longest service time",
+                    RuntimeWarning, stacklevel=3)
+        for w in range(k):
+            rows = self._buf[self._offsets[w]:self._offsets[w + 1]]
+            self._win_stats.append(self._aggregate(rows))
+        if cut:
+            self._buf[:self.n - cut] = self._buf[cut:self.n]
+            self.n -= cut
+            self._n_flushed += cut
+        self._offsets = [o - cut for o in self._offsets[k:]]
+        self._first_window += k
+
+    @staticmethod
+    def _aggregate(rows: np.ndarray) -> tuple:
+        resp = rows["completion"] - rows["arrival"]
+        r = resp[np.isfinite(resp)]
+        return (len(rows), int(np.count_nonzero(rows["redispatched"])),
+                float(r.sum()), float((r * r).sum()),
+                float(r.min()) if len(r) else np.inf,
+                float(r.max()) if len(r) else -np.inf)
 
     def window_rows(self, w: int) -> np.ndarray:
-        """Rows dispatched in sealed window ``w`` (zero-copy view)."""
-        if w + 1 >= len(self._offsets):
+        """Rows dispatched in sealed window ``w`` (zero-copy view; empty
+        for windows already flushed to stats in streaming mode)."""
+        lw = w - self._first_window
+        if lw < 0 or lw + 1 >= len(self._offsets):
             return self._buf[self.n:self.n]
-        return self._buf[self._offsets[w]:self._offsets[w + 1]]
+        return self._buf[self._offsets[lw]:self._offsets[lw + 1]]
+
+    def window_stats(self, w: int) -> dict:
+        """Aggregate stats for window ``w`` — identical shape whether the
+        window is still raw or already flushed (streaming mode)."""
+        lw = w - self._first_window
+        agg = (self._win_stats[w] if lw < 0
+               else self._aggregate(self.window_rows(w)))
+        return self._stats_dict(agg)
+
+    @staticmethod
+    def _stats_dict(agg: tuple) -> dict:
+        n, redis, s, ss, mn, mx = agg
+        ok = n > 0 and np.isfinite(mn)
+        mean = s / n if n else float("nan")
+        var = max(ss / n - mean * mean, 0.0) if n else float("nan")
+        return {"count": n, "redispatched": redis,
+                "resp_mean": mean if ok else float("nan"),
+                "resp_std": float(np.sqrt(var)) if ok else float("nan"),
+                "resp_min": mn if ok else float("nan"),
+                "resp_max": mx if ok else float("nan")}
+
+    def stats(self) -> dict:
+        """Whole-run aggregate over flushed windows + retained rows."""
+        aggs = list(self._win_stats) + [self._aggregate(self.view())]
+        n = sum(a[0] for a in aggs)
+        redis = sum(a[1] for a in aggs)
+        s = sum(a[2] for a in aggs)
+        ss = sum(a[3] for a in aggs)
+        mn = min((a[4] for a in aggs), default=np.inf)
+        mx = max((a[5] for a in aggs), default=-np.inf)
+        return self._stats_dict((n, redis, s, ss, mn, mx))
 
     def view(self) -> np.ndarray:
         return self._buf[:self.n]
 
     def response_times(self, kind: int | None = None) -> np.ndarray:
+        """Response times of the *retained* rows (= everything in full-log
+        mode; the trailing retention span in streaming mode — use
+        ``stats()`` for whole-run numbers there)."""
         rows = self.view()
         mask = np.isfinite(rows["completion"])
         if kind is not None:
@@ -373,7 +486,8 @@ class CompletionLog:
         return rows["completion"] - rows["arrival"]
 
     def __len__(self):
-        return self.n
+        """Every event ever appended (flushed rows included)."""
+        return self._n_flushed + self.n
 
 
 class WindowAccumulator:
@@ -475,6 +589,20 @@ class ArrayServerPool:
         self.n_live += 1
         return slot
 
+    def add_batch(self, k: int, key, ready_at) -> np.ndarray:
+        """Register ``k`` servers at once (one array write instead of k
+        Python calls — the bulk scale-up hot path).  ``key``/``ready_at``
+        may be scalars or (k,) arrays; returns the new slot indices."""
+        while self.n + k > len(self.key):
+            self._grow()
+        slots = np.arange(self.n, self.n + k)
+        self.key[slots] = key
+        self.ready[slots] = ready_at
+        self.live[slots] = True
+        self.n += k
+        self.n_live += k
+        return slots
+
     def update(self, slot: int, key: float):
         self.key[slot] = key
 
@@ -521,6 +649,47 @@ class ArrayServerPool:
         if pend.size:
             return int(pend[np.argmin(key[pend])])
         return -1
+
+
+def waterfill_placement(free, unit: float, k: int
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Plan ``k`` unit-sized placements over a node free-capacity array
+    with the exact semantics of ``k`` sequential greedy picks (argmax of
+    current free capacity, first index on ties, minus ``unit`` after each
+    pick) — but as ONE vectorised program: water-filling.
+
+    Each node ``i`` with free capacity ``f_i`` contributes the "slot
+    values" ``f_i - j*unit`` for ``j in [0, floor(f_i/unit))`` — the free
+    capacity the sequential greedy would see just before placing its
+    (j+1)-th pod there.  The greedy's pick sequence is exactly those slot
+    values in descending order (ties broken by node index ascending), so
+    the plan is a lexsort + top-k instead of k Python iterations.
+
+    Returns ``(node_seq, counts)``: ``node_seq`` is the node index of each
+    placement in sequential-greedy order (length <= k — capacity may run
+    out), ``counts`` the per-node placement totals.  Exact (bitwise) parity
+    with the sequential loop holds when ``free`` and ``unit`` are integral
+    (the cluster's millicore bookkeeping), where ``f - j*unit`` equals
+    repeated subtraction; tests/test_columnar.py property-checks it.
+    """
+    free = np.asarray(free, np.float64)
+    n = len(free)
+    u = np.maximum(np.floor(free / unit), 0.0).astype(np.int64)
+    k_eff = min(int(k), int(u.sum()))
+    if k_eff <= 0:
+        return np.zeros(0, np.int64), np.zeros(n, np.int64)
+    # no node can receive more than k placements, so capping each node's
+    # slot list at k bounds the sort to O(n*k) instead of O(total
+    # capacity) — bitwise-identical output (small-k ticks on huge idle
+    # fleets would otherwise pay a full-capacity lexsort)
+    u = np.minimum(u, k_eff)
+    total = int(u.sum())
+    node = np.repeat(np.arange(n), u)
+    j = np.arange(total) - np.repeat(np.cumsum(u) - u, u)
+    v = free[node] - j * unit
+    order = np.lexsort((node, -v))[:k_eff]
+    seq = node[order]
+    return seq, np.bincount(seq, minlength=n)
 
 
 def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,

@@ -1,0 +1,409 @@
+"""Columnar-everywhere layer (DESIGN.md §6): vectorised policy engine,
+bulk water-filling placement, windowed serving drain, pad-and-mask ragged
+refits, and the streaming CompletionLog.
+
+The load-bearing properties:
+* ``Policy.evaluate_batch`` == the scalar ``__call__``, elementwise, over
+  NaN/inf/negative keys and any current-replica state;
+* ``waterfill_placement`` == the sequential first-argmax greedy, placement
+  for placement (bitwise on integral capacities);
+* batch-mode ``ServingFleet`` == per-event dispatch, completion for
+  completion (bitwise while the deadline re-dispatch rule is quiet);
+* streaming ``CompletionLog`` stats == full-log stats with bounded memory.
+"""
+import copy
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hpa import HPA
+from repro.core.policies import (TargetUtilizationPolicy, ThresholdPolicy,
+                                 policy_vectorizable)
+from repro.serving.fleet import FleetConfig, ServingFleet
+from repro.sim import CompletionLog, waterfill_placement
+from repro.workloads import poisson_arrivals
+
+
+# ----------------------------------------------- policy evaluate_batch ----
+def _keys_strategy():
+    return st.lists(
+        st.one_of(st.floats(-1e4, 1e6),
+                  st.sampled_from([float("nan"), float("inf"),
+                                   float("-inf"), 0.0, -5.0])),
+        min_size=1, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=_keys_strategy(),
+       thr=st.floats(0.5, 1e4),
+       minr=st.integers(1, 5),
+       tol=st.floats(0.0, 0.5),
+       cur=st.integers(0, 40))
+def test_threshold_policy_batch_equals_scalar(keys, thr, minr, tol, cur):
+    pols = [ThresholdPolicy(thr, minr, tol) for _ in keys]
+    key = np.asarray(keys, np.float64)
+    curs = np.full(len(keys), cur, np.int64)
+    batch = ThresholdPolicy.evaluate_batch(ThresholdPolicy.stack(pols),
+                                           key, curs)
+    scalar = [p(k, {"current": cur}) for p, k in zip(pols, keys)]
+    assert batch.tolist() == scalar
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=_keys_strategy(),
+       target=st.floats(0.05, 5.0),
+       minr=st.integers(1, 5),
+       cur=st.integers(0, 40))
+def test_target_util_policy_batch_equals_scalar(keys, target, minr, cur):
+    pols = [TargetUtilizationPolicy(target, minr) for _ in keys]
+    key = np.asarray(keys, np.float64)
+    curs = np.full(len(keys), cur, np.int64)
+    batch = TargetUtilizationPolicy.evaluate_batch(
+        TargetUtilizationPolicy.stack(pols), key, curs)
+    scalar = [p(k, {"current": cur}) for p, k in zip(pols, keys)]
+    assert batch.tolist() == scalar
+
+
+def test_policy_batch_mixed_params_deterministic():
+    """Per-target parameters (the dispatch table stacks them) — a seeded
+    backstop that runs without hypothesis."""
+    rng = np.random.default_rng(0)
+    pols = [ThresholdPolicy(float(t), int(m), float(tl))
+            for t, m, tl in zip(rng.uniform(1, 500, 64),
+                                rng.integers(1, 4, 64),
+                                rng.uniform(0, 0.3, 64))]
+    key = rng.uniform(-100, 2000, 64)
+    key[::7] = np.nan
+    cur = rng.integers(0, 30, 64)
+    batch = ThresholdPolicy.evaluate_batch(ThresholdPolicy.stack(pols),
+                                           key, cur)
+    scalar = [p(float(k), {"current": int(c)})
+              for p, k, c in zip(pols, key, cur)]
+    assert batch.tolist() == scalar
+
+
+def test_policy_vectorizable_protocol():
+    assert policy_vectorizable(ThresholdPolicy(1.0))
+    assert policy_vectorizable(TargetUtilizationPolicy(0.7))
+    assert not policy_vectorizable(lambda k, s=None: 1)
+
+    class Sub(ThresholdPolicy):      # overridden scalar, inherited batch
+        def __call__(self, k, state=None):
+            return 99
+    assert not policy_vectorizable(Sub(1.0))
+
+
+# ------------------------------------------------- water-filling plan -----
+def _seq_greedy(free, unit, k):
+    free = np.asarray(free, np.float64).copy()
+    seq = []
+    for _ in range(k):
+        if free.size == 0:
+            break
+        ni = int(np.argmax(free))
+        if free[ni] < unit:
+            break
+        seq.append(ni)
+        free[ni] -= unit
+    return np.asarray(seq, np.int64), free
+
+
+@settings(max_examples=60, deadline=None)
+@given(caps=st.lists(st.integers(0, 40), min_size=1, max_size=30),
+       k=st.integers(0, 600),
+       unit=st.sampled_from([100, 250, 500]),
+       residue=st.integers(0, 99))
+def test_waterfill_matches_sequential_greedy(caps, k, unit, residue):
+    """Integral capacities (the cluster's millicores): bitwise placement
+    parity with the first-argmax sequential loop, including the exhausted
+    tail and tie-breaking."""
+    free = np.asarray(caps, np.float64) * unit + residue
+    seq_ref, free_ref = _seq_greedy(free, unit, k)
+    seq, counts = waterfill_placement(free, unit, k)
+    np.testing.assert_array_equal(seq, seq_ref)
+    np.testing.assert_array_equal(free - counts * unit, free_ref)
+
+
+def test_waterfill_cluster_scale_to_parity():
+    """End to end in the sim: bulk ``_vec_scale_to`` places exactly like a
+    sequential ``_vec_schedule_pod`` loop (pids, nodes, free arrays)."""
+    from repro.cluster import ClusterSim, SimConfig
+    from repro.cluster.topology import fleet_topology
+
+    arr = poisson_arrivals(1.0, 30.0, 15.0, zone="z", seed=0)
+
+    def mk():
+        s = ClusterSim(fleet_topology(500, zones=["z"], pods_per_node=16),
+                       SimConfig(seed=0))
+        s._vec_init(arr)
+        s._vec_zone("z")
+        return s
+
+    capacity = 32 * 16                    # ceil(500/16) nodes x 16 pods
+    for k in (1, 7, 160, 500, 800):       # incl. beyond-capacity
+        bulk, seq = mk(), mk()
+        bulk._vec_scale_to("z", k, 5.0)
+        for _ in range(k):
+            if seq._vec_schedule_pod("z", 5.0) is None:
+                break
+        n = seq._apools["z"].n
+        assert bulk._apools["z"].n == n == min(k, capacity)
+        np.testing.assert_array_equal(bulk._slot_node["z"][:n],
+                                      seq._slot_node["z"][:n])
+        np.testing.assert_array_equal(bulk._slot_pid["z"][:n],
+                                      seq._slot_pid["z"][:n])
+        np.testing.assert_array_equal(bulk._znode_free["z"],
+                                      seq._znode_free["z"])
+        assert ([x.alloc_m for x in bulk._znodes["z"]]
+                == [x.alloc_m for x in seq._znodes["z"]])
+
+
+# ------------------------------------------------ serving drain parity ----
+def _run_pair(rate, t_end, minr, thr, deadline_factor=3.0, seed=7,
+              chips=128):
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(rate, t_end, 15.0, seed=seed)
+    ntok = rng.integers(16, 64, len(arr.times))
+    reqs = [(float(t), int(n)) for t, n in zip(arr.times, ntok)]
+    cfg = FleetConfig(total_chips=chips, chips_per_replica=16, seed=0,
+                      deadline_factor=deadline_factor)
+    pe = ServingFleet(cfg).run(list(reqs), HPA(thr, min_replicas=minr),
+                               "hpa", t_end, min_replicas=minr)
+    bt = ServingFleet(cfg, batch=True).run(
+        (arr.times, ntok.astype(np.float64)), HPA(thr, min_replicas=minr),
+        "hpa", t_end, min_replicas=minr)
+    return pe, bt
+
+
+def _assert_bitwise(pe, bt):
+    cv = bt.completed_log.view()
+    assert len(cv) == len(pe.completed)
+    np.testing.assert_array_equal(
+        cv["completion"], [r.completion for r in pe.completed])
+    np.testing.assert_array_equal(
+        cv["arrival"], [r.arrival for r in pe.completed])
+    assert pe.replica_log == bt.replica_log
+    sv = np.stack([v for _, v in pe.samples])
+    sb = np.stack([v for _, v in bt.samples])
+    np.testing.assert_allclose(sv, sb, rtol=1e-12, atol=1e-12)
+    assert abs(pe.idle_fraction() - bt.idle_fraction()) < 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       load=st.floats(0.2, 2.0),      # > 1.0 exercises the busy fallback
+       minr=st.integers(1, 4))
+def test_serving_drain_identical_completion_sequence(seed, load, minr):
+    """Windowed drain == per-event dispatch, completion for completion
+    (deadline rule quiet -> bitwise even under overload)."""
+    rate = load * minr * 8 / 1.9       # ~load x slot capacity
+    pe, bt = _run_pair(rate, 450.0, minr, 1e18, deadline_factor=1e9,
+                       seed=seed)
+    _assert_bitwise(pe, bt)
+
+
+def test_serving_drain_identical_seeded():
+    """Deterministic backstop (runs without hypothesis): under load with
+    HPA scaling, and heavy overload on a fixed fleet."""
+    pe, bt = _run_pair(2.0, 900.0, 2, 560.0)
+    assert not bt.completed_log.view()["redispatched"].any()
+    _assert_bitwise(pe, bt)
+    pe, bt = _run_pair(12.0, 300.0, 2, 1e18, deadline_factor=1e9)
+    _assert_bitwise(pe, bt)
+
+
+def test_serving_drain_redispatch_statistical():
+    """With the deadline rule firing, attribution (and thus completions)
+    may differ — the drain must stay statistically equivalent."""
+    pe, bt = _run_pair(12.0, 300.0, 2, 1e18)
+    assert bt.completed_log.view()["redispatched"].any()
+    rp, rb = pe.response_times(), bt.response_times()
+    assert len(rp) == len(rb)
+    for q in (50, 95):
+        assert (abs(np.percentile(rp, q) - np.percentile(rb, q))
+                <= 0.01 * np.percentile(rp, q))
+
+
+def test_serving_batch_failure_and_straggler():
+    """Batch-mode event handling: replica failure re-dispatches in-flight
+    requests off the dead replica; stragglers slow service and trigger
+    deadline re-dispatches."""
+    rng = np.random.default_rng(1)
+    arr = poisson_arrivals(3.0, 600.0, 15.0, seed=11)
+    ntok = rng.integers(16, 64, len(arr.times))
+    bt = ServingFleet(FleetConfig(total_chips=128, chips_per_replica=16),
+                      batch=True)
+    bt.inject_failure(120.0, 0)
+    bt.inject_straggler(200.0, 1, speed=0.2, duration=120.0)
+    bt.run((arr.times, ntok.astype(np.float64)),
+           HPA(560.0, min_replicas=3), "hpa", 600.0, min_replicas=3)
+    rows = bt.completed_log.view()
+    assert np.isfinite(rows["completion"]).all()
+    assert rows["redispatched"].any()
+    assert bt._rep_dead[0]
+    # requests re-dispatched off the failure never land back on rid 0
+    requeued = rows[rows["redispatched"] & (rows["start"] >= 120.0)]
+    assert not (requeued["server"] == 0).any()
+
+
+def test_multi_fleet_batch_mode_matches_per_event():
+    """MultiFleetSim(batch=True): same arbiter allocation sequence and the
+    same response-time distribution as the per-event fleets."""
+    from repro.core import (ARIMAD1Forecaster, FleetController, PPAConfig,
+                            TargetSpec, ThresholdPolicy)
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+
+    def build(batch):
+        specs = [FleetSpec(f"fleet-{i}",
+                           FleetConfig(total_chips=96, chips_per_replica=16,
+                                       seed=i)) for i in range(3)]
+        ctrl = FleetController(
+            PPAConfig(threshold=560.0, stabilization_s=60.0),
+            [TargetSpec(s.name, ThresholdPolicy(560.0, 1)) for s in specs],
+            model=ARIMAD1Forecaster())
+        return MultiFleetSim(specs, 96, ctrl, batch=batch)
+
+    rng = np.random.default_rng(0)
+    requests = {}
+    for i in range(3):
+        arr = poisson_arrivals(2.0, 600.0, 15.0, seed=10 + i)
+        ntok = rng.integers(16, 64, len(arr.times))
+        requests[f"fleet-{i}"] = [(float(t), int(n))
+                                  for t, n in zip(arr.times, ntok)]
+    ref = build(False).run(dict(requests), 600.0)
+    bat = build(True).run(dict(requests), 600.0)
+    assert ref.alloc_log == bat.alloc_log
+    assert ref.peak_chips() == bat.peak_chips()
+    np.testing.assert_array_equal(np.sort(ref.response_times()),
+                                  np.sort(bat.response_times()))
+
+
+# ------------------------------------------- streaming CompletionLog ------
+def _fill_log(log, n_windows=20, per_window=50, seed=0):
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for w in range(n_windows):
+        arr = np.sort(rng.uniform(t, t + 15.0, per_window))
+        svc = rng.uniform(0.1, 5.0, per_window)
+        log.append_batch(arr, arr, arr + svc, svc,
+                         rng.integers(0, 8, per_window),
+                         kind=rng.integers(0, 2, per_window).astype(np.int16))
+        log.seal_window()
+        t += 15.0
+    return log
+
+
+def test_streaming_log_stats_match_full_log():
+    full = _fill_log(CompletionLog(), n_windows=40)
+    stream = _fill_log(CompletionLog(streaming=True, retain_windows=4),
+                       n_windows=40)
+    assert len(full) == len(stream) == 40 * 50
+    fs, ss = full.stats(), stream.stats()
+    for key in fs:
+        if isinstance(fs[key], float) and math.isnan(fs[key]):
+            assert math.isnan(ss[key])
+        else:
+            np.testing.assert_allclose(ss[key], fs[key], rtol=1e-12)
+    for w in range(40):
+        fw, sw = full.window_stats(w), stream.window_stats(w)
+        for key in fw:
+            np.testing.assert_allclose(sw[key], fw[key], rtol=1e-12)
+    # rows physically dropped: only the retention span stays resident
+    assert stream.view().shape[0] <= 5 * 50
+    assert len(stream._buf) < len(full._buf)
+    # retained windows still expose raw rows; flushed ones are empty
+    assert len(stream.window_rows(39)) == 50
+    assert len(stream.window_rows(0)) == 0
+    assert len(full.window_rows(0)) == 50
+
+
+def test_streaming_log_amend_window_relative():
+    """amend() coordinates come from view() within the current window —
+    they stay valid across compaction."""
+    stream = _fill_log(CompletionLog(streaming=True, retain_windows=2))
+    rows = stream.view()
+    idx = len(rows) - 3
+    stream.amend(idx, completion=1e9, redispatched=True)
+    assert stream.view()["redispatched"][idx]
+    assert stream.view()["completion"][idx] == 1e9
+
+
+def test_cluster_sim_streaming_log_mode():
+    """ClusterSim batch mode with log_streaming: bounded retention, same
+    totals/stats as the full log."""
+    from repro.cluster import AutoscalerBinding, ClusterSim, SimConfig
+    from repro.cluster.topology import fleet_topology
+
+    P, t_end = 50, 1200.0
+    arr = poisson_arrivals(10.0, t_end, 15.0, zone="z", seed=3)
+    binds = lambda: [AutoscalerBinding("z", HPA(1e18, min_replicas=P),  # noqa: E731
+                                      "hpa", P)]
+    full = ClusterSim(fleet_topology(P, zones=["z"]),
+                      SimConfig(seed=0, sort_service_s=2.0))
+    full.run(arr, binds(), t_end, initial_replicas=P)
+    stream = ClusterSim(fleet_topology(P, zones=["z"]),
+                        SimConfig(seed=0, sort_service_s=2.0,
+                                  log_streaming=True, log_retain_windows=4))
+    stream.run(arr, binds(), t_end, initial_replicas=P)
+    assert len(full.completed_log) == len(stream.completed_log) == len(arr)
+    fs, ss = full.completed_log.stats(), stream.completed_log.stats()
+    np.testing.assert_allclose(
+        [ss[k] for k in ("count", "resp_mean", "resp_min", "resp_max")],
+        [fs[k] for k in ("count", "resp_mean", "resp_min", "resp_max")],
+        rtol=1e-12)
+    assert len(stream.completed_log._buf) < len(full.completed_log._buf)
+
+
+# ----------------------------------------- ensemble member-stacked fit ----
+def test_ensemble_stacked_fit_matches_member_loop():
+    """EnsembleForecaster.fit routes all E members through one vmapped
+    ``lstm_fit_batch_stacked`` dispatch == the sequential member loop, and
+    scratch refits keep members diverse (per-member seeds)."""
+    from repro.core.forecaster import EnsembleForecaster
+
+    rng = np.random.default_rng(0)
+    s = 200 + 50 * np.sin(np.linspace(0, 8, 120))[:, None] * np.ones(5)
+    s = s + rng.normal(0, 3, s.shape)
+    batched = EnsembleForecaster(n_members=3, window=4, epochs=10)
+    loop = copy.deepcopy(batched)
+    batched.fit(s, from_scratch=True)
+    for m in loop.members:
+        m.fit(s, from_scratch=True)
+    recent = s[100:110]
+    for mb, ml in zip(batched.members, loop.members):
+        pb, _ = mb.predict(recent)
+        pl, _ = ml.predict(recent)
+        np.testing.assert_allclose(pb, pl, rtol=1e-5, atol=1e-6)
+    # diversity: distinct member seeds -> a real (non-degenerate) std
+    _, std = batched.predict(recent)
+    assert float(np.max(std)) > 0.0
+
+
+def test_updater_batches_per_target_ensembles():
+    """Z per-target ensembles refit as ONE E x Z stacked dispatch through
+    Updater.update_batch (batched bookkeeping, members updated)."""
+    from repro.core import (MetricsHistory, Snapshot, Updater, UpdatePolicy)
+    from repro.core.forecaster import EnsembleForecaster
+
+    rng = np.random.default_rng(1)
+    Z, E = 3, 2
+    models = [EnsembleForecaster(n_members=E, window=4, epochs=8)
+              for _ in range(Z)]
+    hists = [MetricsHistory() for _ in range(Z)]
+    for i in range(Z):
+        trace = 100 + 20 * np.sin(np.linspace(0, 6, 40) + i)
+        for k, v in enumerate(trace):
+            hists[i].append(Snapshot(15.0 * k,
+                                     v * np.ones(5) + rng.normal(0, 1, 5)))
+    gens = [[m._fit_count for m in ens.members] for ens in models]
+    u = Updater(UpdatePolicy.FINETUNE)
+    pending = u.begin_update_batch(models, hists, 1.0)
+    pending.compute()
+    assert pending.batched            # E x Z stacked, no sequential fits
+    pending.commit()
+    assert u.n_updates == Z
+    for ens, g0 in zip(models, gens):
+        assert all(m._fit_count > g for m, g in zip(ens.members, g0))
+        assert ens.valid()

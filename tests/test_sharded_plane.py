@@ -120,15 +120,45 @@ def test_sharded_equals_single_shared_model(base):
     plane.shutdown()
 
 
-def test_heterogeneous_policies_fall_back_and_match(base):
-    """A shard whose targets the columnar path can't take (mixed policy
-    types) transparently falls back to an embedded FleetController — and
-    still matches the reference."""
+def test_heterogeneous_policies_ride_columnar_and_match(base):
+    """Mixed built-in policy types (Threshold + TargetUtilization) stay on
+    the columnar shard via the per-policy dispatch table — and still match
+    the scalar reference elementwise."""
     traces, models = base
     def specs():
         out = []
         for i, z in enumerate(models):
             pol = (TargetUtilizationPolicy(0.7, 1) if i == 0
+                   else ThresholdPolicy(100.0, 1))
+            out.append(TargetSpec(z, pol, model=copy.deepcopy(models[z])))
+        return out
+    ref = FleetController(CFG, specs())
+    plane = ShardedControlPlane(CFG, specs(), n_shards=1)
+    assert plane.shards[0].vectorized          # no _CtrlShard fallback
+    assert len(plane.shards[0]._pol_groups) == 2
+    _drive(traces, ref, plane)
+
+
+class _OpaquePolicy:
+    """A custom policy callable WITHOUT the stack/evaluate_batch protocol
+    — the only policy shape left that forces the _CtrlShard fallback."""
+
+    def __init__(self, threshold):
+        self._inner = ThresholdPolicy(threshold, 1)
+
+    def __call__(self, key_metric, state=None):
+        return self._inner(key_metric, state)
+
+
+def test_custom_policy_falls_back_and_matches(base):
+    """A shard whose targets the columnar path can't take (an opaque
+    custom callable) transparently falls back to an embedded
+    FleetController — and still matches the reference."""
+    traces, models = base
+    def specs():
+        out = []
+        for i, z in enumerate(models):
+            pol = (_OpaquePolicy(100.0) if i == 0
                    else ThresholdPolicy(100.0, 1))
             out.append(TargetSpec(z, pol, model=copy.deepcopy(models[z])))
         return out
@@ -202,14 +232,38 @@ def test_batch_refit_matches_sequential(base):
             np.testing.assert_allclose(ps, pb, rtol=1e-5, atol=1e-6)
 
 
-def test_batch_refit_heterogeneous_falls_back(base):
-    """Unequal history lengths can't stack -> sequential fallback with
-    identical bookkeeping."""
+def test_batch_refit_ragged_pad_and_mask(base):
+    """Unequal history lengths stay on the vmapped path (pad-and-mask):
+    the batched refit matches Z sequential fits on the ragged histories."""
     traces, models = base
-    ms = [copy.deepcopy(models[z]) for z in traces]
-    hists = [MetricsHistory() for _ in ms]
+    seq = {z: copy.deepcopy(models[z]) for z in traces}
+    bat = [copy.deepcopy(models[z]) for z in traces]
+    hists = [MetricsHistory() for _ in bat]
     for i, z in enumerate(traces):
         for k in range(120, 140 + 4 * i):   # ragged lengths
+            hists[i].append(Snapshot(15.0 * k, traces[z][k]))
+    res = lstm_fit_batch_stacked(bat, [h.series() for h in hists])
+    assert res is not None                  # no sequential fallback
+    for i, z in enumerate(traces):
+        seq[z].fit(hists[i].series())
+        ps, _ = seq[z].predict(traces[z][150:160])
+        pb, _ = bat[i].predict(traces[z][150:160])
+        np.testing.assert_allclose(ps, pb, rtol=1e-5, atol=1e-6)
+    u = Updater(UpdatePolicy.FINETUNE)
+    u.update_batch(bat, hists, 1.0)
+    assert u.n_updates == Z
+    assert all(len(h) == 0 for h in hists)
+
+
+def test_batch_refit_heterogeneous_archs_fall_back(base):
+    """Architecturally heterogeneous model sets still can't stack ->
+    sequential fallback with identical bookkeeping."""
+    traces, models = base
+    ms = [copy.deepcopy(models[z]) for z in traces]
+    ms[0] = LSTMForecaster(window=4, hidden=13, epochs=12, seed=0)  # odd one
+    hists = [MetricsHistory() for _ in ms]
+    for i, z in enumerate(traces):
+        for k in range(120, 140):
             hists[i].append(Snapshot(15.0 * k, traces[z][k]))
     assert lstm_fit_batch_stacked(ms, [h.series() for h in hists]) is None
     u = Updater(UpdatePolicy.FINETUNE)
@@ -286,7 +340,7 @@ def test_ctrl_shard_double_buffer_candidacy(base):
     def specs():
         out = []
         for i, z in enumerate(models):
-            pol = (TargetUtilizationPolicy(0.7, 1) if i == 0
+            pol = (_OpaquePolicy(100.0) if i == 0
                    else ThresholdPolicy(100.0, 1))
             out.append(TargetSpec(z, pol, model=copy.deepcopy(models[z])))
         return out

@@ -18,6 +18,12 @@ Four claims are measured (the PRs' acceptance bars):
    (which used to force the O(Z/S)-Python ``_CtrlShard`` fallback) ticks
    measurably faster on the columnar per-policy dispatch table
    (DESIGN.md §6) than on the forced fallback.
+6. **Forecast device floor** — the fused block-batched Pallas LSTM
+   sequence kernel (DESIGN.md §7) is no slower than the legacy
+   per-timestep cell path at Z in {64, 256, 1024} (both interpret mode on
+   CPU), with GFLOP/s + tick ms recorded per path (the vmapped-XLA figure
+   is the CPU device floor; the kernel's own figure is the TPU follow-up
+   record).
 
 Run: PYTHONPATH=src python -m benchmarks.bench_control_plane [--quick]
          [--check-baseline benchmarks/baselines/control_plane_baseline.json]
@@ -417,6 +423,96 @@ def bench_refit_overlap(Z: int = 64, n_shards: int = 8, ticks: int = 60,
     return out
 
 
+def bench_forecast_device(zs=(64, 256, 1024), window: int = 4,
+                          hidden: int = 50, iters: int = 20,
+                          cell_max_z: int = 256):
+    """ROADMAP "next bottleneck" (b): the stacked per-target LSTM forward
+    that dominates the sharded tick.  Three paths per Z:
+
+    * ``xla``   — vmapped XLA forward (``use_pallas=False``), the device
+      floor the fused kernel is lifting on TPU;
+    * ``cell``  — the legacy Pallas path: per-target ``lax.scan`` over the
+      single-step ``lstm_cell`` kernel, vmapped (W×Z kernel dispatches);
+    * ``fused`` — the block-batched ``lstm_seq_stacked`` sequence kernel
+      (ONE dispatch, (h, c) resident across the window, DESIGN.md §7).
+
+    On CPU both Pallas paths run in interpret mode (Mosaic on TPU), so the
+    meaningful CI bar is fused vs the legacy cell path; the GFLOP/s
+    figures are the recorded floor for the TPU follow-up."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.forecaster import _lstm_forward_stacked, _lstm_init
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    M = 5
+
+    @jax.jit
+    def legacy_cells(stacked, xs):
+        def fwd(p, x):
+            H = p["Wh"].shape[0]
+
+            def step(carry, xt):
+                h, c = carry
+                h, c = kops.lstm_cell(p["Wx"], p["Wh"], p["b"], h, c,
+                                      xt[None])
+                return (h, c), None
+
+            (h, _), _ = jax.lax.scan(
+                step, (jnp.zeros((1, H)), jnp.zeros((1, H))), x)
+            return (jax.nn.relu(h) @ p["Wo"] + p["bo"])[0]
+        return jax.vmap(fwd)(stacked, xs)
+
+    def timeit(fn, reps):
+        fn().block_until_ready()                    # compile / warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / reps
+
+    out = []
+    for Z in zs:
+        keys = jax.random.split(jax.random.PRNGKey(0), Z)
+        stacked = jax.vmap(
+            lambda k: _lstm_init(k, M, hidden, M))(keys)
+        xs = jnp.asarray(rng.normal(0, 1, (Z, window, M)), jnp.float32)
+        flops = Z * (window * 2 * 4 * hidden * (M + hidden)
+                     + 2 * hidden * M)
+        xla_s = timeit(lambda: _lstm_forward_stacked(
+            stacked, xs, use_pallas=False), iters)
+        # the legacy path is ~100x slower in interpret mode — that IS the
+        # result; skip re-measuring it where a single rep takes a minute
+        cell_s = (timeit(lambda: legacy_cells(stacked, xs),
+                         max(iters // 10, 1))
+                  if Z <= cell_max_z else float("nan"))
+        fused_s = timeit(lambda: _lstm_forward_stacked(
+            stacked, xs, use_pallas=True), iters)
+        measured = np.isfinite(cell_s)
+        point = {
+            "Z": Z, "window": window, "hidden": hidden,
+            "flops_per_tick": flops,
+            "xla_tick_ms": xla_s * 1e3,
+            # None (JSON null), not NaN: the artifact must stay strict JSON
+            "cell_tick_ms": cell_s * 1e3 if measured else None,
+            "fused_tick_ms": fused_s * 1e3,
+            "xla_gflops": flops / xla_s / 1e9,
+            "cell_gflops": flops / cell_s / 1e9 if measured else None,
+            "fused_gflops": flops / fused_s / 1e9,
+            "fused_vs_cell": cell_s / fused_s if measured else None,
+        }
+        out.append(point)
+        cell_txt = (f"cell={cell_s * 1e3:.2f}ms "
+                    f"({point['fused_vs_cell']:.1f}x)" if measured
+                    else "cell=skipped")
+        csv_row(f"forecast_device_Z{Z}", fused_s * 1e6,
+                f"fused={point['fused_gflops']:.2f} GF/s "
+                f"({fused_s * 1e3:.2f}ms) vs {cell_txt} vs "
+                f"xla={point['xla_gflops']:.2f} GF/s")
+    return out
+
+
 def check_baseline(results: dict, path: Path) -> list[str]:
     """>2x ticks/sec regression vs the checked-in baseline fails CI (the
     same guard shape as bench_fleet_scale)."""
@@ -439,6 +535,13 @@ def check_baseline(results: dict, path: Path) -> list[str]:
                 f"policy dispatch Z={policy['Z']}: "
                 f"{policy['columnar_ticks_per_s']:,.0f} ticks/s "
                 f"< half of baseline {ref:,.0f}")
+    for point in results.get("forecast_device", []):
+        ref = base.get("forecast_fused_gflops", {}).get(str(point["Z"]))
+        if ref is not None and point["fused_gflops"] < ref / 2.0:
+            errors.append(
+                f"forecast_device Z={point['Z']}: fused "
+                f"{point['fused_gflops']:.2f} GFLOP/s "
+                f"< half of baseline {ref}")
     return errors
 
 
@@ -455,9 +558,13 @@ def run(quick: bool = False, baseline: Path | None = None):
     refit = bench_refit_overlap(Z=64, ticks=40 if quick else 60)
     policy = bench_policy_dispatch(Z=64 if quick else 256,
                                    ticks=15 if quick else 30)
+    forecast = bench_forecast_device(zs=(64, 256) if quick
+                                     else (64, 256, 1024),
+                                     iters=5 if quick else 20)
     payload = {"control_latency": lat, "sim_core_parity": par,
                "shard_sweep": sweep, "fidelity_point": fidelity,
-               "refit_overlap": refit, "policy_dispatch": policy}
+               "refit_overlap": refit, "policy_dispatch": policy,
+               "forecast_device": forecast}
     save_bench("control_plane", payload)
     assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
     assert par["parity_ok"], f"sim-core parity broken: {par}"
@@ -465,6 +572,12 @@ def run(quick: bool = False, baseline: Path | None = None):
     assert policy["speedup_vs_fallback"] >= 1.5, \
         (f"columnar mixed-policy tick only "
          f"{policy['speedup_vs_fallback']:.1f}x vs fallback (bar: >=1.5x)")
+    for p in forecast:
+        if p["fused_vs_cell"] is not None:
+            assert p["fused_vs_cell"] >= 1.0, \
+                (f"forecast_device Z={p['Z']}: fused sequence kernel "
+                 f"slower than the per-timestep cell path "
+                 f"({p['fused_vs_cell']:.2f}x, bar: >=1x)")
     if not quick:
         for p in sweep:
             if p["Z"] >= 256:

@@ -145,10 +145,19 @@ class ClusterSim:
         the hot path — this accessor is for tests and diagnostics)."""
         if not self._vec:
             return self.core.servers
+        for z in self._apools:
+            self._sync_nodes(z)
         out = [self._make_pod(z, s) for z in self._apools
                for s in range(self._apools[z].n)]
         out.sort(key=lambda p: p.pid)
         return out
+
+    def _sync_nodes(self, zone: str):
+        """Materialise the zone's ``Node`` views from the columnar node
+        arrays (batch mode keeps alloc in ``_znode_alloc`` on the hot
+        path; the objects only matter to tests/diagnostics)."""
+        for n, alloc in zip(self._znodes[zone], self._znode_alloc[zone]):
+            n.alloc_m = int(alloc)
 
     def _make_pod(self, zone: str, slot: int) -> PodState:
         pool = self._apools[zone]
@@ -187,6 +196,7 @@ class ClusterSim:
             pool = self._apools.get(zone)
             if pool is None:
                 return []
+            self._sync_nodes(zone)
             slots = pool.live_slots()
             if t is not None:
                 slots = slots[pool.ready[slots] <= t]
@@ -462,6 +472,12 @@ class ClusterSim:
         self._znodes: dict[str, list[Node]] = {}
         self._znode_free: dict[str, np.ndarray] = {}
         self._znode_speed: dict[str, np.ndarray] = {}
+        # node state is fully columnar in batch mode (like pods): alloc /
+        # capacity / failed live in flat arrays, and the ``Node`` objects
+        # are materialised lazily (``_sync_nodes``) for tests/diagnostics
+        self._znode_alloc: dict[str, np.ndarray] = {}
+        self._znode_cap: dict[str, np.ndarray] = {}
+        self._znode_failed: dict[str, np.ndarray] = {}
         self._zone_busy: dict[str, WindowAccumulator] = {}
         self._zone_code: dict[str, int] = {}
 
@@ -479,6 +495,12 @@ class ClusterSim:
                 [float(n.free_m) for n in self._znodes[zone]])
             self._znode_speed[zone] = np.array(
                 [float(n.speed_factor) for n in self._znodes[zone]])
+            self._znode_alloc[zone] = np.array(
+                [float(n.alloc_m) for n in self._znodes[zone]])
+            self._znode_cap[zone] = np.array(
+                [float(n.cpu_m) for n in self._znodes[zone]])
+            self._znode_failed[zone] = np.array(
+                [bool(n.failed) for n in self._znodes[zone]])
             self._zone_busy[zone] = WindowAccumulator(
                 self.cfg.control_interval_s)
             self._zone_code.setdefault(zone, len(self._zone_code))
@@ -512,8 +534,7 @@ class ClusterSim:
         ni = int(np.argmax(free))
         if free[ni] < self.cfg.pod_cpu_m:
             return None
-        node = self._znodes[zone][ni]
-        node.alloc_m += self.cfg.pod_cpu_m
+        self._znode_alloc[zone][ni] += self.cfg.pod_cpu_m
         free[ni] -= self.cfg.pod_cpu_m
         return int(self._vec_register(zone, np.array([ni]), t)[0])
 
@@ -541,10 +562,10 @@ class ClusterSim:
         seq, counts = waterfill_placement(free, self.cfg.pod_cpu_m, k)
         if not len(seq):
             return 0
+        # node state stays columnar: one array op, no loop over touched
+        # nodes (Node objects materialise lazily via _sync_nodes)
         free -= counts * float(self.cfg.pod_cpu_m)
-        nodes = self._znodes[zone]
-        for ni in np.flatnonzero(counts):       # touched nodes only
-            nodes[ni].alloc_m += int(counts[ni]) * self.cfg.pod_cpu_m
+        self._znode_alloc[zone] += counts * float(self.cfg.pod_cpu_m)
         self._vec_register(zone, seq, t)
         return len(seq)
 
@@ -555,11 +576,12 @@ class ClusterSim:
         self._slot_draining[zone][slots] = True
         counts = np.bincount(self._slot_node[zone][slots],
                              minlength=len(self._znodes[zone]))
-        for ni in np.flatnonzero(counts):
-            node = self._znodes[zone][ni]
-            node.alloc_m -= int(counts[ni]) * self.cfg.pod_cpu_m
-            if not node.failed:
-                self._znode_free[zone][ni] = float(node.free_m)
+        alloc = self._znode_alloc[zone]
+        alloc -= counts * float(self.cfg.pod_cpu_m)
+        # failed nodes stay at free=0; everyone else re-derives from the
+        # columnar invariant free = cap - alloc (one vectorised op)
+        ok = ~self._znode_failed[zone]
+        self._znode_free[zone][ok] = self._znode_cap[zone][ok] - alloc[ok]
         self._apools[zone].invalidate(slots)
 
     def _vec_scale_to(self, zone: str, n: int, t: float):
@@ -660,13 +682,14 @@ class ClusterSim:
                 if not known:
                     continue
                 ni = self._znodes[zone].index(node)
+                self._znode_failed[zone][ni] = True
                 self._znode_free[zone][ni] = 0.0
                 pool = self._apools[zone]
                 dead = self._slot_dead[zone]
                 on_node = self._slot_node[zone][:pool.n] == ni
                 victims = np.flatnonzero(on_node & ~dead[:pool.n])
                 dead[victims] = True
-                node.alloc_m -= self.cfg.pod_cpu_m * int(
+                self._znode_alloc[zone][ni] -= self.cfg.pod_cpu_m * int(
                     np.count_nonzero(~self._slot_draining[zone][victims]))
                 if victims.size:
                     pool.invalidate(victims)
@@ -686,7 +709,10 @@ class ClusterSim:
                 node.failed = False
                 if known:
                     ni = self._znodes[zone].index(node)
-                    self._znode_free[zone][ni] = float(node.free_m)
+                    self._znode_failed[zone][ni] = False
+                    self._znode_free[zone][ni] = (
+                        self._znode_cap[zone][ni]
+                        - self._znode_alloc[zone][ni])
             elif kind == "slow":
                 node.speed_factor = arg["factor"]
                 if known:

@@ -209,22 +209,27 @@ def _vectorizable(specs, shared_model) -> bool:
     return all(lstm_stack_signature(m) == sig for m in models)
 
 
-def predict_from_stack(cache, idx, wins, m0, n_total: int) -> np.ndarray:
-    """Transform -> vmapped stacked forward -> residual -> inverse, from a
+def predict_from_stack(cache, idx, wins, m0, n_total: int,
+                       use_pallas: bool | None = None) -> np.ndarray:
+    """Transform -> stacked forward -> residual -> inverse, from a
     stacked-params cache: the ONE implementation behind both the per-shard
     and fused dispatch paths (their elementwise equivalence to the scalar
     decision path is this module's central invariant).
 
     ``idx`` indexes the candidate targets into the cache's arrays;
     ``wins`` is their gathered (C, W, M) window batch; ``n_total`` is the
-    cache's full target count (``idx`` covering it skips the gather)."""
+    cache's full target count (``idx`` covering it skips the gather).
+    ``use_pallas`` overrides the models' own flag (the plane-level config
+    knob): ``True`` routes the dispatch through the fused block-batched
+    Pallas sequence kernel (DESIGN.md §7)."""
     mean_s = cache["mean"][idx]
     std_s = cache["std"][idx]
     z = transform_stacked(wins, mean_s, std_s)
     stacked = (cache["stacked"] if len(idx) == n_total
                else jax.tree.map(lambda leaf: leaf[idx], cache["stacked"]))
     preds = np.asarray(_lstm_forward_stacked(
-        stacked, jnp.asarray(z), use_pallas=m0.use_pallas))
+        stacked, jnp.asarray(z),
+        use_pallas=m0.use_pallas if use_pallas is None else use_pallas))
     if m0.residual:
         preds = z[:, -1] + preds
     return preds * std_s + mean_s
@@ -252,8 +257,9 @@ class _VecShard:
 
     vectorized = True
 
-    def __init__(self, cfg, specs, model):
+    def __init__(self, cfg, specs, model, use_pallas: bool | None = None):
         self.cfg = cfg
+        self.use_pallas = use_pallas     # None = inherit from the models
         self.specs = list(specs)
         self.names = [s.name for s in specs]
         self.index = {n: i for i, n in enumerate(self.names)}
@@ -277,8 +283,15 @@ class _VecShard:
             (cls, np.asarray(idxs, np.int64),
              cls.stack([specs[i].policy for i in idxs]))
             for cls, idxs in by_type.items()]
-        # vectorised scale-down stabilizer: per-tick (t, clamped desired)
-        self._stab: list[tuple[float, np.ndarray]] = []
+        # vectorised scale-down stabilizer: preallocated sliding buffer of
+        # the last K ticks' (t, clamped desired).  Ticks arrive in time
+        # order, so expired entries fall off the front (tail pointer) and
+        # new ticks append at the back — no per-tick Python list rebuild;
+        # compaction on wrap amortises to O(1) per tick.
+        self._stab_t = np.full(16, -np.inf)
+        self._stab_n = np.zeros((16, Zs), np.int64)
+        self._stab_lo = 0
+        self._stab_hi = 0
         self._stack_cache: dict = {}
         # columnar tick records: (t, replicas, key, predicted, conf, max_r,
         # means | None, cand); EvalResults materialise lazily from these
@@ -381,7 +394,8 @@ class _VecShard:
         idx = np.flatnonzero(cand)
         return predict_from_stack(self._stack_cache, idx,
                                   ring[idx, -m0.window:, :], m0,
-                                  len(self.models))
+                                  len(self.models),
+                                  use_pallas=self.use_pallas)
 
     # ----------------------------------------------------------- evaluate --
     def decide(self, t, state, preds, max_r, cur_r):
@@ -413,16 +427,42 @@ class _VecShard:
             for cls, idx, stacked in self._pol_groups:
                 n[idx] = cls.evaluate_batch(stacked, key[idx], cur[idx])
         n = np.minimum(n, maxr)
-        # ScaleDownStabilizer, vectorised (shared timestamps per tick)
-        self._stab.append((t, n))
-        self._stab = [(tt, d) for tt, d in self._stab
-                      if tt >= t - self.cfg.stabilization_s]
-        maxrec = np.max(np.stack([d for _, d in self._stab]), axis=0)
+        # ScaleDownStabilizer, vectorised (shared timestamps per tick):
+        # the ring keeps exactly the entries the old list filter kept
+        # (tt >= t - stabilization_s, current tick included), and the max
+        # is ONE reduction over the live span
+        maxrec = self._stab_push(t, n)
         final = np.where(n < cur, np.minimum(maxrec, maxr), n)
         rec = (t, final, key, predicted, conf, maxr,
                means if cand.any() else None, cand)
         self.ticks.append(rec)
         return rec
+
+    def _stab_push(self, t: float, n: np.ndarray) -> np.ndarray:
+        """Append this tick's clamped desired counts to the stabilizer
+        ring, expire entries older than the stabilization window, return
+        the windowed per-target max."""
+        lo, hi = self._stab_lo, self._stab_hi
+        cut = t - self.cfg.stabilization_s
+        while lo < hi and self._stab_t[lo] < cut:
+            lo += 1
+        if hi == len(self._stab_t):            # back of the buffer reached
+            span = hi - lo
+            if 2 * (span + 1) > len(self._stab_t):
+                cap = 2 * len(self._stab_t)
+                tbuf = np.full(cap, -np.inf)
+                nbuf = np.zeros((cap, self._stab_n.shape[1]), np.int64)
+                tbuf[:span] = self._stab_t[lo:hi]
+                nbuf[:span] = self._stab_n[lo:hi]
+                self._stab_t, self._stab_n = tbuf, nbuf
+            else:                              # compact the live span left
+                self._stab_t[:span] = self._stab_t[lo:hi].copy()
+                self._stab_n[:span] = self._stab_n[lo:hi].copy()
+            lo, hi = 0, span
+        self._stab_t[hi] = t
+        self._stab_n[hi] = n
+        self._stab_lo, self._stab_hi = lo, hi + 1
+        return self._stab_n[lo:hi + 1].max(axis=0)
 
     def _as_array(self, val) -> np.ndarray:
         if isinstance(val, dict):
@@ -574,9 +614,16 @@ class ShardedControlPlane:
                  n_shards: int = 1, assignment=None,
                  async_ticks: bool = False, async_updates: bool | None = None,
                  coalesce_dispatch: bool = True,
-                 max_workers: int | None = None):
+                 max_workers: int | None = None,
+                 use_pallas: bool | None = None):
+        """``use_pallas`` (None = inherit from the models) forces the
+        per-target stacked forecast dispatches — fused gang and per-shard
+        alike — on (True) or off (False) the fused Pallas sequence kernel
+        (DESIGN.md §7).  Shared-model planes keep the model's own flag
+        (its ``predict_batch`` owns the dispatch)."""
         self.per_target_models = validate_targets(targets, model, updater)
         self.cfg = cfg
+        self.use_pallas = use_pallas
         self.model = model
         self.updater = updater
         self.n_shards = int(n_shards)
@@ -598,7 +645,7 @@ class ShardedControlPlane:
         pos = {n: i for i, n in enumerate(self._names)}
         for s in sorted(by_shard):
             specs = by_shard[s]
-            shard = (_VecShard(cfg, specs, model)
+            shard = (_VecShard(cfg, specs, model, use_pallas=use_pallas)
                      if _vectorizable(specs, model)
                      else _CtrlShard(cfg, specs, model))
             self.shards.append(shard)
@@ -788,7 +835,8 @@ class ShardedControlPlane:
                                             if len(p[1])])
                     means_g = predict_from_stack(
                         self._fused_cache, g_idx, wins,
-                        self._all_models[0], len(self._all_models))
+                        self._all_models[0], len(self._all_models),
+                        use_pallas=self.use_pallas)
                 else:
                     means_g, stds_g = self.model.predict_batch(wins)
                     bayes = self.model.is_bayesian

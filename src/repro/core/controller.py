@@ -6,8 +6,8 @@ that literally — Z zones cost Z jitted forecast dispatches per tick.  The
 tensor and answers every target with a **single** device dispatch per tick:
 
 * shared-model mode — one forecaster serves all targets through
-  ``Forecaster.predict_batch`` (the Pallas ``lstm_cell`` tiles the batch
-  dimension, so 8–64 zones ride one kernel launch);
+  ``Forecaster.predict_batch`` (the fused Pallas sequence kernel tiles
+  the batch dimension, so 8–64 zones ride one kernel launch);
 * per-target mode — independently trained per-target LSTMs are answered
   through ``lstm_predict_batch_stacked`` (parameter pytrees stacked on a
   leading axis, vmapped forward); non-stackable models fall back to a

@@ -14,9 +14,13 @@ All forecasters implement:
 
 ``predict_batch`` is the batched control plane's hot path (DESIGN.md §5):
 one model serving Z scaling targets answers all of them in a single device
-dispatch (the Pallas ``lstm_cell`` tiles the batch dimension).  For Z
-*independently trained* per-target LSTMs, ``lstm_predict_batch_stacked``
-stacks the parameter pytrees and vmaps the forward — still one dispatch.
+dispatch.  With ``use_pallas=True`` that dispatch is the fused
+block-batched sequence kernel (``kernels/lstm_seq.py``, DESIGN.md §7):
+the whole W-step window runs inside ONE kernel with (h, c) resident in
+VMEM scratch, for both the shared-weights layout (``lstm_forward``) and
+the stacked per-target layout (``_lstm_forward_stacked`` — Z independently
+trained LSTMs, batched-GEMV gate matmuls).  The kernel carries a
+checkpoint-style custom VJP, so the fit paths differentiate through it.
 """
 from __future__ import annotations
 
@@ -113,11 +117,12 @@ def _lstm_init(key, n_in: int, hidden: int, n_out: int):
     }
 
 
-def lstm_cell(params, h, c, x, *, use_pallas: bool = False):
-    """One LSTM step.  x (..., n_in); h, c (..., H)."""
-    if use_pallas:
-        from repro.kernels import ops
-        return ops.lstm_cell(params["Wx"], params["Wh"], params["b"], h, c, x)
+def lstm_cell(params, h, c, x):
+    """One LSTM step, pure jnp.  x (..., n_in); h, c (..., H).  The Pallas
+    path no longer routes through here: ``use_pallas=True`` dispatches the
+    whole window to the fused sequence kernel in ``lstm_forward`` (the
+    single-step ``kernels/ops.lstm_cell`` remains for the bench's legacy
+    comparison lane)."""
     gates = x @ params["Wx"] + h @ params["Wh"] + params["b"]
     i, f, g, o = jnp.split(gates, 4, axis=-1)
     c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
@@ -127,7 +132,18 @@ def lstm_cell(params, h, c, x, *, use_pallas: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def lstm_forward(params, xs, *, use_pallas: bool = False):
-    """xs (B, W, M) -> prediction (B, M)."""
+    """xs (B, W, M) -> prediction (B, M).
+
+    ``use_pallas=True`` routes through the fused whole-window sequence
+    kernel (``kernels/lstm_seq.py``): one dispatch keeps (h, c) resident in
+    VMEM scratch across the W timesteps instead of re-launching a cell
+    kernel per scan step.  It is differentiable (checkpoint-style custom
+    VJP replaying the jnp reference), so every fit-path forward rides it
+    too."""
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.lstm_seq(params["Wx"], params["Wh"], params["b"],
+                            params["Wo"], params["bo"], xs)
     B = xs.shape[0]
     H = params["Wh"].shape[0]
     h = jnp.zeros((B, H))
@@ -135,7 +151,7 @@ def lstm_forward(params, xs, *, use_pallas: bool = False):
 
     def step(carry, x):
         h, c = carry
-        h, c = lstm_cell(params, h, c, x, use_pallas=use_pallas)
+        h, c = lstm_cell(params, h, c, x)
         return (h, c), None
 
     (h, c), _ = jax.lax.scan(step, (h, c), jnp.swapaxes(xs, 0, 1))
@@ -293,7 +309,15 @@ def stack_scaler_stats(models) -> tuple[np.ndarray, np.ndarray]:
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def _lstm_forward_stacked(stacked_params, xs, *, use_pallas: bool = False):
     """stacked_params: pytree with leading target axis Z; xs (Z, W, M) ->
-    (Z, M).  vmap keeps it one device dispatch for all Z targets."""
+    (Z, M).  One device dispatch for all Z targets: the Pallas path is the
+    fused block-batched sequence kernel (per-row weights, batched-GEMV
+    gate matmuls, W-step fori_loop in VMEM scratch); the XLA path vmaps
+    the scan forward."""
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.lstm_seq_stacked(
+            stacked_params["Wx"], stacked_params["Wh"], stacked_params["b"],
+            stacked_params["Wo"], stacked_params["bo"], xs)
     def fwd(p, x):
         return lstm_forward(p, x[None], use_pallas=use_pallas)[0]
     return jax.vmap(fwd)(stacked_params, xs)
@@ -638,7 +662,8 @@ class ARIMAD1Forecaster(ARMAForecaster):
 def _lstm_forward_members(stacked_params, xs, *, use_pallas: bool = False):
     """stacked_params: pytree with leading member axis E; xs (E, Z, W, M) ->
     (E, Z, M) — members vmapped, targets on ``lstm_forward``'s own batch
-    axis, so E members x Z targets is one device dispatch."""
+    axis, so E members x Z targets is one device dispatch (on the Pallas
+    path each member's fused sequence kernel is batched by the vmap)."""
     def fwd(p, x):
         return lstm_forward(p, x, use_pallas=use_pallas)
     return jax.vmap(fwd)(stacked_params, xs)

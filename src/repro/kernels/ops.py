@@ -15,6 +15,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import lstm_cell as _lstm
+from repro.kernels import lstm_seq as _lseq
 from repro.kernels import rmsnorm as _rms
 
 
@@ -52,6 +53,22 @@ def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128):
 @jax.jit
 def lstm_cell(Wx, Wh, b, h, c, x):
     return _lstm.lstm_cell(Wx, Wh, b, h, c, x, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lstm_seq(Wx, Wh, b, Wo, bo, xs, *, block_b=128):
+    """Fused whole-window LSTM + ReLU-dense head, shared weights:
+    xs (B, W, M) -> (B, n_out).  Differentiable (custom VJP)."""
+    return _lseq.lstm_seq(Wx, Wh, b, Wo, bo, xs, block_b=block_b,
+                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lstm_seq_stacked(Wx, Wh, b, Wo, bo, xs, *, block_b=32):
+    """Fused whole-window forward for Z stacked per-target LSTMs (leading
+    Z axis on xs and every weight leaf) — ONE kernel dispatch per tick."""
+    return _lseq.lstm_seq_stacked(Wx, Wh, b, Wo, bo, xs, block_b=block_b,
+                                  interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("eps",))

@@ -94,6 +94,36 @@ def lstm_cell(Wx, Wh, b, h, c, x):
     return h2, c2
 
 
+def lstm_seq(Wx, Wh, b, Wo, bo, xs):
+    """xs (B, W, M) -> (B, n_out): whole-window LSTM scan + ReLU-dense
+    head — op-for-op the forecaster's non-Pallas ``lstm_forward``, so the
+    fused sequence kernel's custom-VJP backward (which replays this under
+    ``jax.vjp``) yields exactly the non-Pallas gradients."""
+    B = xs.shape[0]
+    H = Wh.shape[0]
+    h = jnp.zeros((B, H))
+    c = jnp.zeros((B, H))
+
+    def step(carry, x):
+        h, c = carry
+        gates = x @ Wx + h @ Wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    (h, c), _ = jax.lax.scan(step, (h, c), jnp.swapaxes(xs, 0, 1))
+    return jax.nn.relu(h) @ Wo + bo
+
+
+def lstm_seq_stacked(Wx, Wh, b, Wo, bo, xs):
+    """Per-target layout: xs (Z, W, M), weight leaves with a leading Z
+    axis -> (Z, n_out) — the vmapped-per-target oracle."""
+    def one(wx, wh, bb, wo, bo_, x):
+        return lstm_seq(wx, wh, bb, wo, bo_, x[None])[0]
+    return jax.vmap(one)(Wx, Wh, b, Wo, bo, xs)
+
+
 def rmsnorm(x, w, eps=1e-6):
     """x (R, D), w (D,) -> (R, D)."""
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)

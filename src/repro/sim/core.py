@@ -651,6 +651,36 @@ class ArrayServerPool:
         return -1
 
 
+def _emit_greedy_order(free, unit, counts, k_eff: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Order the already-selected ``counts`` placements exactly as the
+    sequential greedy would emit them: slot values descending, node index
+    ascending on ties.  O(k log k) — the output's own size."""
+    n = len(counts)
+    node = np.repeat(np.arange(n), counts)
+    j = np.arange(k_eff) - np.repeat(np.cumsum(counts) - counts, counts)
+    v = free[node] - j * unit
+    order = np.lexsort((node, -v))
+    return node[order], counts
+
+
+def _waterfill_lexsort(free, unit: float, u: np.ndarray, k_eff: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Slot-enumeration fallback (exact for arbitrary float capacities):
+    materialise every candidate slot value and lexsort.  Capping each
+    node's slot list at ``k_eff`` bounds it to O(n*k) — bitwise-identical
+    output, since no node can receive more than k placements."""
+    n = len(free)
+    u = np.minimum(u, k_eff)
+    total = int(u.sum())
+    node = np.repeat(np.arange(n), u)
+    j = np.arange(total) - np.repeat(np.cumsum(u) - u, u)
+    v = free[node] - j * unit
+    order = np.lexsort((node, -v))[:k_eff]
+    seq = node[order]
+    return seq, np.bincount(seq, minlength=n)
+
+
 def waterfill_placement(free, unit: float, k: int
                         ) -> tuple[np.ndarray, np.ndarray]:
     """Plan ``k`` unit-sized placements over a node free-capacity array
@@ -661,16 +691,21 @@ def waterfill_placement(free, unit: float, k: int
     Each node ``i`` with free capacity ``f_i`` contributes the "slot
     values" ``f_i - j*unit`` for ``j in [0, floor(f_i/unit))`` — the free
     capacity the sequential greedy would see just before placing its
-    (j+1)-th pod there.  The greedy's pick sequence is exactly those slot
-    values in descending order (ties broken by node index ascending), so
-    the plan is a lexsort + top-k instead of k Python iterations.
+    (j+1)-th pod there.  The greedy picks exactly the ``k`` largest slot
+    values (ties broken by node index ascending), i.e. everything above a
+    *water level*.  On integral capacities (the cluster's millicore
+    bookkeeping) that level is found by an exact integer binary search:
+    ``count_ge(v)`` — how many slots sit at or above level ``v`` — is a
+    monotone O(nodes) reduction, so the whole plan costs
+    O(nodes · log capacity + k log k) instead of enumerating O(total pod
+    capacity) (or the earlier O(nodes·k)) candidate slots.  Non-integral
+    capacities keep the exact lexsort fallback.
 
     Returns ``(node_seq, counts)``: ``node_seq`` is the node index of each
     placement in sequential-greedy order (length <= k — capacity may run
-    out), ``counts`` the per-node placement totals.  Exact (bitwise) parity
-    with the sequential loop holds when ``free`` and ``unit`` are integral
-    (the cluster's millicore bookkeeping), where ``f - j*unit`` equals
-    repeated subtraction; tests/test_columnar.py property-checks it.
+    out), ``counts`` the per-node placement totals.  Bitwise parity with
+    the sequential loop (and with the lexsort formulation) is
+    property-checked in tests/test_columnar.py.
     """
     free = np.asarray(free, np.float64)
     n = len(free)
@@ -678,18 +713,35 @@ def waterfill_placement(free, unit: float, k: int
     k_eff = min(int(k), int(u.sum()))
     if k_eff <= 0:
         return np.zeros(0, np.int64), np.zeros(n, np.int64)
-    # no node can receive more than k placements, so capping each node's
-    # slot list at k bounds the sort to O(n*k) instead of O(total
-    # capacity) — bitwise-identical output (small-k ticks on huge idle
-    # fleets would otherwise pay a full-capacity lexsort)
-    u = np.minimum(u, k_eff)
-    total = int(u.sum())
-    node = np.repeat(np.arange(n), u)
-    j = np.arange(total) - np.repeat(np.cumsum(u) - u, u)
-    v = free[node] - j * unit
-    order = np.lexsort((node, -v))[:k_eff]
-    seq = node[order]
-    return seq, np.bincount(seq, minlength=n)
+    if unit != np.floor(unit) or not np.all(free == np.floor(free)):
+        return _waterfill_lexsort(free, unit, u, k_eff)
+    f = free.astype(np.int64)
+    un = np.int64(unit)
+
+    def count_ge(v: int) -> int:
+        # slots of node i at/above v: j <= (f_i - v)/unit, capped at u_i
+        c = (f - v) // un + 1
+        return int(np.minimum(np.maximum(c, 0), u).sum())
+
+    # largest water level v* still covering k_eff slots (all slot values
+    # are >= 1: f_i >= u_i*unit implies f_i - (u_i-1)*unit >= unit)
+    lo, hi = np.int64(1), f.max()
+    while lo < hi:
+        mid = (lo + hi + 1) >> 1
+        if count_ge(mid) >= k_eff:
+            lo = mid
+        else:
+            hi = mid - 1
+    v = lo
+    # every slot strictly above the level is taken; the remainder comes
+    # from slots exactly at the level, in node-index order (the greedy's
+    # tie-break)
+    counts = np.minimum(np.maximum((f - (v + 1)) // un + 1, 0), u)
+    r = k_eff - int(counts.sum())
+    if r > 0:
+        tie = (f >= v) & ((f - v) % un == 0) & (counts < u)
+        counts[np.flatnonzero(tie)[:r]] += 1
+    return _emit_greedy_order(free, unit, counts, k_eff)
 
 
 def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,

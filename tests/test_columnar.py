@@ -126,6 +126,38 @@ def test_waterfill_matches_sequential_greedy(caps, k, unit, residue):
     np.testing.assert_array_equal(free - counts * unit, free_ref)
 
 
+@settings(max_examples=60, deadline=None)
+@given(caps=st.lists(st.integers(0, 60), min_size=1, max_size=40),
+       k=st.integers(0, 800),
+       unit=st.sampled_from([1, 100, 250, 500]),
+       residue=st.integers(0, 499))
+def test_waterfill_level_search_matches_lexsort(caps, k, unit, residue):
+    """The O(nodes log capacity) water-level binary search is bitwise
+    identical to the slot-enumeration lexsort plan on integral
+    capacities (sequence AND counts)."""
+    from repro.sim.core import _waterfill_lexsort
+    free = np.asarray(caps, np.float64) * unit + (residue % unit
+                                                  if unit > 1 else 0)
+    u = np.maximum(np.floor(free / unit), 0.0).astype(np.int64)
+    k_eff = min(int(k), int(u.sum()))
+    seq, counts = waterfill_placement(free, unit, k)
+    assert len(seq) == k_eff
+    if k_eff:
+        seq_ref, counts_ref = _waterfill_lexsort(free, unit, u, k_eff)
+        np.testing.assert_array_equal(seq, seq_ref)
+        np.testing.assert_array_equal(counts, counts_ref)
+
+
+def test_waterfill_float_capacities_fall_back_exactly():
+    """Non-integral capacities keep the lexsort path — still exactly the
+    sequential greedy."""
+    free = np.array([1234.5, 777.25, 500.0, 1500.75])
+    seq_ref, free_ref = _seq_greedy(free, 500.0, 5)
+    seq, counts = waterfill_placement(free, 500.0, 5)
+    np.testing.assert_array_equal(seq, seq_ref)
+    np.testing.assert_array_equal(free - counts * 500.0, free_ref)
+
+
 def test_waterfill_cluster_scale_to_parity():
     """End to end in the sim: bulk ``_vec_scale_to`` places exactly like a
     sequential ``_vec_schedule_pod`` loop (pids, nodes, free arrays)."""
@@ -156,8 +188,13 @@ def test_waterfill_cluster_scale_to_parity():
                                       seq._slot_pid["z"][:n])
         np.testing.assert_array_equal(bulk._znode_free["z"],
                                       seq._znode_free["z"])
+        np.testing.assert_array_equal(bulk._znode_alloc["z"],
+                                      seq._znode_alloc["z"])
+        # Node objects are lazy views over the columnar alloc array;
+        # any pod-materialising accessor syncs them
+        bulk.zone_pods("z")
         assert ([x.alloc_m for x in bulk._znodes["z"]]
-                == [x.alloc_m for x in seq._znodes["z"]])
+                == [int(a) for a in bulk._znode_alloc["z"]])
 
 
 # ------------------------------------------------ serving drain parity ----

@@ -220,9 +220,9 @@ def test_node_failure_accounting_with_drained_pod():
 
 # ---------------------------------------------- Pallas-backed batching -----
 def test_predict_batch_pallas_matches_jnp():
-    """The batched forecast paths ride the Pallas lstm_cell (interpret mode
-    on CPU): shared-model batch and stacked vmapped batch must match the
-    jnp cell."""
+    """The batched forecast paths ride the fused Pallas sequence kernel
+    (interpret mode on CPU): shared-model batch and stacked batch must
+    match the jnp scan."""
     from repro.core.forecaster import lstm_predict_batch_stacked
     rng = np.random.default_rng(0)
     recents = [np.abs(rng.normal(200, 40, (8, 5))) for _ in range(3)]

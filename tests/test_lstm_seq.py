@@ -1,0 +1,199 @@
+"""Fused block-batched Pallas LSTM sequence kernel (DESIGN.md §7).
+
+Parity obligations, all in interpret mode on CPU:
+
+* forward — ``ops.lstm_seq`` / ``ops.lstm_seq_stacked`` == the ``ref.py``
+  oracles == the forecaster's non-Pallas ``lstm_forward`` at tight
+  tolerance, over random shapes including batch sizes that don't divide
+  ``block_b`` (the pad-and-mask path) and E×Z ensemble stacking;
+* gradients — the checkpoint-style custom VJP reproduces the non-Pallas
+  formulation's gradients exactly (the backward replays ``ref.lstm_seq``);
+* fit — ``_lstm_fit`` / ``lstm_fit_batch_stacked`` with ``use_pallas=True``
+  land on the same refit params/losses as the non-Pallas stacked fit,
+  ragged (pad-and-mask) batches included.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.forecaster import (LSTMForecaster, _lstm_forward_members,
+                                   _lstm_forward_stacked, lstm_forward,
+                                   lstm_fit_batch_stacked)
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(*s, scale=0.3):
+    return jnp.asarray(RNG.normal(0, scale, s), jnp.float32)
+
+
+def _shared_params(M, H, n_out):
+    return (_rand(M, 4 * H), _rand(H, 4 * H), _rand(4 * H),
+            _rand(H, n_out), _rand(n_out))
+
+
+def _stacked_params(Z, M, H, n_out):
+    return (_rand(Z, M, 4 * H), _rand(Z, H, 4 * H), _rand(Z, 4 * H),
+            _rand(Z, H, n_out), _rand(Z, n_out))
+
+
+# ------------------------------------------------------------- forward ----
+@settings(max_examples=15, deadline=None)
+@given(B=st.integers(1, 40), W=st.integers(1, 6), M=st.integers(1, 8),
+       H=st.integers(1, 24), block_b=st.sampled_from([1, 3, 8, 16]))
+def test_seq_forward_matches_ref(B, W, M, H, block_b):
+    """Shared-weights layout, ragged batch blocks included (B need not
+    divide block_b — padded rows are computed and sliced off)."""
+    p = _shared_params(M, H, M)
+    xs = _rand(B, W, M, scale=1.0)
+    got = ops.lstm_seq(*p, xs, block_b=block_b)
+    want = ref.lstm_seq(*p, xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(Z=st.integers(1, 33), W=st.integers(1, 6), M=st.integers(1, 8),
+       H=st.integers(1, 24), block_b=st.sampled_from([1, 4, 8]))
+def test_seq_stacked_forward_matches_ref(Z, W, M, H, block_b):
+    """Per-target layout: Z independently parameterised rows, one kernel."""
+    p = _stacked_params(Z, M, H, M)
+    xs = _rand(Z, W, M, scale=1.0)
+    got = ops.lstm_seq_stacked(*p, xs, block_b=block_b)
+    want = ref.lstm_seq_stacked(*p, xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_seq_matches_lstm_forward_both_layouts():
+    """The forecaster entry points: lstm_forward(use_pallas=True) and
+    _lstm_forward_stacked(use_pallas=True) == their non-Pallas selves."""
+    params = {"Wx": _rand(5, 200), "Wh": _rand(50, 200), "b": _rand(200),
+              "Wo": _rand(50, 5), "bo": _rand(5)}
+    xs = _rand(37, 4, 5, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(lstm_forward(params, xs, use_pallas=True)),
+        np.asarray(lstm_forward(params, xs, use_pallas=False)),
+        rtol=1e-5, atol=1e-6)
+    stacked = jax.tree.map(lambda leaf: jnp.stack([leaf] * 3), params)
+    # perturb so the Z rows are genuinely distinct
+    stacked = jax.tree.map(
+        lambda leaf: leaf * jnp.arange(1, 4).reshape(
+            (3,) + (1,) * (leaf.ndim - 1)), stacked)
+    zxs = _rand(3, 4, 5, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(_lstm_forward_stacked(stacked, zxs, use_pallas=True)),
+        np.asarray(_lstm_forward_stacked(stacked, zxs, use_pallas=False)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_seq_members_exz_stacking():
+    """E×Z ensemble layout: _lstm_forward_members vmaps the fused kernel
+    over the member axis — matches the non-Pallas member forward."""
+    E, Z, W, M, H = 3, 5, 4, 5, 12
+    leaves = {"Wx": _rand(E, M, 4 * H), "Wh": _rand(E, H, 4 * H),
+              "b": _rand(E, 4 * H), "Wo": _rand(E, H, M),
+              "bo": _rand(E, M)}
+    xs = _rand(E, Z, W, M, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(_lstm_forward_members(leaves, xs, use_pallas=True)),
+        np.asarray(_lstm_forward_members(leaves, xs, use_pallas=False)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_seq_empty_batch():
+    """B=0 / Z=0 return empty outputs like the scan/vmap paths (callers
+    such as a fully-reactive forecast tick may legitimately pass none)."""
+    p = _shared_params(5, 12, 5)
+    assert np.asarray(ops.lstm_seq(*p, jnp.zeros((0, 4, 5)))).shape == (0, 5)
+    sp = _stacked_params(0, 5, 12, 5)
+    assert np.asarray(
+        ops.lstm_seq_stacked(*sp, jnp.zeros((0, 4, 5)))).shape == (0, 5)
+
+
+# ------------------------------------------------------------ gradients ----
+def test_seq_gradients_match_non_pallas():
+    """The custom VJP replays the jnp reference, so grads equal the
+    non-Pallas lstm_forward's — params and inputs both."""
+    params = {"Wx": _rand(5, 80), "Wh": _rand(20, 80), "b": _rand(80),
+              "Wo": _rand(20, 5), "bo": _rand(5)}
+    xs = _rand(13, 4, 5, scale=1.0)
+    y = _rand(13, 5, scale=1.0)
+
+    def loss(p, x, use_pallas):
+        pred = lstm_forward(p, x, use_pallas=use_pallas)
+        return jnp.mean((pred - y) ** 2)
+
+    gp_t, gx_t = jax.grad(loss, argnums=(0, 1))(params, xs, True)
+    gp_f, gx_f = jax.grad(loss, argnums=(0, 1))(params, xs, False)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(gp_t[k]), np.asarray(gp_f[k]),
+                                   rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gx_t), np.asarray(gx_f),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------------------------- fit path ----
+def _series(n, i=0):
+    rng = np.random.default_rng(100 + i)
+    return np.abs(rng.normal(200, 40, (n, 5)))
+
+
+@settings(max_examples=5, deadline=None)
+@given(lens=st.lists(st.integers(14, 30), min_size=2, max_size=4),
+       epochs=st.integers(2, 6))
+def test_fit_batch_stacked_pallas_matches_plain(lens, epochs):
+    """lstm_fit_batch_stacked with use_pallas=True (fused kernel inside the
+    vmapped epoch scan) == the non-Pallas stacked fit, ragged pad-and-mask
+    histories included."""
+    serieses = [_series(n, i) for i, n in enumerate(lens)]
+
+    def mk(up):
+        return [LSTMForecaster(window=4, epochs=epochs, seed=i,
+                               use_pallas=up) for i in range(len(lens))]
+
+    ms_f, ms_t = mk(False), mk(True)
+    assert lstm_fit_batch_stacked(ms_f, serieses, from_scratch=True)
+    assert lstm_fit_batch_stacked(ms_t, serieses, from_scratch=True)
+    for a, b in zip(ms_f, ms_t):
+        np.testing.assert_allclose(a.last_losses, b.last_losses,
+                                   rtol=1e-4, atol=1e-6)
+        for k in a.params:
+            np.testing.assert_allclose(np.asarray(a.params[k]),
+                                       np.asarray(b.params[k]),
+                                       rtol=2e-4, atol=2e-5)
+
+
+def test_sequential_fit_and_predict_pallas_parity():
+    """LSTMForecaster(use_pallas=True): fit + predict + predict_batch all
+    ride the fused kernel and match the non-Pallas model."""
+    s = _series(42)
+    a = LSTMForecaster(window=4, epochs=8, seed=3)
+    b = LSTMForecaster(window=4, epochs=8, seed=3, use_pallas=True)
+    a.fit(s, from_scratch=True)
+    b.fit(s, from_scratch=True)
+    pa, _ = a.predict(s[-4:])
+    pb, _ = b.predict(s[-4:])
+    np.testing.assert_allclose(pa, pb, rtol=1e-4, atol=1e-5)
+    recents = np.stack([s[-4:], s[-8:-4], s[-12:-8]])
+    np.testing.assert_allclose(a.predict_batch(recents)[0],
+                               b.predict_batch(recents)[0],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ensemble_fit_predict_pallas_parity():
+    """E×Z ensemble refit + Bayesian predict through the fused kernel."""
+    from repro.core.forecaster import EnsembleForecaster
+    s = _series(40)
+    a = EnsembleForecaster(n_members=2, window=4, epochs=6)
+    b = EnsembleForecaster(n_members=2, window=4, epochs=6, use_pallas=True)
+    a.fit(s, from_scratch=True)
+    b.fit(s, from_scratch=True)
+    recents = np.stack([s[-4:], s[-9:-5]])
+    ma, sa = a.predict_batch(recents)
+    mb, sb = b.predict_batch(recents)
+    np.testing.assert_allclose(ma, mb, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sa, sb, rtol=1e-3, atol=1e-5)

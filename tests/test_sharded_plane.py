@@ -103,6 +103,30 @@ def test_sharded_equals_single_per_target(base, n_shards, async_ticks,
     plane.shutdown()
 
 
+@pytest.mark.parametrize("coalesce", [True, False])
+def test_sharded_use_pallas_equals_single(base, coalesce):
+    """Plane-level ``use_pallas=True`` routes the stacked forecast
+    dispatches (fused gang and per-shard alike) through the fused Pallas
+    sequence kernel (interpret mode on CPU) — decisions identical to the
+    XLA path's FleetController."""
+    traces, models = base
+    ref = FleetController(CFG, _specs(models))
+    plane = ShardedControlPlane(CFG, _specs(models), n_shards=2,
+                                coalesce_dispatch=coalesce,
+                                use_pallas=True)
+    _drive(traces, ref, plane, check=False)
+    for z in traces:
+        dref, dpl = ref.decisions(z), plane.decisions(z)
+        assert [d.replicas for d in dref] == [d.replicas for d in dpl]
+        assert [d.predicted for d in dref] == [d.predicted for d in dpl]
+        pr, pp = ref.predictions(z), plane.predictions(z)
+        assert len(pr) == len(pp)
+        for (ta, a), (tb, b) in zip(pr, pp):
+            assert ta == tb
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    plane.shutdown()
+
+
 def test_sharded_equals_single_shared_model(base):
     """Shared-model mode: one forecaster answering all targets per shard."""
     traces, _ = base

@@ -24,6 +24,14 @@ Four claims are measured (the PRs' acceptance bars):
    CPU), with GFLOP/s + tick ms recorded per path (the vmapped-XLA figure
    is the CPU device floor; the kernel's own figure is the TPU follow-up
    record).
+7. **Device scaling** — the mesh-mapped plane (DESIGN.md §9) at the
+   control-plane-bound config (window=1, hidden=16, S=8): tick ms and
+   ticks/s for D in {1, 2, 4, 8} devices at Z in {4096, 16384, 65536},
+   measured in a subprocess under ``--xla_force_host_platform_device_
+   count=8`` (the CI trick — no accelerator needed).  D=1 is the
+   single-device plane (host per-shard path, the deployment a mesh
+   replaces); D>=2 run the ``shard_map`` engine with device-resident
+   ring/weights/scalers.  Bar: D=8 >= 2x D=1 ticks/s at Z=16384.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_control_plane [--quick]
          [--check-baseline benchmarks/baselines/control_plane_baseline.json]
@@ -32,6 +40,7 @@ from __future__ import annotations
 
 import copy
 import json
+import os
 import time
 from pathlib import Path
 
@@ -513,6 +522,138 @@ def bench_forecast_device(zs=(64, 256, 1024), window: int = 4,
     return out
 
 
+def _fab_targets(Z: int, window: int, hidden: int, seed: int = 0):
+    """Z fabricated fitted per-target LSTMs without Z fits: one base model
+    supplies params (shared ref — the lane measures tick plumbing, not
+    forecast skill), each target gets its own scaler stats views.  The
+    fabrication path is what makes Z=10^4..10^5 planes constructible in a
+    bench subprocess."""
+    from repro.core import TargetSpec, ThresholdPolicy
+    from repro.core.forecaster import LSTMForecaster, Scaler
+
+    base = LSTMForecaster(window=window, hidden=hidden, seed=seed)
+    rng = np.random.default_rng(seed)
+    from repro.core.metrics import N_METRICS
+    means = rng.uniform(50.0, 400.0, (Z, N_METRICS))
+    stds = 0.1 * means + 1.0
+    specs = []
+    for i in range(Z):
+        m = LSTMForecaster.__new__(LSTMForecaster)
+        m.__dict__.update(base.__dict__)
+        sc = Scaler()
+        sc.mean, sc.std, sc.fitted = means[i], stds[i], True
+        m.scaler = sc
+        m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        specs.append(TargetSpec(f"z{i}", ThresholdPolicy(100.0, 1), model=m))
+    return specs
+
+
+def _device_lane_measure(Z: int, window: int, hidden: int, n_shards: int,
+                         warmup: int, ticks: int, ds=(2, 4, 8)) -> dict:
+    """Child-process body of the device_scaling lane (jax already sees the
+    forced host devices here).  One point: the single-device plane (host
+    per-shard path) as the D=1 row, the shard_map mesh engine for each
+    D in ``ds``, all on identical fabricated targets and metric rows."""
+    import jax
+
+    from repro.core import PPAConfig, ShardedControlPlane
+    from repro.core.metrics import N_METRICS
+
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    rng = np.random.default_rng(1)
+    rows_seq = [rng.uniform(50.0, 400.0, (Z, N_METRICS))
+                for _ in range(4)]
+    # contiguous block assignment: skips Z crc32 hashes per plane build
+    # and matches the mesh's contiguous row blocks
+    assignment = {f"z{i}": i * n_shards // Z for i in range(Z)}
+
+    def build(device_mesh):
+        plane = ShardedControlPlane(
+            cfg, _fab_targets(Z, window, hidden), n_shards=n_shards,
+            assignment=assignment, coalesce_dispatch=False,
+            device_mesh=device_mesh)
+        for k in range(window + 1):      # fill rings to candidacy
+            plane.observe_batch(15.0 * (k + 1), rows_seq[k % 4])
+        return plane
+
+    # all configs alive at once, timed ticks interleaved round-robin:
+    # on a noisy box slow in-process drift hits every row equally, so
+    # the D-ratios stay honest (sequential per-config runs do not)
+    planes = {"1": build(None)}
+    for d in ds:
+        planes[str(d)] = build(int(d))
+    t = 15.0 * (window + 1)
+    samples = {k: [] for k in planes}
+    for j in range(warmup + ticks):
+        t += 15.0
+        rows = rows_seq[j % 4]
+        for k, plane in planes.items():
+            t0 = time.perf_counter()
+            plane.observe_batch(t, rows)
+            plane.control_step(t, 64, 2)
+            samples[k].append(time.perf_counter() - t0)
+    for plane in planes.values():
+        plane.shutdown()
+    tick_ms = {k: float(np.mean(v[warmup:])) * 1e3
+               for k, v in samples.items()}
+    ticks_per_s = {k: 1e3 / v for k, v in tick_ms.items()}
+    d_max = str(max(ds))
+    return {
+        "Z": Z, "window": window, "hidden": hidden, "n_shards": n_shards,
+        "n_devices_visible": len(jax.devices()),
+        "tick_ms": tick_ms, "ticks_per_s": ticks_per_s,
+        "speedup_d8_vs_d1": ticks_per_s[d_max] / ticks_per_s["1"],
+    }
+
+
+def bench_device_scaling(zs=(4096, 16384, 65536), window: int = 1,
+                         hidden: int = 16, n_shards: int = 8,
+                         warmup: int = 2, ticks: int = 8,
+                         n_devices: int = 8):
+    """Cross-device tick scaling (DESIGN.md §9): the mesh-mapped plane vs
+    the single-device plane at the control-plane-bound config.  Each Z
+    point runs in its own subprocess with ``--xla_force_host_platform_
+    device_count=8`` set before jax initialises (``force_host_devices_
+    env``), so the lane works on any CPU-only CI box; all D rows of a
+    point share one process, so their ratio cancels machine noise.
+
+    window=1 / hidden=16 is the control-plane-bound config: with the
+    paper-fidelity LSTM(50, W=4) the tick is forward-FLOP-bound on CPU
+    and device count measures the GEMM, not the plane."""
+    import subprocess
+    import sys
+
+    from repro.core.device_plane import force_host_devices_env
+
+    root = Path(__file__).resolve().parent.parent
+    env = force_host_devices_env(n_devices)
+    env["PYTHONPATH"] = (str(root / "src")
+                         + (os.pathsep + env["PYTHONPATH"]
+                            if env.get("PYTHONPATH") else ""))
+    out = []
+    for Z in zs:
+        spec = {"Z": int(Z), "window": window, "hidden": hidden,
+                "n_shards": n_shards, "warmup": warmup, "ticks": ticks}
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_control_plane",
+             "--device-lane", json.dumps(spec)],
+            env=env, cwd=root, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"device lane child Z={Z} failed:\n{proc.stderr[-2000:]}")
+        point = json.loads(proc.stdout.strip().splitlines()[-1])
+        out.append(point)
+        tm = point["tick_ms"]
+        csv_row(f"device_scaling_Z{Z}", tm["8"] * 1e3,
+                f"D1(single-device)={tm['1']:.2f}ms "
+                f"D2={tm['2']:.2f}ms D4={tm['4']:.2f}ms "
+                f"D8={tm['8']:.2f}ms = "
+                f"{point['speedup_d8_vs_d1']:.2f}x "
+                f"(bar at Z>=16384: >=2x)")
+    return out
+
+
 def check_baseline(results: dict, path: Path) -> list[str]:
     """>2x ticks/sec regression vs the checked-in baseline fails CI (the
     same guard shape as bench_fleet_scale)."""
@@ -542,6 +683,20 @@ def check_baseline(results: dict, path: Path) -> list[str]:
                 f"forecast_device Z={point['Z']}: fused "
                 f"{point['fused_gflops']:.2f} GFLOP/s "
                 f"< half of baseline {ref}")
+    for point in results.get("device_scaling", []):
+        z = str(point["Z"])
+        ref = base.get("device_mesh_d8_ticks_per_s", {}).get(z)
+        if ref is not None and point["ticks_per_s"]["8"] < ref / 2.0:
+            errors.append(
+                f"device_scaling Z={z}: mesh D=8 "
+                f"{point['ticks_per_s']['8']:,.0f} ticks/s "
+                f"< half of baseline {ref:,.0f}")
+        rref = base.get("device_speedup_d8_vs_d1", {}).get(z)
+        if rref is not None and point["speedup_d8_vs_d1"] < rref:
+            errors.append(
+                f"device_scaling Z={z}: D=8 only "
+                f"{point['speedup_d8_vs_d1']:.2f}x the single-device "
+                f"plane (bar: >={rref}x)")
     return errors
 
 
@@ -561,10 +716,12 @@ def run(quick: bool = False, baseline: Path | None = None):
     forecast = bench_forecast_device(zs=(64, 256) if quick
                                      else (64, 256, 1024),
                                      iters=5 if quick else 20)
+    device = bench_device_scaling(zs=(4096, 16384) if quick
+                                  else (4096, 16384, 65536))
     payload = {"control_latency": lat, "sim_core_parity": par,
                "shard_sweep": sweep, "fidelity_point": fidelity,
                "refit_overlap": refit, "policy_dispatch": policy,
-               "forecast_device": forecast}
+               "forecast_device": forecast, "device_scaling": device}
     save_bench("control_plane", payload)
     assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
     assert par["parity_ok"], f"sim-core parity broken: {par}"
@@ -578,6 +735,12 @@ def run(quick: bool = False, baseline: Path | None = None):
                 (f"forecast_device Z={p['Z']}: fused sequence kernel "
                  f"slower than the per-timestep cell path "
                  f"({p['fused_vs_cell']:.2f}x, bar: >=1x)")
+    for p in device:
+        if p["Z"] == 16384:
+            assert p["speedup_d8_vs_d1"] >= 2.0, \
+                (f"device_scaling Z={p['Z']}: mesh D=8 only "
+                 f"{p['speedup_d8_vs_d1']:.2f}x the single-device plane "
+                 f"(bar: >=2x)")
     if not quick:
         for p in sweep:
             if p["Z"] >= 256:
@@ -597,6 +760,14 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI bench-smoke lane: same as --quick")
     ap.add_argument("--check-baseline", type=Path, default=None)
+    ap.add_argument("--device-lane", type=str, default=None,
+                    help="internal: JSON spec for one device_scaling "
+                         "point (run by bench_device_scaling in a "
+                         "forced-host-device subprocess)")
     args = ap.parse_args()
+    if args.device_lane is not None:
+        print(json.dumps(_device_lane_measure(**json.loads(args.device_lane)),
+                         default=float))
+        raise SystemExit(0)
     out = run(quick=args.quick or args.smoke, baseline=args.check_baseline)
     print(json.dumps(out, indent=1, default=float))

@@ -321,6 +321,20 @@ class _VecShard:
             for i, h in enumerate(self.histories):
                 h.append_row(t, rows[i])
 
+    # device-mode collect: the metric ring lives on the device mesh
+    # (core/device_plane.py), so the shard keeps only counts + histories
+    def observe_meta(self, name: str, snap: Snapshot):
+        i = self.index[name]
+        self.count[i] += 1
+        if self.keep_history:
+            self.histories[i].append(snap)
+
+    def observe_meta_batch(self, t: float, rows: np.ndarray):
+        self.count += 1
+        if self.keep_history:
+            for i, h in enumerate(self.histories):
+                h.append_row(t, rows[i])
+
     # ---------------------------------------------------------- formulate --
     def snapshot(self):
         """Copy the formulated window batch — the tick's double buffer: the
@@ -615,12 +629,21 @@ class ShardedControlPlane:
                  async_ticks: bool = False, async_updates: bool | None = None,
                  coalesce_dispatch: bool = True,
                  max_workers: int | None = None,
-                 use_pallas: bool | None = None):
+                 use_pallas: bool | None = None,
+                 device_mesh=None):
         """``use_pallas`` (None = inherit from the models) forces the
         per-target stacked forecast dispatches — fused gang and per-shard
         alike — on (True) or off (False) the fused Pallas sequence kernel
         (DESIGN.md §7).  Shared-model planes keep the model's own flag
-        (its ``predict_batch`` owns the dispatch)."""
+        (its ``predict_batch`` owns the dispatch).
+
+        ``device_mesh`` (None = host state, the default) maps the plane
+        onto a JAX device mesh (DESIGN.md §9): an int takes that many
+        local devices, a 1-D ``('shards',)`` ``Mesh`` is used as given.
+        The metric ring, stacked weights and scaler stats then live
+        device-resident between ticks; ``coalesce_dispatch`` picks gang
+        jit (GSPMD) vs per-device ``shard_map`` dispatch.  Requires the
+        homogeneous per-target stacked-LSTM shape (the fused gang set)."""
         self.per_target_models = validate_targets(targets, model, updater)
         self.cfg = cfg
         self.use_pallas = use_pallas
@@ -642,7 +665,7 @@ class ShardedControlPlane:
         self.shards = []
         self._shard_rows: list[tuple[object, np.ndarray]] = []
         self._shard_of: dict[str, object] = {}
-        pos = {n: i for i, n in enumerate(self._names)}
+        pos = self._pos = {n: i for i, n in enumerate(self._names)}
         for s in sorted(by_shard):
             specs = by_shard[s]
             shard = (_VecShard(cfg, specs, model, use_pallas=use_pallas)
@@ -692,6 +715,28 @@ class ShardedControlPlane:
             for shard in self.shards:
                 if shard.vectorized:
                     shard.keep_history = False
+        # device-mesh mode: forecast state (ring / weights / scalers)
+        # lives on the mesh, host keeps counts + last rows for evaluate
+        self._engine = None
+        if device_mesh is not None:
+            from repro.core.device_plane import engine_for_plane
+            self._engine, self._dev_models = engine_for_plane(
+                self, device_mesh, coalesce_dispatch)
+            self._fused = False          # the engine owns dispatch
+            Z = len(self._names)
+            self._dev_counts = np.zeros(Z, np.int64)
+            self._dev_last = np.zeros((Z, N_METRICS))
+            self._dev_keep_history = any(s.keep_history
+                                         for s in self.shards)
+            # contiguous-block assignments (the deployment shape) feed
+            # decide through zero-copy slice views instead of per-shard
+            # fancy-index gathers of the joined prediction batch
+            self._shard_cuts = [
+                slice(int(idx[0]), int(idx[-1]) + 1)
+                if idx.size and np.array_equal(
+                    idx, np.arange(idx[0], idx[0] + idx.size))
+                else idx
+                for _, idx in self._shard_rows]
 
     # ------------------------------------------------------------ access --
     @property
@@ -721,15 +766,32 @@ class ShardedControlPlane:
 
     # ----------------------------------------------------------- collect --
     def observe(self, name: str, snap: Snapshot):
+        if self._engine is not None:
+            i = self._pos[name]
+            self._engine.push_row(i, snap.values)
+            self._dev_counts[i] += 1
+            self._dev_last[i] = snap.values
+            self._shard_of[name].observe_meta(name, snap)
+            return
         self._shard_of[name].observe(name, snap)
 
     def observe_batch(self, t: float, values):
         """Batched collect: ``values`` is {name: row} or a (Z, M) array in
-        target-list order — one ring shift per shard instead of Z calls."""
+        target-list order — one ring shift per shard instead of Z calls
+        (device mode: ONE device-resident ring shift for the whole plane,
+        the tick's single host->device row upload)."""
         if isinstance(values, dict):
             rows = np.asarray([values[n] for n in self._names], np.float64)
         else:
             rows = np.asarray(values, np.float64)
+        if self._engine is not None:
+            self._engine.push_rows(rows)
+            self._dev_counts += 1
+            self._dev_last[:] = rows
+            if self._dev_keep_history:
+                for shard, idx in self._shard_rows:
+                    shard.observe_meta_batch(t, rows[idx])
+            return
         for shard, idx in self._shard_rows:
             shard.observe_batch(t, rows[idx])
 
@@ -743,8 +805,25 @@ class ShardedControlPlane:
         if self._pending is not None:
             raise RuntimeError("previous tick not finished "
                                "(finish_tick barrier missing)")
-        states = [shard.snapshot() for shard in self.shards]
         go_async = self._pool is not None and self.async_ticks
+        if self._engine is not None:
+            # device mode: refresh the device weight caches iff the refit
+            # epoch moved (between ticks, so no in-flight reader), then
+            # snapshot = the immutable current ring buffer + host counts.
+            # Later pushes build NEW device buffers — the double buffer
+            # costs no copy.
+            self._engine.refresh(self._dev_models, self._models_epoch)
+            ring_ref = self._engine.snapshot()
+            counts = self._dev_counts.copy()
+            state = (self._dev_last.copy(), counts)
+            fut = (self._pool.submit(self._engine.forecast, ring_ref,
+                                     counts)
+                   if go_async
+                   else _Immediate(self._engine.forecast(ring_ref, counts)))
+            self._pending = (t, max_replicas, current_replicas, state,
+                             [fut])
+            return self
+        states = [shard.snapshot() for shard in self.shards]
         if self._fused:
             preps = self._prepare_fused(states)
             fut = (self._pool.submit(self._forecast_fused, preps) if go_async
@@ -764,6 +843,21 @@ class ShardedControlPlane:
             raise RuntimeError("no tick in flight (call begin_tick first)")
         t, max_r, cur_r, states, futs = self._pending
         self._pending = None
+        if self._engine is not None:
+            # device mode: one joined (Z, M) prediction batch; evaluate
+            # stays the shards' columnar host math, fed a fabricated
+            # 1-row ring so ``ring[:, -1, k]`` still reads the last row
+            last, counts = states
+            means_full, cand_full = futs[0].result()
+            per_shard = []
+            for (shard, _), idx in zip(self._shard_rows,
+                                       self._shard_cuts):
+                state_s = (last[idx][:, None, :], counts[idx])
+                preds_s = (means_full[idx], None, False, cand_full[idx])
+                rec = shard.decide(t, state_s, preds_s, max_r, cur_r)
+                per_shard.append((shard, rec))
+            self.poll_updates()
+            return TickResult(self, per_shard, t)
         if self._fused:
             preds_list = futs[0].result()
         else:

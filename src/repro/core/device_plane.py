@@ -1,0 +1,275 @@
+"""Device-mesh execution engine for the sharded control plane (DESIGN.md §9).
+
+``ShardedControlPlane`` keeps its tick state in host numpy: a (Zs, R, M)
+metric ring per shard, f64 scaler transforms, and a ``predict_from_stack``
+that re-uploads the window batch (and gathers stacked weights) every tick.
+Once dispatch is fused that host round-trip IS the tick wall at Z >= 10^4.
+This module moves the forecast half of the tick onto a JAX device mesh:
+
+* **mesh** — one physical axis ``('shards',)`` over D local devices
+  (``distributed.sharding.control_mesh``); the plane's Z-target axis is
+  partitioned over it with ``NamedSharding``/``PartitionSpec``.
+* **device-resident state** — the metric ring (Zp, R, M) f32, the stacked
+  LSTM weight pytree, and the stacked scaler stats live on the mesh
+  BETWEEN ticks.  Per tick the host uploads one (Zp, M) row batch and
+  downloads one (Zp, M) prediction batch; the ring shifts in place on
+  device (``jnp`` functional update — the old buffer stays valid, which
+  is exactly the double-buffer snapshot the async tick needs for free).
+* **two dispatch policies** — ``coalesce_dispatch=True`` gangs the whole
+  plane into ONE jitted program and lets GSPMD partition it over the mesh;
+  ``False`` routes the per-shard path through ``jax.shard_map`` so each
+  device runs its own block program (the multi-device deployment shape).
+* **invalidate-on-refit-commit** — stacked weights/scalers re-stack and
+  re-upload only when the plane's refit epoch moves (the same epoch the
+  fused host cache keys on), never per tick.
+
+Bitwise device-count invariance: every per-target computation here is
+row-independent (batched GEMV per target, no cross-target reductions), so
+partitioning the Z axis over 1, 2 or 8 devices cannot change any row's
+numerics — ``tests/test_device_plane.py`` asserts tick results are
+bitwise identical across D.  Against the host plane the engine computes
+in f32 end-to-end (the host path standardises in f64), so equivalence is
+decision-level + allclose, like the Pallas kernel path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.forecaster import (Z_CLIP, lstm_stack_signature,
+                                   stack_scaler_stats, stacked_forward)
+from repro.core.metrics import N_METRICS
+from repro.distributed.sharding import CONTROL_AXIS, control_mesh
+
+FORCE_HOST_DEVICES_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices_env(n: int = 8, env: dict | None = None) -> dict:
+    """Environment for a subprocess that should see ``n`` virtual CPU
+    devices — the forced-host-device trick CI uses to exercise the mesh
+    plane without accelerators.  Must be set before jax initialises, hence
+    the subprocess (tests/conftest.py re-execs through this)."""
+    out = dict(os.environ if env is None else env)
+    flags = [f for f in out.get("XLA_FLAGS", "").split()
+             if not f.startswith(FORCE_HOST_DEVICES_FLAG)]
+    flags.append(f"{FORCE_HOST_DEVICES_FLAG}={int(n)}")
+    out["XLA_FLAGS"] = " ".join(flags)
+    out.setdefault("JAX_PLATFORMS", "cpu")
+    return out
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+class DevicePlaneEngine:
+    """Device-resident forecast state + dispatch for one control plane.
+
+    The plane (core/control_plane.py) keeps owning collect / evaluate /
+    actuate on host numpy; this engine owns exactly the state that used to
+    cross the host-device boundary every tick: the metric ring, the
+    stacked per-target LSTM params and the stacked scaler stats.
+
+    The engine computes predictions for ALL rows and the plane masks
+    non-candidates with NaN on host — a host-side candidate gather would
+    reintroduce the per-tick device round-trip, and an all-rows program
+    keeps shapes static across ticks (one compile).
+    """
+
+    def __init__(self, Z: int, window: int, residual: bool,
+                 use_pallas: bool, *, device_mesh=None,
+                 coalesce_dispatch: bool = True, ring_rows: int | None = None):
+        self.mesh = (device_mesh if device_mesh is not None
+                     and not isinstance(device_mesh, int)
+                     else control_mesh(device_mesh))
+        if tuple(self.mesh.axis_names) != (CONTROL_AXIS,):
+            raise ValueError("device plane needs a 1-D ('shards',) mesh "
+                             f"(got axes {self.mesh.axis_names})")
+        self.n_devices = int(self.mesh.devices.size)
+        self.Z = int(Z)
+        self.Zp = _pad_to(max(self.Z, self.n_devices), self.n_devices)
+        self.window = int(window)
+        self.residual = bool(residual)
+        self.use_pallas = bool(use_pallas)
+        self.R = int(ring_rows if ring_rows is not None
+                     else max(self.window + 1, 8))
+        self.coalesce = bool(coalesce_dispatch)
+        self._s_rows = NamedSharding(self.mesh, P(CONTROL_AXIS, None))
+        self._s_ring = NamedSharding(self.mesh, P(CONTROL_AXIS, None, None))
+        self.ring = jax.device_put(
+            np.zeros((self.Zp, self.R, N_METRICS), np.float32), self._s_ring)
+        # reused host staging buffer for the per-tick row upload (pad rows
+        # beyond Z are never candidates, so zeros are fine)
+        self._row_buf = np.zeros((self.Zp, N_METRICS), np.float32)
+        self.epoch: int | None = None     # refit epoch of the device caches
+        self._stacked = None              # device pytree, leading Zp axis
+        self._mean = self._std = None     # device (Zp, M) f32
+        self._valid = np.zeros(self.Z, bool)
+        self._push = jax.jit(self._push_fn)
+        self._push_row = jax.jit(self._push_row_fn)
+        self._fwd = self._build_forward()
+
+    # ----------------------------------------------------- ring updates --
+    @staticmethod
+    def _push_fn(ring, rows):
+        # functional shift: the returned buffer replaces self.ring; any
+        # snapshot reference taken before the push stays valid (this is
+        # the async tick's double buffer, no copy needed)
+        return jnp.concatenate([ring[:, 1:], rows[:, None, :]], axis=1)
+
+    @staticmethod
+    def _push_row_fn(ring, i, row):
+        shifted = jnp.concatenate([ring[i, 1:], row[None, :]], axis=0)
+        return ring.at[i].set(shifted)
+
+    def push_rows(self, rows: np.ndarray):
+        """One whole-plane ring shift on device: uploads a single (Zp, M)
+        f32 row batch (the tick's only host->device transfer)."""
+        self._row_buf[:self.Z] = rows
+        if self.R == 1:
+            # window-1 ring: the shift is the identity, so the upload IS
+            # the new ring — no shift dispatch (device_put builds a fresh
+            # buffer, so earlier snapshots stay valid)
+            self.ring = jax.device_put(
+                self._row_buf[:, None, :], self._s_ring)
+            return
+        dev_rows = jax.device_put(self._row_buf, self._s_rows)
+        self.ring = self._push(self.ring, dev_rows)
+
+    def push_row(self, i: int, row: np.ndarray):
+        """Single-target observe (the scalar ``observe`` API)."""
+        self.ring = self._push_row(self.ring, jnp.int32(i),
+                                   jnp.asarray(row, jnp.float32))
+
+    def snapshot(self):
+        """The formulated window state — an immutable device array ref;
+        later pushes build new buffers and never mutate it."""
+        return self.ring
+
+    # ------------------------------------------------------ weight cache --
+    def refresh(self, models, epoch: int):
+        """Re-stack + re-upload params/scaler stats iff the plane's refit
+        epoch moved (invalidate-on-refit-commit).  Runs on the control
+        thread between ticks, so no in-flight forecast can read a
+        half-installed stack."""
+        if self.epoch == epoch:
+            return
+        self._valid = np.array(
+            [self._model_ok(m) for m in models], bool)
+        stacked_np = {}
+        for leaf in ("Wx", "Wh", "b", "Wo", "bo"):
+            arrs = [np.asarray(m.params[leaf], np.float32) for m in models]
+            buf = np.zeros((self.Zp,) + arrs[0].shape, np.float32)
+            buf[:self.Z] = np.stack(arrs)
+            stacked_np[leaf] = buf
+        mean, std = stack_scaler_stats(models)
+        mean_p = np.zeros((self.Zp, N_METRICS), np.float32)
+        std_p = np.ones((self.Zp, N_METRICS), np.float32)
+        mean_p[:self.Z] = mean
+        std_p[:self.Z] = std
+        self._stacked = jax.tree.map(
+            lambda leaf: jax.device_put(leaf, self._s_leaf(leaf)),
+            stacked_np)
+        self._mean = jax.device_put(mean_p, self._s_rows)
+        self._std = jax.device_put(std_p, self._s_rows)
+        self.epoch = epoch
+
+    def _s_leaf(self, leaf: np.ndarray) -> NamedSharding:
+        return NamedSharding(
+            self.mesh, P(CONTROL_AXIS, *(None,) * (leaf.ndim - 1)))
+
+    @staticmethod
+    def _model_ok(m) -> bool:
+        try:
+            return bool(m.valid())
+        except Exception:
+            return False
+
+    # --------------------------------------------------------- dispatch --
+    def _build_forward(self):
+        W, residual, use_pallas = self.window, self.residual, self.use_pallas
+
+        def body(stacked, mean, std, ring):
+            win = ring[:, -W:, :]
+            z = jnp.clip((win - mean[:, None, :]) / std[:, None, :],
+                         -Z_CLIP, Z_CLIP)
+            net = stacked_forward(stacked, z, use_pallas=use_pallas)
+            if residual:
+                net = z[:, -1, :] + net
+            return net * std + mean
+
+        if self.coalesce:
+            # gang dispatch: ONE program, GSPMD partitions the Z axis over
+            # the mesh following the argument shardings
+            return jax.jit(body)
+        # per-shard dispatch: shard_map runs the block program per device
+        # (PartitionSpecs shorter than an array's rank replicate the
+        # trailing dims; the stacked-params dict takes P('shards') as a
+        # pytree prefix)
+        return jax.jit(shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(CONTROL_AXIS), P(CONTROL_AXIS), P(CONTROL_AXIS),
+                      P(CONTROL_AXIS)),
+            out_specs=P(CONTROL_AXIS)))
+
+    def forecast(self, ring_ref, counts: np.ndarray):
+        """Forecast every target from a ring snapshot: returns
+        ``(means (Z, M) f32 with NaN rows for non-candidates, cand (Z,))``.
+        Reads only device caches + the immutable snapshot — safe on a
+        worker thread while the driver keeps pushing next-window rows."""
+        cand = self._valid & (counts >= self.window + 1)
+        if not cand.any():
+            return np.full((self.Z, N_METRICS), np.nan, np.float32), cand
+        try:
+            out = self._fwd(self._stacked, self._mean, self._std, ring_ref)
+            if cand.all():
+                # steady state: every row is a candidate, skip the mask
+                means = np.asarray(out)[:self.Z]
+            else:
+                means = np.full((self.Z, N_METRICS), np.nan, np.float32)
+                means[cand] = np.asarray(out)[:self.Z][cand]
+        except Exception:
+            # robust: a failed gang dispatch -> every target reactive
+            return np.full((self.Z, N_METRICS), np.nan, np.float32), \
+                np.zeros(self.Z, bool)
+        return means, cand
+
+
+def engine_for_plane(plane, device_mesh, coalesce_dispatch: bool
+                     ) -> tuple[DevicePlaneEngine, list]:
+    """Validate a ``ShardedControlPlane``'s target set for the device path
+    and build its engine + plane-order model list.  The device plane only
+    takes the homogeneous per-target stacked-LSTM shape — exactly the set
+    the fused gang path accepts."""
+    if not plane.per_target_models:
+        raise ValueError("device_mesh needs per-target models (a shared "
+                         "model owns its own predict_batch dispatch)")
+    if not all(s.vectorized for s in plane.shards):
+        raise ValueError("device_mesh needs every shard on the columnar "
+                         "path (vectorisable policies + stackable LSTMs)")
+    # plane-order model list without an O(Z^2) per-name lookup
+    models = [None] * len(plane.target_names)
+    for shard, idx in plane._shard_rows:
+        tm = shard.target_models()
+        for j, gi in enumerate(idx):
+            models[gi] = tm[j]
+    sig = lstm_stack_signature(models[0])
+    if not all(lstm_stack_signature(m) == sig for m in models):
+        raise ValueError("device_mesh needs homogeneous stackable LSTMs "
+                         "across shards")
+    m0 = models[0]
+    use_pallas = (m0.use_pallas if plane.use_pallas is None
+                  else plane.use_pallas)
+    # ring sized to exactly the forward window: the plane tracks counts
+    # and last rows on host, so deeper device history is dead weight the
+    # per-tick push shift would pay for (8x at window=1 vs the default)
+    engine = DevicePlaneEngine(
+        len(models), m0.window, m0.residual, use_pallas,
+        device_mesh=device_mesh, coalesce_dispatch=coalesce_dispatch,
+        ring_rows=m0.window)
+    return engine, models

@@ -293,17 +293,59 @@ def lstm_stack_signature(m: "LSTMForecaster") -> tuple:
 
 
 def stack_params(models) -> dict:
-    """jnp-stack Z models' parameter pytrees on a new leading axis — the
+    """Stack Z models' parameter pytrees on a new leading axis — the
     one construction every stacked-batch cache (per-target, fused, member)
-    shares; each cache keeps its own invalidation key."""
-    return jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                        *[m.params for m in models])
+    shares; each cache keeps its own invalidation key.  The stack happens
+    in host numpy (one upload of the stacked leaf), not as a Z-operand
+    XLA concatenate — at Z >= 10^4 jnp.stack would hand the compiler tens
+    of thousands of operands."""
+    return jax.tree.map(
+        lambda *leaves: jnp.asarray(np.stack([np.asarray(x) for x in leaves])),
+        *[m.params for m in models])
 
 
 def stack_scaler_stats(models) -> tuple[np.ndarray, np.ndarray]:
     """(mean (Z, M), std (Z, M)) stacks for ``transform_stacked``."""
     return (np.stack([m.scaler.mean for m in models]),
             np.stack([m.scaler.std for m in models]))
+
+
+def stacked_forward(stacked_params, xs, *, use_pallas: bool = False):
+    """Pure (unjitted) stacked per-target forward body: pytree with
+    leading target axis Z, xs (Z, W, M) -> (Z, M).  Split out of
+    ``_lstm_forward_stacked`` so callers that build their own dispatch
+    wrapper — the device plane's ``jax.jit``/``shard_map`` programs
+    (core/device_plane.py) — trace the SAME math instead of nesting jits.
+    The Pallas path routes through ``ops.lstm_seq_stacked_local`` (the
+    shard_map-compatible entry: local block shapes, no jit boundary).
+
+    The XLA path elides the first timestep's recurrent terms: with
+    h0 = c0 = 0 the ``h @ Wh`` matmul and the ``sigmoid(f) * c`` forget
+    term are exactly zero, so step 1 reduces to the input projection —
+    at window=1 (the forecaster default) that removes the dominant
+    batched GEMV from the whole dispatch.  The elision is value-exact
+    (identical at window=1; later steps may differ from the scan-only
+    graph at f32 fusion-rounding level, within forecast parity
+    tolerances).  The training path (``lstm_forward``) keeps the plain
+    scan so fit losses and gradients are untouched."""
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.lstm_seq_stacked_local(
+            stacked_params["Wx"], stacked_params["Wh"], stacked_params["b"],
+            stacked_params["Wo"], stacked_params["bo"], xs)
+
+    def fwd(p, x):
+        gates = x[0] @ p["Wx"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        if x.shape[0] > 1:
+            def step(carry, xw):
+                h, c = carry
+                return lstm_cell(p, h, c, xw), None
+            (h, c), _ = jax.lax.scan(step, (h, c), x[1:])
+        return jax.nn.relu(h) @ p["Wo"] + p["bo"]
+    return jax.vmap(fwd)(stacked_params, xs)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -313,14 +355,7 @@ def _lstm_forward_stacked(stacked_params, xs, *, use_pallas: bool = False):
     fused block-batched sequence kernel (per-row weights, batched-GEMV
     gate matmuls, W-step fori_loop in VMEM scratch); the XLA path vmaps
     the scan forward."""
-    if use_pallas:
-        from repro.kernels import ops
-        return ops.lstm_seq_stacked(
-            stacked_params["Wx"], stacked_params["Wh"], stacked_params["b"],
-            stacked_params["Wo"], stacked_params["bo"], xs)
-    def fwd(p, x):
-        return lstm_forward(p, x[None], use_pallas=use_pallas)[0]
-    return jax.vmap(fwd)(stacked_params, xs)
+    return stacked_forward(stacked_params, xs, use_pallas=use_pallas)
 
 
 def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,

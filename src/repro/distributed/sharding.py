@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Mapping, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 ShardingRules = Mapping[str, tuple[str, ...]]
@@ -118,6 +119,33 @@ def shard_activation(x: jax.Array, axes: Sequence[str | None], rules: ShardingRu
         return x
     spec = logical_to_pspec(axes, x.shape, rules, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# Control-plane mesh: ONE physical axis 'shards' over which the sharded
+# control plane partitions its target axis (core/device_plane.py).  Kept
+# here so the plane reuses the same Mesh/NamedSharding vocabulary as the
+# model meshes above.
+CONTROL_AXIS = "shards"
+
+CONTROL_RULES: ShardingRules = {
+    "targets": (CONTROL_AXIS,),   # the leading Z axis of every plane array
+    "ring": (),                   # per-target ring rows stay local
+    "metric": (),
+}
+
+
+def control_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ('shards',) mesh over the first ``n_devices`` local devices
+    (all of them by default).  With
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the CPU backend
+    exposes N virtual devices, which is how CI exercises the multi-device
+    control plane without accelerators."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"control_mesh: n_devices={n} outside "
+                         f"[1, {len(devs)}] available devices")
+    return Mesh(np.asarray(devs[:n]), (CONTROL_AXIS,))
 
 
 def tree_pspecs(spec_tree, rules: ShardingRules, mesh: Mesh):

@@ -71,6 +71,16 @@ def lstm_seq_stacked(Wx, Wh, b, Wo, bo, xs, *, block_b=32):
                                   interpret=_interpret())
 
 
+def lstm_seq_stacked_local(Wx, Wh, b, Wo, bo, xs, *, block_b=32):
+    """Unjitted ``lstm_seq_stacked`` body for callers that own the jit
+    boundary — in particular ``shard_map`` programs (the multi-device
+    control plane, core/device_plane.py), where the kernel must trace on
+    the per-device LOCAL block shapes rather than behind a nested jit.
+    Backend interpret resolution is identical to the jitted wrapper."""
+    return _lseq.lstm_seq_stacked(Wx, Wh, b, Wo, bo, xs, block_b=block_b,
+                                  interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("eps",))
 def rmsnorm(x, w, *, eps=1e-6):
     return _rms.rmsnorm(x, w, eps=eps, interpret=_interpret())

@@ -338,6 +338,54 @@ class ServingFleet:
                         redis[i + j] = True
                 i += k
                 continue
+            # vectorised busy round: assign the next r arrivals to the r
+            # earliest slot horizons ((key, slot)-sorted = the per-event
+            # min-key/first-index pick; pool ready is folded into key so
+            # there is no pending branch).  Service times here are
+            # deterministic in (ntok, replica speed), so the only parity
+            # hazard is slot-choice divergence — excluded over the
+            # committed prefix, where each next horizon strictly precedes
+            # every earlier completion of the round.
+            live = pool.live[:pool.n]
+            keys = pool.key[:pool.n]
+            busy = np.flatnonzero(live)
+            if busy.size > 1:
+                r0 = min(int(np.searchsorted(times[i:], keys[busy].min(),
+                                             side="left")), busy.size)
+                if r0 > 1:
+                    order = np.argsort(keys[busy], kind="stable")[:r0]
+                    hs = busy[order]
+                    hk = keys[hs]
+                    rid = hs // S
+                    ts = times[i:i + r0]
+                    sv = (cfg.prefill_s
+                          + ntok[i:i + r0] / (cfg.decode_tok_s
+                                              * self._rep_speed[rid]))
+                    st = np.maximum(np.maximum(ts, hk),
+                                    self._rep_ready[rid])
+                    cm = st + sv
+                    run_min = np.minimum.accumulate(cm)
+                    viol = np.flatnonzero(hk[1:] >= run_min[:-1])
+                    r = int(viol[0]) + 1 if viol.size else r0
+                    hs, rid = hs[:r], rid[:r]
+                    st, cm, svr = st[:r], cm[:r], sv[:r]
+                    pool.key[hs] = cm
+                    rids[i:i + r] = rid
+                    starts[i:i + r], comps[i:i + r] = st, cm
+                    svcs[i:i + r] = svr
+                    self._busy_acc.add_batch(st, cm)
+                    # per-event deadline rule on the committed prefix
+                    nominal = (cfg.prefill_s
+                               + ntok[i:i + r] / cfg.decode_tok_s)
+                    for j in np.flatnonzero(
+                            cm - ts[:r] > cfg.deadline_factor * nominal):
+                        newc = self._vec_redispatch_req(
+                            int(rid[j]), float(ts[j]), float(nominal[j]))
+                        if newc is not None:
+                            comps[i + j] = newc
+                            redis[i + j] = True
+                    i += r
+                    continue
             # fallback: exact per-event selection (min-key slot; overload /
             # spin-up), deadline re-dispatch rule applied per request
             s = pool.select(t0)

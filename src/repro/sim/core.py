@@ -754,8 +754,16 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
     creation order) — one numpy round instead of ``k`` Python dispatches.
     A slot idle at the chunk head stays idle until assigned, so every
     chunk task starts at its own arrival time, exactly as per-event
-    dispatch; when no slot is idle the round falls back to exact
-    single-task selection (min-key busy server, then pending).  With
+    dispatch; when no slot is idle a vectorised *busy round* assigns the
+    next r arrivals to the r earliest busy-slot horizons (sorted by
+    (key, slot) — the per-event min-key/first-index pick) in one numpy
+    pass: the round is capped before any slot could go idle or any
+    pending server could become ready (``searchsorted`` against the
+    earliest horizon), and committed only over the prefix where each
+    next horizon strictly precedes every earlier completion in the round
+    (otherwise the per-event oracle would reuse a just-committed slot —
+    those tasks fall back to exact single-task selection, reusing the
+    already-drawn service times so the RNG stream stays aligned).  With
     homogeneous server speeds the resulting (start, service, completion)
     sequence is *identical* to one-at-a-time dispatch for a fixed pool
     (tests/test_fleet_scale.py property-checks this, overload included).
@@ -792,6 +800,56 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
             svcs[i:i + k] = sv
             i += k
             continue
+        # ---- vectorised busy round: no idle slot at the chunk head ----
+        live = pool.live[:pool.n]
+        key = pool.key[:pool.n]
+        ready = pool.ready[:pool.n]
+        busy = np.flatnonzero(live & (ready <= t0))
+        if busy.size > 1:
+            # the round is exact only while no unassigned slot can go
+            # idle (t < min busy horizon) and no pending server can come
+            # up (t < min pending ready)
+            t_lim = key[busy].min()
+            pend = ready[live & (ready > t0)]
+            if pend.size:
+                t_lim = min(t_lim, pend.min())
+            r0 = min(int(np.searchsorted(times[i:], t_lim, side="left")),
+                     busy.size)
+            if r0 > 1:
+                order = np.argsort(key[busy], kind="stable")[:r0]
+                hs = busy[order]               # (key, slot)-sorted horizons
+                hk = key[hs]
+                ts = times[i:i + r0]
+                # one batch draw for the whole round, task-index order —
+                # numpy Generator batch draws equal scalar draws, so the
+                # stream matches per-event dispatch
+                sv = np.asarray(service_fn(hs, i, i + r0), np.float64)
+                st = np.maximum(ts, hk)
+                cm = st + sv
+                run_min = np.minimum.accumulate(cm)
+                # valid prefix: the per-event oracle assigns task j to
+                # h[j] iff h[j]'s horizon strictly precedes every earlier
+                # completion of the round (else it reuses a committed
+                # slot, or takes it as idle)
+                viol = np.flatnonzero(hk[1:] >= run_min[:-1])
+                r = int(viol[0]) + 1 if viol.size else r0
+                pool.key[hs[:r]] = cm[:r]
+                slots[i:i + r] = hs[:r]
+                starts[i:i + r], comps[i:i + r] = st[:r], cm[:r]
+                svcs[i:i + r] = sv[:r]
+                i += r
+                # tail: the remaining drawn tasks, exact per-event
+                # selection with their already-drawn service times
+                for j in range(r, r0):
+                    tj = float(times[i])
+                    s = pool.select(tj)        # busy nonempty -> s >= 0
+                    stj = max(tj, float(pool.key[s]), float(pool.ready[s]))
+                    svj = float(sv[j])
+                    pool.key[s] = stj + svj
+                    slots[i], starts[i] = s, stj
+                    comps[i], svcs[i] = stj + svj, svj
+                    i += 1
+                continue
         s = pool.select(t0)
         if s < 0 and on_cold is not None:
             s = on_cold(t0)

@@ -75,3 +75,24 @@ if importlib.util.find_spec("hypothesis") is None:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def forced_devices_runner():
+    """Run a python source under 8 forced host devices, in a subprocess
+    (this process must keep seeing 1 device — jax pins its device count
+    at first backend init, see the NOTE above).  Returns stdout; asserts
+    a zero exit."""
+    import subprocess
+
+    from repro.core.device_plane import force_host_devices_env
+
+    def run(source: str, timeout: float = 600.0) -> str:
+        env = force_host_devices_env(8)
+        env["PYTHONPATH"] = "src"
+        r = subprocess.run([sys.executable, "-c", source],
+                           capture_output=True, text=True,
+                           timeout=timeout, env=env)
+        assert r.returncode == 0, r.stderr[-3000:]
+        return r.stdout
+    return run

@@ -1,0 +1,248 @@
+"""Device-mesh control plane (DESIGN.md §9): the ``DevicePlaneEngine``
+behind ``ShardedControlPlane(device_mesh=...)``.
+
+In-process tests run on the single default CPU device (a 1-device mesh is
+still the device-resident path); the cross-device-count bitwise-invariance
+property needs real multiple devices, so it runs in a subprocess under
+``--xla_force_host_platform_device_count=8`` via the session fixture."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (PPAConfig, ShardedControlPlane, Snapshot,
+                        TargetSpec, ThresholdPolicy)
+from repro.core.forecaster import LSTMForecaster, Scaler
+from repro.core.metrics import N_METRICS
+
+Z, W, H, S = 24, 2, 8, 4
+
+
+def _fab_targets(Z=Z, window=W, hidden=H, seed=3):
+    """Fabricated fitted per-target LSTMs (shared params, per-target
+    scaler stats) — deterministic and fit-free, like the bench lane."""
+    base = LSTMForecaster(window=window, hidden=hidden, seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    means = rng.uniform(50.0, 300.0, (Z, N_METRICS))
+    stds = 0.1 * means + 1.0
+    out = []
+    for i in range(Z):
+        m = LSTMForecaster.__new__(LSTMForecaster)
+        m.__dict__.update(base.__dict__)
+        sc = Scaler()
+        sc.mean, sc.std, sc.fitted = means[i], stds[i], True
+        m.scaler = sc
+        m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        out.append(TargetSpec(f"t{i}", ThresholdPolicy(100.0, 1), model=m))
+    return out
+
+
+def _rows_seq(n=6, seed=11, z=Z):
+    rng = np.random.default_rng(seed)
+    return [rng.uniform(50.0, 300.0, (z, N_METRICS)) for _ in range(n)]
+
+
+def _drive(plane, rows_seq, staged=False):
+    """Fixed tick script; returns (replicas, key_metric, raw_means) per
+    tick for every target in plane order."""
+    out = []
+    t = 0.0
+    for rows in rows_seq:
+        t += 15.0
+        plane.observe_batch(t, rows)
+        if staged:
+            plane.begin_tick(t, 32, 2)
+            res = plane.finish_tick()
+        else:
+            res = plane.control_step(t, 32, 2)
+        names = list(res)
+        out.append((
+            np.array([res[n].replicas for n in names], np.int64),
+            np.array([res[n].key_metric for n in names]),
+            [res[n].raw_prediction for n in names],
+        ))
+    plane.shutdown()
+    return out
+
+
+def test_device_plane_matches_host_plane():
+    """1-device mesh vs the host plane: identical decisions, predictions
+    allclose (the engine computes f32 end-to-end, the host path f64)."""
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    rows = _rows_seq()
+    host = _drive(ShardedControlPlane(cfg, _fab_targets(), n_shards=S,
+                                      coalesce_dispatch=False), rows)
+    dev = _drive(ShardedControlPlane(cfg, _fab_targets(), n_shards=S,
+                                     coalesce_dispatch=False,
+                                     device_mesh=1), rows)
+    for (hr, hk, hm), (dr, dk, dm) in zip(host, dev):
+        np.testing.assert_array_equal(hr, dr)
+        np.testing.assert_allclose(hk, dk, rtol=1e-4, atol=1e-3)
+        for a, b in zip(hm, dm):
+            assert (a is None) == (b is None)
+            if a is not None:
+                np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3)
+
+
+def test_device_plane_scalar_observe_matches_batch():
+    """The scalar ``observe`` API (per-row device push) is bitwise equal
+    to the one-shot ``observe_batch`` ring shift."""
+    cfg = PPAConfig(threshold=100.0)
+    rows = _rows_seq(4)
+
+    def scalar_drive():
+        plane = ShardedControlPlane(cfg, _fab_targets(), n_shards=S,
+                                    coalesce_dispatch=False, device_mesh=1)
+        out = []
+        t = 0.0
+        for r in rows:
+            t += 15.0
+            for i, n in enumerate(plane.target_names):
+                plane.observe(n, Snapshot(t, r[i]))
+            res = plane.control_step(t, 32, 2)
+            out.append(np.array([res[n].replicas for n in res], np.int64))
+        plane.shutdown()
+        return out
+
+    batch = _drive(ShardedControlPlane(cfg, _fab_targets(), n_shards=S,
+                                       coalesce_dispatch=False,
+                                       device_mesh=1), rows)
+    for got, (want, _, _) in zip(scalar_drive(), batch):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_device_plane_rejects_unstackable():
+    """The device path only takes the homogeneous per-target stacked-LSTM
+    shape: shared-model planes and scalar-only policies raise."""
+    cfg = PPAConfig(threshold=100.0)
+    shared = LSTMForecaster(window=W, hidden=H)
+    with pytest.raises(ValueError, match="per-target"):
+        ShardedControlPlane(
+            cfg, [TargetSpec(f"t{i}", ThresholdPolicy(100.0, 1))
+                  for i in range(4)],
+            model=shared, n_shards=2, device_mesh=1)
+
+    class Opaque:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __call__(self, key, state=None):
+            return self._inner(key, state)
+
+    specs = _fab_targets(8)
+    specs = [TargetSpec(sp.name, Opaque(sp.policy), model=sp.model)
+             for sp in specs]
+    with pytest.raises(ValueError, match="columnar"):
+        ShardedControlPlane(cfg, specs, n_shards=2, device_mesh=1)
+
+
+def test_device_plane_refit_epoch_invalidation():
+    """Stacked weights re-upload iff the plane's refit epoch moves:
+    mutated params are invisible until the commit bumps the epoch."""
+    cfg = PPAConfig(threshold=100.0)
+    rows = _rows_seq(5)
+    plane = ShardedControlPlane(cfg, _fab_targets(), n_shards=S,
+                                coalesce_dispatch=False, device_mesh=1)
+    t = 0.0
+    for r in rows[:3]:
+        t += 15.0
+        plane.observe_batch(t, r)
+        res = plane.control_step(t, 32, 2)
+    before = np.array([res[n].key_metric for n in res])
+
+    # mutate every model's output head; same epoch -> device cache holds
+    for m in plane._dev_models:
+        m.params = dict(m.params)
+        m.params["bo"] = m.params["bo"] + 1000.0
+    t += 15.0
+    plane.observe_batch(t, rows[3])
+    res = plane.control_step(t, 32, 2)
+    held = np.array([res[n].key_metric for n in res])
+    assert np.all(np.isfinite(held))
+    assert float(np.max(np.abs(held - before))) < 500.0  # no +1000 jump
+
+    # commit: epoch bump -> refresh() restacks and the mutation lands
+    plane._models_epoch += 1
+    t += 15.0
+    plane.observe_batch(t, rows[4])
+    res = plane.control_step(t, 32, 2)
+    applied = np.array([res[n].key_metric for n in res])
+    assert np.all(applied > before + 100.0)
+    plane.shutdown()
+
+
+_CHILD = r"""
+import hashlib, json
+import numpy as np
+from repro.core import PPAConfig, ShardedControlPlane
+from repro.core.forecaster import LSTMForecaster, Scaler
+from repro.core.metrics import N_METRICS
+
+Z, W, H, S = 48, 2, 8, 4
+
+def fab_targets():
+    from repro.core import TargetSpec, ThresholdPolicy
+    base = LSTMForecaster(window=W, hidden=H, seed=3)
+    rng = np.random.default_rng(103)
+    means = rng.uniform(50.0, 300.0, (Z, N_METRICS))
+    stds = 0.1 * means + 1.0
+    out = []
+    for i in range(Z):
+        m = LSTMForecaster.__new__(LSTMForecaster)
+        m.__dict__.update(base.__dict__)
+        sc = Scaler(); sc.mean, sc.std, sc.fitted = means[i], stds[i], True
+        m.scaler = sc; m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        out.append(TargetSpec(f"t{i}", ThresholdPolicy(100.0, 1), model=m))
+    return out
+
+rng = np.random.default_rng(11)
+rows_seq = [rng.uniform(50.0, 300.0, (Z, N_METRICS)) for _ in range(6)]
+
+def digest(D, coalesce, staged, explicit):
+    assignment = ({f"t{i}": i * S // Z for i in range(Z)}
+                  if explicit else None)
+    plane = ShardedControlPlane(
+        PPAConfig(threshold=100.0, stabilization_s=60.0), fab_targets(),
+        n_shards=S, assignment=assignment, async_ticks=staged,
+        coalesce_dispatch=coalesce, device_mesh=D)
+    h = hashlib.sha256()
+    t = 0.0
+    for rows in rows_seq:
+        t += 15.0
+        plane.observe_batch(t, rows)
+        if staged:
+            plane.begin_tick(t, 32, 2)
+            res = plane.finish_tick()
+        else:
+            res = plane.control_step(t, 32, 2)
+        for n in res:
+            r = res[n]
+            h.update(np.int64(r.replicas).tobytes())
+            h.update(np.float64(r.key_metric).tobytes())
+            if r.raw_prediction is not None:
+                h.update(np.asarray(r.raw_prediction).tobytes())
+    plane.shutdown()
+    return h.hexdigest()
+
+cells = {}
+for D in (1, 2, 8):
+    cells[f"D{D}-shardmap-sync-block"] = digest(D, False, False, True)
+    cells[f"D{D}-gang-sync-crc"] = digest(D, True, False, False)
+    cells[f"D{D}-shardmap-async-crc"] = digest(D, False, True, False)
+print("DIGESTS=" + json.dumps(cells))
+"""
+
+
+def test_device_count_bitwise_invariance(forced_devices_runner):
+    """Tick results are bitwise identical across D in {1, 2, 8} devices,
+    either dispatch mode (shard_map / gang GSPMD), sync and async staged
+    ticks, any shard assignment: every per-target computation is
+    row-independent, so the mesh partition cannot change numerics."""
+    out = forced_devices_runner(_CHILD)
+    line = next(ln for ln in out.splitlines() if ln.startswith("DIGESTS="))
+    cells = json.loads(line[len("DIGESTS="):])
+    assert len(cells) == 9
+    vals = set(cells.values())
+    assert len(vals) == 1, f"digest mismatch across cells: {cells}"

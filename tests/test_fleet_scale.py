@@ -198,6 +198,81 @@ def test_array_pool_selection_priority():
     assert pool.select(-1.0) == c
 
 
+def _drain_oracle(pool, times, service_fn, cold_timeout_s=60.0):
+    """One-at-a-time dispatch with the exact per-event semantics the
+    batched ``drain_window`` must reproduce (idle first-index, then
+    min-key busy, then pending; one service draw per task in order)."""
+    n = len(times)
+    slots = np.empty(n, np.int64)
+    starts = np.full(n, np.nan)
+    comps = np.empty(n, np.float64)
+    svcs = np.full(n, np.nan)
+    for i in range(n):
+        t = float(times[i])
+        idle = pool.idle_slots(t, 1)
+        s = int(idle[0]) if len(idle) else pool.select(t)
+        if s < 0:
+            slots[i], comps[i] = -1, t + cold_timeout_s
+            continue
+        st = max(t, float(pool.key[s]), float(pool.ready[s]))
+        sv = float(service_fn(np.asarray([s]), i, i + 1)[0])
+        pool.key[s] = st + sv
+        slots[i], starts[i] = s, st
+        comps[i], svcs[i] = st + sv, sv
+    return slots, starts, comps, svcs
+
+
+def test_drain_window_busy_round_oracle_parity():
+    """The vectorised busy round (no idle slot, sustained overload,
+    pending spin-ups joining mid-chunk) keeps ``drain_window``'s contract
+    vs per-event dispatch: the (start, completion, service) sequence —
+    RNG stream included — is bitwise-identical.  Slot *labels* may
+    permute inside an idle chunk (the chunk assigns the slots idle at its
+    head, the oracle may reuse one freed mid-chunk), so slots are instead
+    checked for exact per-slot feasibility: every start is precisely
+    ``max(arrival, slot's previous completion, slot ready)``."""
+    from repro.sim.core import drain_window
+
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        P = int(rng.integers(2, 12))
+        n = 400
+        # bursty arrivals: tight clusters force long busy rounds
+        times = np.sort(rng.uniform(0, 60.0, n))
+        mean_svc = float(rng.uniform(2.0, 6.0))  # heavy overload
+
+        def build():
+            pool = ArrayServerPool()
+            pool.add_batch(P, key=0.0, ready_at=0.0)
+            # pending servers that come up inside the chunk
+            for j in range(int(rng.integers(0, 3))):
+                pool.add(0.0, key=10.0 + 7 * j, ready_at=10.0 + 7 * j)
+            return pool
+
+        state = rng.bit_generator.state
+        r1 = np.random.default_rng(99 + seed)
+        svc1 = lambda s, i0, i1: r1.exponential(mean_svc, i1 - i0)  # noqa: E731
+        got = drain_window(build(), times, svc1)
+        rng.bit_generator.state = state
+        r2 = np.random.default_rng(99 + seed)
+        svc2 = lambda s, i0, i1: r2.exponential(mean_svc, i1 - i0)  # noqa: E731
+        want = _drain_oracle(build(), times, svc2)
+        for g, w in zip(got[1:], want[1:]):   # starts, comps, services
+            np.testing.assert_array_equal(g, w)
+        # slot assignment feasibility: replay each slot's task sequence
+        rng.bit_generator.state = state
+        ref = build()
+        slots, starts, comps, _ = got
+        horizon = ref.key[:ref.n].copy()
+        for i in range(n):
+            s = int(slots[i])
+            assert 0 <= s < ref.n
+            exp = max(float(times[i]), float(horizon[s]),
+                      float(ref.ready[s]))
+            assert starts[i] == exp
+            horizon[s] = comps[i]
+
+
 # ----------------------------------------------------- WindowedArrivals ----
 def test_windowed_arrivals_boundaries_and_conversion():
     tasks = [(0.0, "sort", "a"), (7.5, "eigen", "b"), (15.0, "sort", "a"),

@@ -31,7 +31,17 @@ Four claims are measured (the PRs' acceptance bars):
    count=8`` (the CI trick — no accelerator needed).  D=1 is the
    single-device plane (host per-shard path, the deployment a mesh
    replaces); D>=2 run the ``shard_map`` engine with device-resident
-   ring/weights/scalers.  Bar: D=8 >= 2x D=1 ticks/s at Z=16384.
+   ring/weights/scalers.  Bar: D=8 >= 2x D=1 ticks/s at Z=16384.  The
+   lane also times a guarded D=8 plane whose band can never be left
+   (``8g``): the quiet guardrail stage must add < 10 % tick overhead at
+   Z=16384 (DESIGN.md §10).
+8. **Guardrail A/B** — a flash-crowd closed loop (docs/guardrail.md):
+   one serving fleet driven by a sharded plane whose forecast is
+   anchored wrong on purpose (over-provisioned in steady state, blind to
+   the spike).  Guard off vs on, identical arrivals: the hybrid plane
+   must cut SLA-violation seconds (window p95 over target) while
+   spending no more pod-hours — the reactive up path catches the crowd,
+   the stabilised down path pays for it in steady state.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_control_plane [--quick]
          [--check-baseline benchmarks/baselines/control_plane_baseline.json]
@@ -522,6 +532,103 @@ def bench_forecast_device(zs=(64, 256, 1024), window: int = 4,
     return out
 
 
+def bench_guardrail_ab(t_end: float = 1200.0, spike=(600.0, 720.0),
+                       base_rate: float = 6.0, spike_rate: float = 40.0,
+                       target_p95: float = 6.0, anchor: float = 2500.0,
+                       threshold: float = 500.0, seed: int = 0):
+    """Flash-crowd A/B (DESIGN.md §10): the same batch ServingFleet and
+    arrival trace, scaled by the same sharded plane with the guardrail
+    off vs on.  The forecast is a fabricated LSTM whose scaler anchors
+    the key-metric prediction at ``anchor`` (~5 replicas at the default
+    threshold): comfortably above the steady-state load (~3 replicas),
+    hopelessly below the flash crowd (~16+) — the failure mode the
+    reactive stage exists for.  Guard off, the plane over-provisions for
+    20 minutes and still melts during the 2-minute spike; guard on, the
+    down path trims steady state after ``down_ticks`` overshoots and the
+    up path tracks realised load within one tick.
+
+    Reported per arm: SLA-violation seconds (15 s control windows whose
+    booked-response p95 — metric slot 1, the latency feed — exceeds
+    ``target_p95``) and pod-hours (live replicas x window).  Bars:
+    violation_s(on) < violation_s(off) at pod_hours(on) <= (off)."""
+    from repro.core import (GuardrailConfig, PPAConfig, ShardedControlPlane,
+                            TargetSpec, ThresholdPolicy)
+    from repro.core.forecaster import LSTMForecaster, Scaler
+    from repro.core.metrics import N_METRICS
+    from repro.serving.fleet import FleetConfig, ServingFleet
+    from repro.workloads import poisson_arrivals
+
+    w = 15.0
+    n_win = int(np.ceil(t_end / w))
+    edges = np.arange(n_win) * w
+    rates = np.where((edges >= spike[0]) & (edges < spike[1]),
+                     spike_rate, base_rate)
+    arr = poisson_arrivals(rates, t_end, w, seed=seed)
+    rng = np.random.default_rng(seed)
+    ntoks = rng.integers(32, 64, len(arr.times)).astype(np.float64)
+
+    def spec():
+        m = LSTMForecaster.__new__(LSTMForecaster)
+        m.__dict__.update(
+            LSTMForecaster(window=4, hidden=16, seed=2).__dict__)
+        sc = Scaler()
+        sc.mean = np.full(N_METRICS, 100.0)
+        sc.mean[0] = anchor
+        sc.std, sc.fitted = 0.02 * sc.mean + 1.0, True
+        m.scaler = sc
+        m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        return TargetSpec("svc", ThresholdPolicy(threshold, 2), model=m)
+
+    def drive(guard):
+        cfg = PPAConfig(threshold=threshold, stabilization_s=60.0,
+                        guard=guard)
+        plane = ShardedControlPlane(cfg, [spec()], n_shards=1)
+        fleet = ServingFleet(
+            FleetConfig(total_chips=1024, chips_per_replica=16,
+                        seed=seed, deadline_factor=1e9), batch=True)
+        fleet.scale_to(2, 0.0)
+        fleet.make_ready_now(0.0)
+        lo, violation_s, pod_s = 0, 0.0, 0.0
+        for tick in np.arange(w, t_end + w / 2, w):
+            fleet._apply_events(tick)
+            hi = int(np.searchsorted(arr.times, tick, side="right"))
+            fleet.dispatch_window(arr.times[lo:hi], ntoks[lo:hi])
+            fleet.completed_log.seal_window()
+            lo = hi
+            snap = fleet.sample(tick)
+            cur = len(fleet.live_replicas(tick))
+            pod_s += cur * w                 # capacity over the window
+            if snap.values[1] > target_p95:  # slot 1: window p95 feed
+                violation_s += w
+            plane.observe_batch(tick, snap.values[None, :])
+            res = plane.control_step(tick, 64, cur)
+            fleet.scale_to(max(res["svc"].replicas, 2), tick)
+        stats = plane.guard_stats() if guard is not None else None
+        plane.shutdown()
+        return violation_s, pod_s / 3600.0, stats
+
+    v_off, ph_off, _ = drive(None)
+    v_on, ph_on, stats = drive(GuardrailConfig(band=0.3, headroom=1.15,
+                                               down_ticks=3))
+    out = {
+        "t_end_s": t_end, "spike_s": list(spike),
+        "base_rate": base_rate, "spike_rate": spike_rate,
+        "target_p95_s": target_p95,
+        "violation_s_off": v_off, "violation_s_on": v_on,
+        "pod_hours_off": ph_off, "pod_hours_on": ph_on,
+        "up_overrides": stats["up_overrides"],
+        "down_overrides": stats["down_overrides"],
+    }
+    csv_row("guardrail_ab_violation_s", v_on,
+            f"off={v_off:.0f}s pods on/off="
+            f"{ph_on:.2f}/{ph_off:.2f} pod-h "
+            f"overrides up={stats['up_overrides']} "
+            f"down={stats['down_overrides']} "
+            f"(bar: on<off at <= pod-hours)")
+    return out
+
+
 def _fab_targets(Z: int, window: int, hidden: int, seed: int = 0):
     """Z fabricated fitted per-target LSTMs without Z fits: one base model
     supplies params (shared ref — the lane measures tick plumbing, not
@@ -557,10 +664,14 @@ def _device_lane_measure(Z: int, window: int, hidden: int, n_shards: int,
     D in ``ds``, all on identical fabricated targets and metric rows."""
     import jax
 
-    from repro.core import PPAConfig, ShardedControlPlane
+    from repro.core import GuardrailConfig, PPAConfig, ShardedControlPlane
     from repro.core.metrics import N_METRICS
 
     cfg = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    # quiet guard: armed every tick (arm + band compare on every shard)
+    # but the band can never be left — measures the stage's fixed cost
+    gcfg = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                     guard=GuardrailConfig(band=1e18))
     rng = np.random.default_rng(1)
     rows_seq = [rng.uniform(50.0, 400.0, (Z, N_METRICS))
                 for _ in range(4)]
@@ -568,9 +679,9 @@ def _device_lane_measure(Z: int, window: int, hidden: int, n_shards: int,
     # and matches the mesh's contiguous row blocks
     assignment = {f"z{i}": i * n_shards // Z for i in range(Z)}
 
-    def build(device_mesh):
+    def build(device_mesh, plane_cfg=cfg):
         plane = ShardedControlPlane(
-            cfg, _fab_targets(Z, window, hidden), n_shards=n_shards,
+            plane_cfg, _fab_targets(Z, window, hidden), n_shards=n_shards,
             assignment=assignment, coalesce_dispatch=False,
             device_mesh=device_mesh)
         for k in range(window + 1):      # fill rings to candidacy
@@ -583,6 +694,8 @@ def _device_lane_measure(Z: int, window: int, hidden: int, n_shards: int,
     planes = {"1": build(None)}
     for d in ds:
         planes[str(d)] = build(int(d))
+    d_max = str(max(ds))
+    planes[d_max + "g"] = build(max(ds), gcfg)
     t = 15.0 * (window + 1)
     samples = {k: [] for k in planes}
     for j in range(warmup + ticks):
@@ -598,12 +711,12 @@ def _device_lane_measure(Z: int, window: int, hidden: int, n_shards: int,
     tick_ms = {k: float(np.mean(v[warmup:])) * 1e3
                for k, v in samples.items()}
     ticks_per_s = {k: 1e3 / v for k, v in tick_ms.items()}
-    d_max = str(max(ds))
     return {
         "Z": Z, "window": window, "hidden": hidden, "n_shards": n_shards,
         "n_devices_visible": len(jax.devices()),
         "tick_ms": tick_ms, "ticks_per_s": ticks_per_s,
         "speedup_d8_vs_d1": ticks_per_s[d_max] / ticks_per_s["1"],
+        "guard_overhead_d8": tick_ms[d_max + "g"] / tick_ms[d_max] - 1.0,
     }
 
 
@@ -650,7 +763,9 @@ def bench_device_scaling(zs=(4096, 16384, 65536), window: int = 1,
                 f"D2={tm['2']:.2f}ms D4={tm['4']:.2f}ms "
                 f"D8={tm['8']:.2f}ms = "
                 f"{point['speedup_d8_vs_d1']:.2f}x "
-                f"(bar at Z>=16384: >=2x)")
+                f"(bar at Z>=16384: >=2x); quiet guard "
+                f"D8={tm['8g']:.2f}ms "
+                f"(+{point['guard_overhead_d8'] * 100:.1f}%, bar: <10%)")
     return out
 
 
@@ -697,6 +812,24 @@ def check_baseline(results: dict, path: Path) -> list[str]:
                 f"device_scaling Z={z}: D=8 only "
                 f"{point['speedup_d8_vs_d1']:.2f}x the single-device "
                 f"plane (bar: >={rref}x)")
+        oref = base.get("device_guard_overhead_d8", {}).get(z)
+        if oref is not None and point["guard_overhead_d8"] > oref:
+            errors.append(
+                f"device_scaling Z={z}: quiet guardrail adds "
+                f"{point['guard_overhead_d8'] * 100:.1f}% to the D=8 "
+                f"tick (bar: <={oref * 100:.0f}%)")
+    g = results.get("guardrail_ab")
+    if g is not None:
+        vref = base.get("guardrail_violation_s_on")
+        if vref is not None and g["violation_s_on"] > 2.0 * max(vref, 15.0):
+            errors.append(
+                f"guardrail_ab: {g['violation_s_on']:.0f}s SLA violation "
+                f"with the guard on > 2x baseline {vref:.0f}s")
+        pref = base.get("guardrail_pod_hours_on")
+        if pref is not None and g["pod_hours_on"] > 1.5 * pref:
+            errors.append(
+                f"guardrail_ab: {g['pod_hours_on']:.2f} pod-hours with "
+                f"the guard on > 1.5x baseline {pref:.2f}")
     return errors
 
 
@@ -718,10 +851,15 @@ def run(quick: bool = False, baseline: Path | None = None):
                                      iters=5 if quick else 20)
     device = bench_device_scaling(zs=(4096, 16384) if quick
                                   else (4096, 16384, 65536))
+    # one config for quick and full: the closed loop is seconds of wall
+    # time, and the A/B bars need the full steady-state tail (the down
+    # path's pod-hour savings pay for the spike's reactive capacity)
+    guard = bench_guardrail_ab()
     payload = {"control_latency": lat, "sim_core_parity": par,
                "shard_sweep": sweep, "fidelity_point": fidelity,
                "refit_overlap": refit, "policy_dispatch": policy,
-               "forecast_device": forecast, "device_scaling": device}
+               "forecast_device": forecast, "device_scaling": device,
+               "guardrail_ab": guard}
     save_bench("control_plane", payload)
     assert lat["speedup"] >= 5.0, f"batched speedup {lat['speedup']:.1f}x < 5x"
     assert par["parity_ok"], f"sim-core parity broken: {par}"
@@ -741,6 +879,17 @@ def run(quick: bool = False, baseline: Path | None = None):
                 (f"device_scaling Z={p['Z']}: mesh D=8 only "
                  f"{p['speedup_d8_vs_d1']:.2f}x the single-device plane "
                  f"(bar: >=2x)")
+            assert p["guard_overhead_d8"] < 0.10, \
+                (f"device_scaling Z={p['Z']}: quiet guardrail adds "
+                 f"{p['guard_overhead_d8'] * 100:.1f}% to the D=8 tick "
+                 f"(bar: <10%)")
+    assert guard["violation_s_on"] < guard["violation_s_off"], \
+        (f"guardrail A/B: guard on did not cut SLA violation "
+         f"({guard['violation_s_on']:.0f}s vs "
+         f"{guard['violation_s_off']:.0f}s)")
+    assert guard["pod_hours_on"] <= guard["pod_hours_off"], \
+        (f"guardrail A/B: guard on spent more pod-hours "
+         f"({guard['pod_hours_on']:.2f} vs {guard['pod_hours_off']:.2f})")
     if not quick:
         for p in sweep:
             if p["Z"] >= 256:

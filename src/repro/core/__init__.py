@@ -7,6 +7,7 @@ from repro.core.forecaster import (Forecaster, LSTMForecaster,
                                    ARMAForecaster, ARIMAD1Forecaster,
                                    EnsembleForecaster, make_forecaster)
 from repro.core.policies import (ThresholdPolicy, TargetUtilizationPolicy,
+                                 SLAPolicy, GuardrailConfig,
                                  make_policy, policy_vectorizable)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.updater import Updater, UpdatePolicy
@@ -14,6 +15,7 @@ from repro.core.hpa import HPA
 from repro.core.ppa import PPA, PPAConfig, ScaleDownStabilizer
 from repro.core.controller import FleetController, TargetSpec
 from repro.core.control_plane import (ShardedControlPlane, Tick, TickResult,
-                                      shard_assignment, stage_collect,
-                                      stage_formulate, stage_forecast,
-                                      stage_evaluate, stage_actuate)
+                                      Guardrail, shard_assignment,
+                                      stage_collect, stage_formulate,
+                                      stage_forecast, stage_evaluate,
+                                      stage_guard, stage_actuate)

@@ -5,11 +5,24 @@ itself stayed a monolithic synchronous function and model refits stalled
 the whole loop — capping the control plane near ~10^3 targets.  This module
 splits the tick into explicit stages
 
-    collect -> formulate -> batched forecast -> evaluate -> actuate
+    collect -> formulate -> batched forecast -> evaluate -> guard -> actuate
 
 shared by ``FleetController`` (which now composes them, core/controller.py)
 and the ``ShardedControlPlane`` below, which takes the plane past 10^3
-targets:
+targets.  The ``guard`` stage is the hybrid reactive-proactive layer
+(DESIGN.md §10, docs/guardrail.md): armed with ``PPAConfig.guard``
+(a :class:`~repro.core.policies.GuardrailConfig`), each tick compares the
+realised key metric against the forecast the *previous* decision acted on
+and, when the relative error leaves the configured band, overrides the
+proactive decision with a threshold-style reactive correction — a
+scale-up fast path for forecast undershoot (flash crowds) and a
+consecutive-tick-stabilised trim for sustained overshoot.  The scalar
+:class:`Guardrail` below is the semantics oracle; ``_VecShard`` carries
+the elementwise-identical vectorised form so guarded planes stay on the
+columnar shard / device-mesh path (guard state is per-shard arrays that
+ride the shard views).
+
+The sharded plane scales the staged tick past 10^3 targets with:
 
 * **sharding** — targets are partitioned across S controller shards by a
   deterministic crc32 hash (NOT Python's per-process-salted ``hash``) or an
@@ -145,6 +158,86 @@ def stage_evaluate(ctrl, tick: Tick) -> Tick:
                                            tick.cur_r[n], tick.max_r[n])
         st.decisions.append(res)
         tick.results[n] = res
+    return tick
+
+
+class Guardrail:
+    """Scalar reactive guardrail for ONE target — the semantics oracle the
+    vectorised shard form (``_VecShard._guard_apply``) is property-tested
+    against (tests/test_guardrail.py).
+
+    Per tick, ``apply`` compares the realised key metric against the
+    forecast the previous decision acted on (``prev_key``, armed by
+    ``arm``; NaN = previous tick was reactive / first tick → guard idle)
+    and overrides the proactive decision when the relative error leaves
+    ``cfg.band``:
+
+    * ``err > band`` (undershoot): immediate reactive scale-up —
+      ``min(max(proactive, policy(realised*headroom)), max_replicas)``;
+    * ``err < -band`` (overshoot): after ``cfg.down_ticks`` *consecutive*
+      overshooting ticks, reactive trim
+      ``min(proactive, policy(realised*headroom))``;
+    * in-band / idle: pass through (and reset the consecutive counter).
+
+    Corrections never enter the proactive ``ScaleDownStabilizer`` ring, so
+    a reactive trim cannot suppress later proactive scale-downs."""
+
+    def __init__(self, cfg, policy):
+        self.cfg = cfg
+        self.policy = policy
+        self.prev_key = float("nan")
+        self.down_ct = 0
+        self.up_fired = 0
+        self.down_fired = 0
+
+    def apply(self, realised: float, proactive: int, cur: int,
+              max_replicas: int) -> int:
+        """Return the guarded replica count for this tick."""
+        g = self.cfg
+        prev = self.prev_key
+        if not np.isfinite(prev):
+            self.down_ct = 0
+            return proactive
+        err = (realised - prev) / max(abs(prev), g.eps)
+        if err > g.band:
+            self.down_ct = 0
+            n_react = self.policy(realised * g.headroom, {"current": cur})
+            self.up_fired += 1
+            return min(max(proactive, int(n_react)), max_replicas)
+        if err < -g.band:
+            self.down_ct += 1
+            if self.down_ct >= g.down_ticks:
+                self.down_ct = 0
+                n_react = self.policy(realised * g.headroom,
+                                      {"current": cur})
+                self.down_fired += 1
+                return min(proactive, int(n_react))
+            return proactive
+        self.down_ct = 0
+        return proactive
+
+    def arm(self, key: float):
+        """Record the forecast this tick's decision acted on (NaN when the
+        decision was reactive — the next tick's guard then stays idle)."""
+        self.prev_key = float(key)
+
+
+def stage_guard(ctrl, tick: Tick) -> Tick:
+    """Reactive guardrail stage (between evaluate and actuate): override
+    each guarded target's decision when realised load left the error band
+    of the forecast the previous decision acted on, then arm the guard
+    with this tick's forecast.  A controller without per-target guards
+    (``cfg.guard is None``) passes through untouched."""
+    k = ctrl.cfg.key_metric_idx
+    for n in tick.names:
+        g = getattr(ctrl.targets[n], "guard", None)
+        if g is None:
+            continue
+        res = tick.results[n]
+        realised = float(tick.recents[n][-1, k])
+        res.replicas = g.apply(realised, res.replicas, tick.cur_r[n],
+                               tick.max_r[n])
+        g.arm(res.key_metric if res.predicted else float("nan"))
     return tick
 
 
@@ -292,6 +385,14 @@ class _VecShard:
         self._stab_n = np.zeros((16, Zs), np.int64)
         self._stab_lo = 0
         self._stab_hi = 0
+        # reactive guardrail state (DESIGN.md §10): forecast each decision
+        # acted on (NaN = unarmed) + consecutive-overshoot counters; rides
+        # the shard views, so the device-mesh path guards for free
+        self._grd = getattr(cfg, "guard", None)
+        self._grd_prev = np.full(Zs, np.nan)
+        self._grd_down = np.zeros(Zs, np.int64)
+        self.guard_up = 0
+        self.guard_down = 0
         self._stack_cache: dict = {}
         # columnar tick records: (t, replicas, key, predicted, conf, max_r,
         # means | None, cand); EvalResults materialise lazily from these
@@ -447,10 +548,58 @@ class _VecShard:
         # is ONE reduction over the live span
         maxrec = self._stab_push(t, n)
         final = np.where(n < cur, np.minimum(maxrec, maxr), n)
+        if self._grd is not None:
+            final = self._guard_apply(final, current_key, cur, maxr,
+                                      key, predicted)
         rec = (t, final, key, predicted, conf, maxr,
                means if cand.any() else None, cand)
         self.ticks.append(rec)
         return rec
+
+    def _guard_apply(self, final, realised, cur, maxr, key, predicted
+                     ) -> np.ndarray:
+        """Vectorised :class:`Guardrail` — elementwise identical to the
+        scalar oracle (tests/test_guardrail.py).  When every target is
+        in-band (the steady state) this costs a handful of (Zs,) compares
+        and NO policy evaluation — the <10% quiet-tick overhead bar of the
+        ``guardrail_overhead`` bench lane."""
+        g = self._grd
+        armed = np.isfinite(self._grd_prev)
+        if armed.any():
+            with np.errstate(invalid="ignore"):
+                err = ((realised - self._grd_prev)
+                       / np.maximum(np.abs(self._grd_prev), g.eps))
+            up = armed & (err > g.band)
+            low = armed & (err < -g.band)
+            # consecutive-overshoot counter: the reactive analogue of the
+            # proactive path's ScaleDownStabilizer
+            self._grd_down = np.where(low, self._grd_down + 1, 0)
+            down = low & (self._grd_down >= g.down_ticks)
+            fire = up | down
+            if fire.any():
+                n_react = self._react_eval(realised * g.headroom, cur)
+                up_n = np.minimum(np.maximum(final, n_react), maxr)
+                down_n = np.minimum(final, n_react)
+                final = np.where(up, up_n, np.where(down, down_n, final))
+                self.guard_up += int(up.sum())
+                self.guard_down += int(down.sum())
+                self._grd_down[down] = 0
+        else:
+            self._grd_down.fill(0)
+        self._grd_prev = np.where(predicted, key, np.nan)
+        return final
+
+    def _react_eval(self, metric: np.ndarray, cur: np.ndarray) -> np.ndarray:
+        """Reactive policy re-evaluation on the realised metric, through
+        the same per-type dispatch table as the proactive path (only runs
+        on ticks where the guard fires)."""
+        if len(self._pol_groups) == 1:
+            cls, _, stacked = self._pol_groups[0]
+            return cls.evaluate_batch(stacked, metric, cur)
+        n = np.empty(len(self.names), np.int64)
+        for cls, idx, stacked in self._pol_groups:
+            n[idx] = cls.evaluate_batch(stacked, metric[idx], cur[idx])
+        return n
 
     def _stab_push(self, t: float, n: np.ndarray) -> np.ndarray:
         """Append this tick's clamped desired counts to the stabilizer
@@ -513,6 +662,9 @@ class _VecShard:
         self._pred_cache[name] = (len(self.ticks), cache)
         return cache
 
+    def guard_counts(self) -> tuple[int, int]:
+        return self.guard_up, self.guard_down
+
     def target_models(self):
         return list(self.models) if self.models is not None else None
 
@@ -562,7 +714,14 @@ class _CtrlShard:
         tick.recents = state
         tick.preds = preds
         stage_evaluate(self.ctrl, tick)
+        stage_guard(self.ctrl, tick)
         return tick.results
+
+    def guard_counts(self) -> tuple[int, int]:
+        guards = [st.guard for st in self.ctrl.targets.values()
+                  if getattr(st, "guard", None) is not None]
+        return (sum(g.up_fired for g in guards),
+                sum(g.down_fired for g in guards))
 
     def result_for(self, name, rec) -> EvalResult:
         return rec[name]
@@ -741,31 +900,52 @@ class ShardedControlPlane:
     # ------------------------------------------------------------ access --
     @property
     def target_names(self) -> list[str]:
+        """All target names, in construction order."""
         return list(self._names)
 
     def min_replicas(self, name: str) -> int:
+        """The target's ``TargetSpec.min_replicas`` floor."""
         return self._min_r[name]
 
     def model_for(self, name: str):
+        """The forecaster serving ``name`` (the shared model, or the
+        target's own in per-target mode)."""
         if not self.per_target_models:
             return self.model
         models = self._shard_of[name].target_models()
         return models[self._shard_of[name].names.index(name)]
 
     def decisions(self, name: str) -> list[EvalResult]:
+        """Per-tick decision log for one target (post-guard finals)."""
         return self._shard_of[name].decisions(name)
 
     def predictions(self, name: str) -> list[tuple[float, np.ndarray]]:
+        """``(t, predicted_metrics)`` log for forecast-based ticks."""
         return self._shard_of[name].predictions(name)
 
     def prediction_mse(self, name, actual_series, actual_times,
                        metric_idx=None) -> float:
+        """Forecast MSE for one target against a realised series (the
+        paper's accuracy readout; defaults to the key metric)."""
         idx = self.cfg.key_metric_idx if metric_idx is None else metric_idx
         return prediction_mse(self.predictions(name), actual_series,
                               actual_times, idx)
 
+    def guard_stats(self) -> dict:
+        """Cumulative guardrail override counts across every shard:
+        ``{"up_overrides", "down_overrides"}`` (zeros when the plane runs
+        without a guard, i.e. ``cfg.guard is None``)."""
+        up = down = 0
+        for s in self.shards:
+            u, d = s.guard_counts()
+            up += u
+            down += d
+        return {"up_overrides": up, "down_overrides": down}
+
     # ----------------------------------------------------------- collect --
     def observe(self, name: str, snap: Snapshot):
+        """Collect one metric snapshot for one target (the scalar feed;
+        ``observe_batch`` is the columnar fast path)."""
         if self._engine is not None:
             i = self._pos[name]
             self._engine.push_row(i, snap.values)
@@ -1067,8 +1247,10 @@ class ShardedControlPlane:
 
     @property
     def refit_inflight(self) -> bool:
+        """True while a background batch refit has not yet committed."""
         return self._refit is not None
 
     def shutdown(self):
+        """Join the worker pool (pending refits/forecasts complete)."""
         if self._pool is not None:
             self._pool.shutdown(wait=True)

@@ -29,9 +29,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.control_plane import (Tick, as_replica_map, prediction_mse,
-                                      stage_actuate, stage_evaluate,
-                                      stage_forecast, stage_formulate,
+from repro.core.control_plane import (Guardrail, Tick, as_replica_map,
+                                      prediction_mse, stage_actuate,
+                                      stage_evaluate, stage_forecast,
+                                      stage_formulate, stage_guard,
                                       validate_targets)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import (Forecaster, LSTMForecaster,
@@ -59,6 +60,10 @@ class _TargetState:
         self.recent: list[np.ndarray] = []
         self.decisions: list[EvalResult] = []
         self.predictions: list[tuple[float, np.ndarray]] = []
+        # reactive guardrail (None when cfg.guard is unset — the default,
+        # purely proactive plane)
+        self.guard = (Guardrail(cfg.guard, spec.policy)
+                      if getattr(cfg, "guard", None) is not None else None)
 
 
 class FleetController:
@@ -99,6 +104,14 @@ class FleetController:
 
     def predictions(self, name: str) -> list[tuple[float, np.ndarray]]:
         return self.targets[name].predictions
+
+    def guard_stats(self) -> dict:
+        """Cumulative guardrail override counts across all targets (zeros
+        when ``cfg.guard`` is unset)."""
+        guards = [st.guard for st in self.targets.values()
+                  if st.guard is not None]
+        return {"up_overrides": sum(g.up_fired for g in guards),
+                "down_overrides": sum(g.down_fired for g in guards)}
 
     # -------------------------------------------------------- formulator --
     def observe(self, name: str, snap: Snapshot):
@@ -176,8 +189,8 @@ class FleetController:
                      actuator=None) -> dict[str, EvalResult]:
         """One batched tick, composed from the staged pipeline
         (core/control_plane.py): formulate -> batched forecast -> evaluate
-        -> actuate.  max_replicas / current_replicas are {name: int} (or a
-        single int broadcast to all targets)."""
+        -> guard -> actuate.  max_replicas / current_replicas are
+        {name: int} (or a single int broadcast to all targets)."""
         names = self.target_names
         tick = Tick(t=t, names=names,
                     max_r=as_replica_map(max_replicas, names),
@@ -185,6 +198,7 @@ class FleetController:
         stage_formulate(self, tick)
         stage_forecast(self, tick)
         stage_evaluate(self, tick)
+        stage_guard(self, tick)
         return stage_actuate(tick, actuator)
 
     # --------------------------------------------------------- update loop -

@@ -30,6 +30,16 @@ numerics — ``tests/test_device_plane.py`` asserts tick results are
 bitwise identical across D.  Against the host plane the engine computes
 in f32 end-to-end (the host path standardises in f64), so equivalence is
 decision-level + allclose, like the Pallas kernel path.
+
+The reactive guardrail stage (DESIGN.md §10, docs/guardrail.md) composes
+with this engine for free: guard state (``_grd_prev`` armed forecasts,
+consecutive-overshoot counters) lives in per-shard host arrays inside
+``_VecShard`` and the plane's device-mode ``finish_tick`` feeds each
+shard's ``decide`` through the same zero-copy shard views (``_shard_cuts``)
+as the unguarded plane — the guard reads the realised key metric from the
+host-tracked last-row buffer and never touches the device ring, so the
+D-invariance and tick-transfer budget above are unchanged (bitwise
+invariance with the guard armed is asserted in tests/test_guardrail.py).
 """
 from __future__ import annotations
 

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import Forecaster
 from repro.core.metrics import MetricsHistory, Snapshot
-from repro.core.policies import Policy
+from repro.core.policies import GuardrailConfig, Policy
 from repro.core.updater import Updater
 
 
@@ -33,6 +33,11 @@ class PPAConfig:
     # autoscaler's requests (HPA gets the same); proactivity acts on the
     # up-scaling side where the startup latency lives.
     stabilization_s: float = 300.0
+    # hybrid reactive-proactive guardrail (DESIGN.md §10): None = purely
+    # proactive (the paper's PPA); a GuardrailConfig arms the guard stage
+    # in FleetController / ShardedControlPlane (the scalar PPA below stays
+    # paper-faithful and ignores it)
+    guard: GuardrailConfig | None = None
 
 
 class ScaleDownStabilizer:

@@ -112,6 +112,10 @@ class ServingFleet:
             self.core.exporter.samples[_GROUP]
         self.replica_log: list[tuple[float, int]] = []
         self.rng = np.random.default_rng(self.cfg.seed)
+        # latency-window feedback (docs/guardrail.md): requests dispatched
+        # since the last sample; their booked response times yield the
+        # window p95 published in metric slot 1 (SLAPolicy's key metric)
+        self._win_reqs: list[ServeRequest] = []
         # windowed batch mode: slot-level array pool + columnar replicas
         self._vec = bool(batch)
         self.completed_log: CompletionLog | None = None
@@ -132,6 +136,10 @@ class ServingFleet:
             self._ntok_n = 0
             self._busy_acc = WindowAccumulator(self.cfg.control_interval_s)
             self._cap_log: list[tuple[float, int]] = []
+            # batch-mode mirror of _win_reqs: per-chunk booked response
+            # arrays (deadline re-dispatches included — the same multiset
+            # the heap path sees, so the published p95 stays bitwise equal)
+            self._win_resp: list[np.ndarray] = []
 
     # ----------------------------------------------------------- scaling ---
     @property
@@ -241,6 +249,10 @@ class ServingFleet:
     def dispatch(self, req: ServeRequest, t: float):
         if self._vec:
             raise RuntimeError("batch-mode fleet: use dispatch_window")
+        # failure-requeued requests arrive with redispatched already set —
+        # they belong to their original dispatch window's latency sample
+        # (the batch path likewise amends the log without re-sampling)
+        fresh = not req.redispatched
         pool = self.core.pool(_GROUP)
         r = pool.select(t)
         in_pool = r is not None
@@ -283,6 +295,8 @@ class ServingFleet:
                 req.completion = start2 + nominal
                 h.slot_free_at[j] = req.completion
                 pool.update(h, self._effective(h))
+        if fresh:
+            self._win_reqs.append(req)
 
     # ------------------------------------------------- windowed dispatch ---
     def dispatch_window(self, times: np.ndarray, ntokens: np.ndarray):
@@ -412,6 +426,8 @@ class ServingFleet:
             times, starts, comps, svcs, rids,
             kind=np.minimum(ntok, np.iinfo(np.int16).max).astype(np.int16),
             redispatched=redis)
+        if n:
+            self._win_resp.append(comps - times)
         self._ntok_buf = grow_to(self._ntok_buf, self._ntok_n + n)
         self._ntok_buf[self._ntok_n:self._ntok_n + n] = ntok
         self._ntok_n += n
@@ -538,6 +554,13 @@ class ServingFleet:
 
     # ------------------------------------------------------------ metrics --
     def sample(self, t: float) -> Snapshot:
+        """Publish the fleet metric vector for the control window ending at
+        ``t``: ``[util*cap, window_p95, busy, rate*10, rate]``.  Slot 1 is
+        the p95 of the *booked* response times of requests dispatched since
+        the last sample (0.0 for an idle window) — the latency ground truth
+        ``SLAPolicy`` targets with ``key_metric_idx=1``; heap and batch
+        modes compute it over the identical request multiset, so the
+        published vector stays bitwise equal between them."""
         if self._vec:
             return self._vec_sample(t)
         w = self.cfg.control_interval_s
@@ -552,14 +575,19 @@ class ServingFleet:
         for r in live:
             if r.queue:
                 r.queue = [q for q in r.queue if q.completion > t]
-        vals = np.array([util * cap, 0.0, busy, rate * 10, rate])
+        resp = np.array([q.response for q in self._win_reqs
+                         if math.isfinite(q.completion)])
+        self._win_reqs.clear()
+        p95 = float(np.percentile(resp, 95)) if resp.size else 0.0
+        vals = np.array([util * cap, p95, busy, rate * 10, rate])
         ma = exporter.push(_GROUP, t, vals)
         return Snapshot(t, ma)
 
     def _vec_sample(self, t: float) -> Snapshot:
         """Fleet-level columnar readout: same metric vector as the heap
         path (draining replicas count toward capacity, dead ones don't;
-        busy comes from the WindowAccumulator)."""
+        busy comes from the WindowAccumulator, the window p95 from the
+        dispatch chunks since the last sample)."""
         cfg = self.cfg
         w = cfg.control_interval_s
         exporter = self.core.exporter
@@ -572,7 +600,15 @@ class ServingFleet:
         busy = self._busy_acc.get(win) / w
         util = 100.0 * busy / max(cap, 1)
         rate = exporter.take_count(_GROUP) / w
-        vals = np.array([util * max(cap, 1), 0.0, busy, rate * 10, rate])
+        if self._win_resp:
+            resp = (self._win_resp[0] if len(self._win_resp) == 1
+                    else np.concatenate(self._win_resp))
+            self._win_resp.clear()
+            resp = resp[np.isfinite(resp)]
+            p95 = float(np.percentile(resp, 95)) if resp.size else 0.0
+        else:
+            p95 = 0.0
+        vals = np.array([util * max(cap, 1), p95, busy, rate * 10, rate])
         return Snapshot(t, exporter.push(_GROUP, t, vals))
 
     # --------------------------------------------------------------- run ---

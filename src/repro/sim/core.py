@@ -460,6 +460,19 @@ class CompletionLog:
                 "resp_min": mn if ok else float("nan"),
                 "resp_max": mx if ok else float("nan")}
 
+    def window_percentile(self, w: int, q: float = 95.0) -> float:
+        """``q``-th percentile of the response times of the requests
+        dispatched in sealed window ``w`` — the SLA ground truth the
+        serving fleet publishes to the control plane (metric slot 1,
+        ``ServingFleet.sample``) and the guardrail A/B bench scores
+        violation seconds against.  NaN when the window has no finished
+        rows or was already flushed in streaming mode (use
+        ``window_stats`` there)."""
+        rows = self.window_rows(w)
+        resp = rows["completion"] - rows["arrival"]
+        resp = resp[np.isfinite(resp)]
+        return float(np.percentile(resp, q)) if resp.size else float("nan")
+
     def stats(self) -> dict:
         """Whole-run aggregate over flushed windows + retained rows."""
         aggs = list(self._win_stats) + [self._aggregate(self.view())]

@@ -1,0 +1,386 @@
+"""Hybrid reactive-proactive guardrail layer (DESIGN.md §10,
+docs/guardrail.md): the ``guard`` stage of the staged tick and the
+SLA-constrained policy family.
+
+The load-bearing properties:
+* the vectorised shard guard (``_VecShard._guard_apply``) == the scalar
+  ``Guardrail`` oracle, tick for tick, over random forecast-miss traces;
+* the override fires iff the relative error leaves the configured band
+  (up immediately, down only after ``down_ticks`` consecutive ticks);
+* ``SLAPolicy.evaluate_batch`` == the scalar ``__call__`` elementwise
+  over NaN/inf/zero p95 inputs;
+* a guarded ``ShardedControlPlane`` == a guarded ``FleetController``
+  decision for decision, and a quiet guard (huge band) is a no-op;
+* the guarded device-mesh plane keeps sha256 bitwise invariance across
+  D in {1, 2, 8} while the guard never fires.
+"""
+import json
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FleetController, GuardrailConfig, PPAConfig,
+                        ShardedControlPlane, SLAPolicy, TargetSpec,
+                        ThresholdPolicy)
+from repro.core.control_plane import Guardrail, _VecShard
+from repro.core.forecaster import LSTMForecaster, Scaler
+from repro.core.metrics import N_METRICS
+from repro.core.policies import policy_vectorizable
+from repro.core.ppa import ScaleDownStabilizer
+
+
+class _DummyModel:
+    """decide() never touches the model — only its window matters."""
+    window = 3
+    is_bayesian = False
+
+    def valid(self):
+        return True
+
+
+def _drive_pair(seed, band, down_ticks, headroom, n_ticks=24, Z=6,
+                maxr=50):
+    """Drive a guarded _VecShard and the scalar oracle chain (policy ->
+    stabilizer -> Guardrail) over one random forecast-miss trace; assert
+    equal replica decisions every tick."""
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                    guard=GuardrailConfig(band=band, down_ticks=down_ticks,
+                                          headroom=headroom))
+    specs = [TargetSpec(f"t{i}", ThresholdPolicy(100.0)) for i in range(Z)]
+    shard = _VecShard(cfg, specs, _DummyModel())
+    oracles = [Guardrail(cfg.guard, s.policy) for s in specs]
+    stabs = [ScaleDownStabilizer(cfg.stabilization_s) for _ in specs]
+    rng = np.random.default_rng(seed)
+    k = cfg.key_metric_idx
+    cur = np.full(Z, 2)
+    for tick in range(n_ticks):
+        t = float((tick + 1) * 15.0)
+        rows = rng.uniform(0.0, 1000.0, (Z, N_METRICS))
+        shard.observe_batch(t, rows)
+        means = np.full((Z, N_METRICS), np.nan)
+        cand = rng.random(Z) < 0.8
+        means[cand] = rng.uniform(0.0, 1000.0, (int(cand.sum()), N_METRICS))
+        state = (shard.ring.copy(), shard.count.copy())
+        rec = shard.decide(t, state, (means, None, False, cand), maxr,
+                           {n: int(c) for n, c in zip(shard.names, cur)})
+        for i, (s, g, stab) in enumerate(zip(specs, oracles, stabs)):
+            realised = float(rows[i, k])
+            predicted = bool(cand[i]) and math.isfinite(means[i, k])
+            key = float(means[i, k]) if predicted else realised
+            n = min(s.policy(key, {"current": int(cur[i])}), maxr)
+            n = stab.apply(t, n, int(cur[i]), maxr)
+            n = g.apply(realised, n, int(cur[i]), maxr)
+            g.arm(key if predicted else float("nan"))
+            assert n == rec[1][i], (tick, i, n, int(rec[1][i]))
+        cur = rec[1].copy()
+    up, down = shard.guard_counts()
+    assert up == sum(g.up_fired for g in oracles)
+    assert down == sum(g.down_fired for g in oracles)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       band=st.floats(0.05, 0.6),
+       down_ticks=st.integers(1, 4),
+       headroom=st.floats(1.0, 1.5))
+def test_guard_vectorized_matches_scalar_oracle(seed, band, down_ticks,
+                                                headroom):
+    _drive_pair(seed, band, down_ticks, headroom)
+
+
+def test_guard_vectorized_matches_scalar_seeded():
+    """Deterministic backstop (runs without hypothesis)."""
+    _drive_pair(7, 0.2, 2, 1.1)
+    _drive_pair(8, 0.4, 1, 1.0)
+
+
+def test_guard_fires_iff_error_leaves_band():
+    """Scalar semantics: no override while |err| <= band; immediate
+    scale-up override past +band; scale-down override only after
+    ``down_ticks`` CONSECUTIVE ticks past -band."""
+    pol = ThresholdPolicy(100.0)
+    g = Guardrail(GuardrailConfig(band=0.25, down_ticks=2), pol)
+
+    # unarmed (no forecast yet): pass-through whatever the error would be
+    assert g.apply(1000.0, 3, 3, 50) == 3 and g.up_fired == 0
+
+    # in-band: realised within +-25% of the armed forecast -> pass-through
+    g.arm(400.0)
+    assert g.apply(480.0, 4, 4, 50) == 4            # err = +0.2
+    assert (g.up_fired, g.down_fired) == (0, 0)
+
+    # undershoot past the band: immediate reactive scale-up
+    g.arm(400.0)
+    assert g.apply(900.0, 4, 4, 50) == 9            # ceil(900/100) = 9
+    assert (g.up_fired, g.down_fired) == (1, 0)
+
+    # overshoot: first out-of-band tick holds, the second fires the trim
+    g.arm(1000.0)
+    assert g.apply(200.0, 10, 10, 50) == 10         # down_ct 1 of 2
+    g.arm(1000.0)
+    assert g.apply(200.0, 10, 10, 50) == 2          # fires: ceil(200/100)
+    assert (g.up_fired, g.down_fired) == (1, 1)
+
+    # an in-band tick resets the consecutive counter
+    g.arm(1000.0)
+    assert g.apply(200.0, 10, 10, 50) == 10         # down_ct 1 of 2
+    g.arm(1000.0)
+    assert g.apply(1000.0, 10, 10, 50) == 10        # in band: reset
+    g.arm(1000.0)
+    assert g.apply(200.0, 10, 10, 50) == 10         # back to 1 of 2
+    assert (g.up_fired, g.down_fired) == (1, 1)
+
+    # the guard never scales below the plan on the up path...
+    g.arm(100.0)
+    assert g.apply(200.0, 7, 2, 50) == 7            # max(plan 7, react 2)
+    # ...and never above it on the down path, and respects max_replicas
+    g.arm(100.0)
+    assert g.apply(10_000.0, 3, 3, 5) == 5          # min(react 100, maxr)
+
+
+# ------------------------------------------------------ SLA policy family --
+def _p95_strategy():
+    return st.lists(
+        st.one_of(st.floats(0.0, 100.0),
+                  st.sampled_from([float("nan"), float("inf"), 0.0, -1.0])),
+        min_size=1, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=_p95_strategy(),
+       target=st.floats(0.1, 30.0),
+       margin=st.floats(0.2, 0.9),
+       cur=st.integers(1, 40),
+       minr=st.integers(1, 5))
+def test_sla_evaluate_batch_matches_scalar(keys, target, margin, cur, minr):
+    pols = [SLAPolicy(target, min_replicas=minr, down_margin=margin)
+            for _ in keys]
+    karr = np.asarray(keys, np.float64)
+    curs = np.full(len(keys), cur, np.int64)
+    batch = SLAPolicy.evaluate_batch(SLAPolicy.stack(pols), karr, curs)
+    scalar = [p(float(k), {"current": cur}) for p, k in zip(pols, keys)]
+    np.testing.assert_array_equal(batch, np.asarray(scalar, np.int64))
+
+
+def test_sla_policy_vectorizable_and_columnar():
+    """SLAPolicy carries the stack/evaluate_batch protocol, so an all-SLA
+    target set lands on the columnar shard, not the fallback."""
+    assert policy_vectorizable(SLAPolicy(2.0))
+    cfg = PPAConfig(key_metric_idx=1)
+    specs = [TargetSpec(f"t{i}", SLAPolicy(2.0), model=m.model)
+             for i, m in enumerate(_fab_targets(8))]
+    plane = ShardedControlPlane(cfg, specs, n_shards=2)
+    assert all(s.vectorized for s in plane.shards)
+    plane.shutdown()
+
+
+def test_sla_policy_semantics():
+    p = SLAPolicy(target_p95=2.0, min_replicas=1, down_margin=0.5)
+    assert p(0.0, {"current": 4}) == 4          # idle window: hold
+    assert p(float("nan"), {"current": 4}) == 4
+    assert p(4.0, {"current": 4}) == 8          # 2x over target
+    assert p(1.5, {"current": 4}) == 4          # inside the hold band
+    assert p(0.5, {"current": 4}) == 2          # ratio .25 / margin .5
+
+
+# ----------------------------------------------- staged-plane integration --
+def _fab_targets(Z, window=2, hidden=8, seed=3, policy=None):
+    """Fabricated fitted per-target LSTMs (the bench/device-test pattern:
+    shared params, per-target scaler stats — deterministic, fit-free)."""
+    base = LSTMForecaster(window=window, hidden=hidden, seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    means = rng.uniform(50.0, 300.0, (Z, N_METRICS))
+    stds = 0.1 * means + 1.0
+    out = []
+    for i in range(Z):
+        m = LSTMForecaster.__new__(LSTMForecaster)
+        m.__dict__.update(base.__dict__)
+        sc = Scaler()
+        sc.mean, sc.std, sc.fitted = means[i], stds[i], True
+        m.scaler = sc
+        m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        out.append(TargetSpec(
+            f"t{i}", policy or ThresholdPolicy(100.0, 1), model=m))
+    return out
+
+
+def _drive(ctrl, rows_seq, cur=2, maxr=32):
+    out = []
+    t = 0.0
+    for rows in rows_seq:
+        t += 15.0
+        if hasattr(ctrl, "observe_batch"):
+            ctrl.observe_batch(t, rows)
+        else:
+            from repro.core import Snapshot
+            for i, n in enumerate(ctrl.target_names):
+                ctrl.observe(n, Snapshot(t, rows[i]))
+        res = ctrl.control_step(t, maxr, cur)
+        out.append(np.array([res[n].replicas for n in ctrl.target_names],
+                            np.int64))
+    if hasattr(ctrl, "shutdown"):
+        ctrl.shutdown()
+    return out
+
+
+def test_guarded_plane_matches_guarded_controller():
+    """ShardedControlPlane with the vectorised guard == FleetController
+    with per-target scalar Guardrails, decision for decision, on a trace
+    spiky enough to fire both override directions."""
+    Z = 16
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                    guard=GuardrailConfig(band=0.15, down_ticks=2))
+    rng = np.random.default_rng(5)
+    rows_seq = [rng.uniform(20.0, 800.0, (Z, N_METRICS)) for _ in range(10)]
+    plane = ShardedControlPlane(cfg, _fab_targets(Z), n_shards=4)
+    fc = FleetController(cfg, _fab_targets(Z))
+    got = _drive(plane, rows_seq)
+    want = _drive(fc, rows_seq)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_quiet_guard_is_a_noop():
+    """A guard whose band can never be left (band=inf) changes nothing:
+    decisions match the unguarded plane bitwise and no override fires."""
+    Z = 12
+    rng = np.random.default_rng(9)
+    rows_seq = [rng.uniform(20.0, 800.0, (Z, N_METRICS)) for _ in range(8)]
+    base = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    quiet = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                      guard=GuardrailConfig(band=float("inf")))
+    off = _drive(ShardedControlPlane(base, _fab_targets(Z), n_shards=3),
+                 rows_seq)
+    plane = ShardedControlPlane(quiet, _fab_targets(Z), n_shards=3)
+    on = _drive(plane, rows_seq)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_guard_stats_counts_overrides():
+    """guard_stats() aggregates per-shard override counters; a plane whose
+    forecasts are wildly wrong fires the up path."""
+    Z = 8
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                    guard=GuardrailConfig(band=0.1, down_ticks=1))
+    plane = ShardedControlPlane(cfg, _fab_targets(Z), n_shards=2)
+    rng = np.random.default_rng(2)
+    # alternate low/high realised load: the forecast (trained on nothing,
+    # scaler-anchored near the mean) misses the swings
+    rows_seq = [np.full((Z, N_METRICS), 30.0 if i % 2 else 900.0)
+                + rng.uniform(0, 1, (Z, N_METRICS)) for i in range(12)]
+    _drive(plane, rows_seq)
+    stats = plane.guard_stats()
+    assert stats["up_overrides"] > 0
+    assert set(stats) == {"up_overrides", "down_overrides"}
+
+
+# -------------------------------------------- device-mesh D-invariance ----
+_CHILD = r"""
+import hashlib, json
+import numpy as np
+from repro.core import (GuardrailConfig, PPAConfig, ShardedControlPlane,
+                        TargetSpec, ThresholdPolicy)
+from repro.core.forecaster import LSTMForecaster, Scaler
+from repro.core.metrics import N_METRICS
+
+Z, W, H, S = 48, 2, 8, 4
+
+def fab_targets():
+    base = LSTMForecaster(window=W, hidden=H, seed=3)
+    rng = np.random.default_rng(103)
+    means = rng.uniform(50.0, 300.0, (Z, N_METRICS))
+    stds = 0.1 * means + 1.0
+    out = []
+    for i in range(Z):
+        m = LSTMForecaster.__new__(LSTMForecaster)
+        m.__dict__.update(base.__dict__)
+        sc = Scaler(); sc.mean, sc.std, sc.fitted = means[i], stds[i], True
+        m.scaler = sc; m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        out.append(TargetSpec(f"t{i}", ThresholdPolicy(100.0, 1), model=m))
+    return out
+
+rng = np.random.default_rng(11)
+rows_seq = [rng.uniform(50.0, 300.0, (Z, N_METRICS)) for _ in range(6)]
+
+def digest(D, coalesce):
+    # quiet guard: the band can never be left, but the guard stage still
+    # runs (arm + compare) every tick on every shard
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0,
+                    guard=GuardrailConfig(band=1e18))
+    plane = ShardedControlPlane(cfg, fab_targets(), n_shards=S,
+                                coalesce_dispatch=coalesce, device_mesh=D)
+    h = hashlib.sha256()
+    t = 0.0
+    for rows in rows_seq:
+        t += 15.0
+        plane.observe_batch(t, rows)
+        res = plane.control_step(t, 32, 2)
+        for n in res:
+            r = res[n]
+            h.update(np.int64(r.replicas).tobytes())
+            h.update(np.float64(r.key_metric).tobytes())
+            if r.raw_prediction is not None:
+                h.update(np.asarray(r.raw_prediction).tobytes())
+    up, down = plane.guard_stats()["up_overrides"], \
+        plane.guard_stats()["down_overrides"]
+    assert up == 0 and down == 0, (up, down)
+    plane.shutdown()
+    return h.hexdigest()
+
+cells = {}
+for D in (1, 2, 8):
+    cells[f"D{D}-shardmap"] = digest(D, False)
+    cells[f"D{D}-gang"] = digest(D, True)
+print("DIGESTS=" + json.dumps(cells))
+"""
+
+
+def test_guarded_device_plane_bitwise_invariance(forced_devices_runner):
+    """With the guard armed but quiet (band it can never leave), tick
+    results stay sha256-bitwise identical across D in {1, 2, 8} on both
+    dispatch modes: guard state is host-side per-shard arrays riding the
+    shard views, so the mesh partition cannot change its numerics."""
+    out = forced_devices_runner(_CHILD)
+    line = next(ln for ln in out.splitlines() if ln.startswith("DIGESTS="))
+    cells = json.loads(line[len("DIGESTS="):])
+    assert len(cells) == 6
+    assert len(set(cells.values())) == 1, f"digest mismatch: {cells}"
+
+
+# ------------------------------------------------- latency-window feed ----
+def test_fleet_publishes_window_p95():
+    """ServingFleet metric slot 1 carries the window p95 of booked
+    response times (0.0 for idle windows), equal between heap and batch
+    modes and consistent with CompletionLog.window_percentile."""
+    from repro.serving.fleet import FleetConfig, ServingFleet
+    from repro.core.hpa import HPA
+    from repro.workloads import poisson_arrivals
+
+    arr = poisson_arrivals(3.0, 600.0, 15.0, seed=4)
+    rng = np.random.default_rng(4)
+    ntok = rng.integers(16, 64, len(arr.times))
+    cfg = FleetConfig(total_chips=64, chips_per_replica=16, seed=0,
+                      deadline_factor=1e9)
+    pe = ServingFleet(cfg).run(
+        [(float(t), int(n)) for t, n in zip(arr.times, ntok)],
+        HPA(1e18, min_replicas=2), "hpa", 600.0, min_replicas=2)
+    bt = ServingFleet(cfg, batch=True).run(
+        (arr.times, ntok.astype(np.float64)),
+        HPA(1e18, min_replicas=2), "hpa", 600.0, min_replicas=2)
+    sp = np.stack([v for _, v in pe.samples])
+    sb = np.stack([v for _, v in bt.samples])
+    np.testing.assert_allclose(sp[:, 1], sb[:, 1], rtol=1e-12, atol=1e-12)
+    assert (sp[:, 1] > 0).any()
+    # cross-check one sampled window against the log's percentile helper
+    log = bt.completed_log
+    w = bt.core.exporter.window_index(15.0 * 3)
+    rows = log.window_rows(w)
+    if len(rows):
+        resp = rows["completion"] - rows["arrival"]
+        want = float(np.percentile(resp[np.isfinite(resp)], 95))
+        assert abs(log.window_percentile(w, 95) - want) < 1e-12

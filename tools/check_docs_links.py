@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker (stdlib only) — the CI docs-lint.
+
+Scans the docs site plus the root cross-reference files for markdown
+links, resolves every non-external target relative to the containing
+file, and fails on targets that don't exist.  External links
+(http/https/mailto) are skipped — CI must not depend on the network.
+In-page anchors (`#...`) are checked only for non-emptiness of the
+target file; GitHub's slug algorithm is not reimplemented here.
+
+    python tools/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+SCAN = ("README.md", "DESIGN.md", "ROADMAP.md", "docs/*.md")
+# [text](target) — target up to the first unescaped ')'; images share
+# the syntax (leading '!' is irrelevant for resolution)
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_files(root: Path):
+    for pat in SCAN:
+        yield from sorted(root.glob(pat))
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    in_code = False
+    for ln, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:           # pure in-page anchor
+                continue
+            resolved = (path.parent / target).resolve()
+            if root.resolve() not in resolved.parents \
+                    and resolved != root.resolve():
+                errors.append(f"{path.relative_to(root)}:{ln}: "
+                              f"link escapes the repo: {m.group(1)}")
+            elif not resolved.exists():
+                errors.append(f"{path.relative_to(root)}:{ln}: "
+                              f"broken link: {m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    files = list(iter_files(root))
+    if not files:
+        print(f"check_docs_links: no markdown files found under {root}")
+        return 1
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(e)
+    print(f"check_docs_links: {len(files)} files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

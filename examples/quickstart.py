@@ -22,18 +22,19 @@ import shutil
 import numpy as np
 
 
-def guardrail_demo(quick: bool = False):
+def guardrail_demo(quick: bool = False, forecaster: str = "lstm"):
     """Collect -> fit -> proact -> guard, end to end on one service:
 
     * collect: a statically provisioned fleet serves a steady Poisson
       load while the metric exporter records per-window samples (slot 1
       is the window p95 of booked response times — the latency feed);
-    * fit: a per-target LSTM learns the collected series;
+    * fit: a per-target forecaster (``--forecaster``: the plain LSTM or
+      the Attention-Double-LSTM "attn" zoo entry) learns the series;
     * proact + guard: a ``ShardedControlPlane`` with ``SLAPolicy`` (p95
       objective, ``key_metric_idx=1``) and the reactive guardrail scales
       the fleet through a flash crowd the forecaster has never seen.
     """
-    from repro.core import (GuardrailConfig, LSTMForecaster, PPAConfig,
+    from repro.core import (GuardrailConfig, PPAConfig,
                             ShardedControlPlane, SLAPolicy, TargetSpec)
     from repro.serving.fleet import FleetConfig, ServingFleet
     from repro.workloads import poisson_arrivals
@@ -75,12 +76,18 @@ def guardrail_demo(quick: bool = False):
           f"(steady p95 ~{np.median(series[:, 1]):.2f}s)")
 
     # -- fit + build the guarded plane ------------------------------------
-    model = LSTMForecaster(window=4, epochs=20 if quick else 40, seed=0)
-    model.fit(series, from_scratch=True)
+    fkw = dict(window=4)
+    if forecaster not in ("arma", "arima", "arima_d1"):
+        fkw["epochs"] = 20 if quick else 40
+        if forecaster != "ensemble":     # members seed themselves (0..E-1)
+            fkw["seed"] = 0
     cfg = PPAConfig(key_metric_idx=1,          # scale on the p95 feed
                     stabilization_s=60.0,
                     guard=GuardrailConfig(band=0.3, headroom=1.15,
-                                          down_ticks=3))
+                                          down_ticks=3),
+                    forecaster=forecaster, forecaster_kw=fkw)
+    model = cfg.build_forecaster()
+    model.fit(series, from_scratch=True)
     plane = ShardedControlPlane(
         cfg, [TargetSpec("svc", SLAPolicy(target_p95, min_replicas=2),
                          model=model)],
@@ -172,8 +179,13 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke lane: shrink the closed loops, skip "
                          "the PPA-vs-HPA scenario")
+    ap.add_argument("--forecaster", default="lstm",
+                    choices=["lstm", "attn", "arma", "arima_d1", "ensemble"],
+                    help="forecaster zoo entry for the guardrail demo "
+                         "(make_forecaster kind; 'attn' = the fused "
+                         "Attention-Double-LSTM)")
     args = ap.parse_args()
-    guardrail_demo(quick=args.quick)
+    guardrail_demo(quick=args.quick, forecaster=args.forecaster)
     if not args.quick:
         ppa_demo()
     else:

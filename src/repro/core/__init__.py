@@ -4,6 +4,7 @@
 from repro.core.metrics import (METRIC_NAMES, N_METRICS, KEY_CPU, KEY_CUSTOM,
                                 MetricsHistory, Snapshot)
 from repro.core.forecaster import (Forecaster, LSTMForecaster,
+                                   AttnLSTMForecaster,
                                    ARMAForecaster, ARIMAD1Forecaster,
                                    EnsembleForecaster, make_forecaster)
 from repro.core.policies import (ThresholdPolicy, TargetUtilizationPolicy,

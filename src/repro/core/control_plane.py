@@ -290,13 +290,14 @@ def _vectorizable(specs, shared_model) -> bool:
     policy carries the vectorised protocol (``stack``/``evaluate_batch`` —
     heterogeneous *types* are fine, the shard dispatches per type) and
     (shared mode) any batched forecaster, or (per-target mode) homogeneous
-    stackable LSTMs."""
+    stackable models (plain LSTM or any ``arch``-registry subclass, e.g.
+    the Attention-Double-LSTM)."""
     if not all(policy_vectorizable(s.policy) for s in specs):
         return False
     if shared_model is not None:
         return True
     models = [s.model for s in specs]
-    if not all(type(m) is LSTMForecaster for m in models):
+    if not all(isinstance(m, LSTMForecaster) for m in models):
         return False
     sig = lstm_stack_signature(models[0])
     return all(lstm_stack_signature(m) == sig for m in models)
@@ -322,7 +323,8 @@ def predict_from_stack(cache, idx, wins, m0, n_total: int,
                else jax.tree.map(lambda leaf: leaf[idx], cache["stacked"]))
     preds = np.asarray(_lstm_forward_stacked(
         stacked, jnp.asarray(z),
-        use_pallas=m0.use_pallas if use_pallas is None else use_pallas))
+        use_pallas=m0.use_pallas if use_pallas is None else use_pallas,
+        arch=m0.arch))
     if m0.residual:
         preds = z[:, -1] + preds
     return preds * std_s + mean_s

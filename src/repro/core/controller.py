@@ -36,7 +36,8 @@ from repro.core.control_plane import (Guardrail, Tick, as_replica_map,
                                       validate_targets)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import (Forecaster, LSTMForecaster,
-                                   lstm_predict_batch_stacked)
+                                   lstm_predict_batch_stacked,
+                                   lstm_stack_signature)
 from repro.core.metrics import MetricsHistory, Snapshot
 from repro.core.policies import Policy
 from repro.core.ppa import PPAConfig, ScaleDownStabilizer
@@ -159,8 +160,8 @@ class FleetController:
                 bayes = self.model.is_bayesian
             else:
                 models = [self.model_for(n) for n in cand]
-                if (all(type(m) is LSTMForecaster for m in models)
-                        and len(set((m.window, m.hidden, m.residual)
+                if (all(isinstance(m, LSTMForecaster) for m in models)
+                        and len(set(lstm_stack_signature(m)
                                     for m in models)) == 1):
                     means, stds = lstm_predict_batch_stacked(
                         models, recents, cache=self._stack_cache)

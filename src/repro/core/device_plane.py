@@ -51,8 +51,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.forecaster import (Z_CLIP, lstm_stack_signature,
-                                   stack_scaler_stats, stacked_forward)
+from repro.core.forecaster import (ARCH_PARAM_LEAVES, Z_CLIP,
+                                   lstm_stack_signature, stack_scaler_stats,
+                                   stacked_forward)
 from repro.core.metrics import N_METRICS
 from repro.distributed.sharding import CONTROL_AXIS, control_mesh
 
@@ -93,7 +94,8 @@ class DevicePlaneEngine:
 
     def __init__(self, Z: int, window: int, residual: bool,
                  use_pallas: bool, *, device_mesh=None,
-                 coalesce_dispatch: bool = True, ring_rows: int | None = None):
+                 coalesce_dispatch: bool = True, ring_rows: int | None = None,
+                 arch: str = "lstm"):
         self.mesh = (device_mesh if device_mesh is not None
                      and not isinstance(device_mesh, int)
                      else control_mesh(device_mesh))
@@ -106,6 +108,8 @@ class DevicePlaneEngine:
         self.window = int(window)
         self.residual = bool(residual)
         self.use_pallas = bool(use_pallas)
+        self.arch = str(arch)
+        self.param_leaves = ARCH_PARAM_LEAVES[self.arch]
         self.R = int(ring_rows if ring_rows is not None
                      else max(self.window + 1, 8))
         self.coalesce = bool(coalesce_dispatch)
@@ -172,7 +176,7 @@ class DevicePlaneEngine:
         self._valid = np.array(
             [self._model_ok(m) for m in models], bool)
         stacked_np = {}
-        for leaf in ("Wx", "Wh", "b", "Wo", "bo"):
+        for leaf in self.param_leaves:
             arrs = [np.asarray(m.params[leaf], np.float32) for m in models]
             buf = np.zeros((self.Zp,) + arrs[0].shape, np.float32)
             buf[:self.Z] = np.stack(arrs)
@@ -203,12 +207,14 @@ class DevicePlaneEngine:
     # --------------------------------------------------------- dispatch --
     def _build_forward(self):
         W, residual, use_pallas = self.window, self.residual, self.use_pallas
+        arch = self.arch
 
         def body(stacked, mean, std, ring):
             win = ring[:, -W:, :]
             z = jnp.clip((win - mean[:, None, :]) / std[:, None, :],
                          -Z_CLIP, Z_CLIP)
-            net = stacked_forward(stacked, z, use_pallas=use_pallas)
+            net = stacked_forward(stacked, z, use_pallas=use_pallas,
+                                  arch=arch)
             if residual:
                 net = z[:, -1, :] + net
             return net * std + mean
@@ -270,7 +276,7 @@ def engine_for_plane(plane, device_mesh, coalesce_dispatch: bool
             models[gi] = tm[j]
     sig = lstm_stack_signature(models[0])
     if not all(lstm_stack_signature(m) == sig for m in models):
-        raise ValueError("device_mesh needs homogeneous stackable LSTMs "
+        raise ValueError("device_mesh needs homogeneous stackable models "
                          "across shards")
     m0 = models[0]
     use_pallas = (m0.use_pallas if plane.use_pallas is None
@@ -281,5 +287,5 @@ def engine_for_plane(plane, device_mesh, coalesce_dispatch: bool
     engine = DevicePlaneEngine(
         len(models), m0.window, m0.residual, use_pallas,
         device_mesh=device_mesh, coalesce_dispatch=coalesce_dispatch,
-        ring_rows=m0.window)
+        ring_rows=m0.window, arch=m0.arch)
     return engine, models

@@ -16,7 +16,7 @@ import numpy as np
 from repro.cluster import (AutoscalerBinding, ClusterSim, SimConfig,
                            paper_topology)
 from repro.core import (HPA, PPA, PPAConfig, MetricsHistory, ThresholdPolicy,
-                        Updater, UpdatePolicy, make_forecaster)
+                        Updater, UpdatePolicy)
 
 ZONES = ("edge-0", "edge-1", "cloud")
 
@@ -118,14 +118,16 @@ def run_scenario(tasks, t_end, *, scaler: str = "ppa", model_kind: str = "lstm",
         if scaler == "ppa":
             kw = ({} if model_kind in ("arma", "arima", "arima_d1")
                   else {"window": window})
-            model = make_forecaster(model_kind, **kw)
+            cfg = PPAConfig(key_metric_idx=key_metric_idx, threshold=thr,
+                            update_interval_s=update_interval_s,
+                            confidence_threshold=confidence_threshold,
+                            min_replicas=min_replicas,
+                            stabilization_s=stabilization_s,
+                            forecaster=model_kind, forecaster_kw=kw)
+            model = cfg.build_forecaster()
             if pretrain is not None and z in pretrain:
                 model.fit(pretrain[z], from_scratch=True)
-            ppa = PPA(PPAConfig(key_metric_idx=key_metric_idx, threshold=thr,
-                                update_interval_s=update_interval_s,
-                                confidence_threshold=confidence_threshold,
-                                min_replicas=min_replicas,
-                                stabilization_s=stabilization_s),
+            ppa = PPA(cfg,
                       model, ThresholdPolicy(thr, min_replicas, tolerance),
                       Updater(update_policy), MetricsHistory())
             binds.append(AutoscalerBinding(z, ppa, "ppa", min_replicas))

@@ -117,6 +117,82 @@ def _lstm_init(key, n_in: int, hidden: int, n_out: int):
     }
 
 
+def _attn_init(key, n_in: int, hidden: int, n_out: int):
+    """Attention-Double-LSTM parameters: two LSTM layers bridged by a
+    window-length temporal-attention block (query projection ``Wa``)."""
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(hidden)
+    return {
+        "Wx1": jax.random.normal(k1, (n_in, 4 * hidden)) * s,
+        "Wh1": jax.random.normal(k2, (hidden, 4 * hidden)) * s,
+        "b1": jnp.zeros((4 * hidden,)),
+        "Wa": jax.random.normal(k3, (hidden, hidden)) * s,
+        "Wx2": jax.random.normal(k4, (hidden, 4 * hidden)) * s,
+        "Wh2": jax.random.normal(k5, (hidden, 4 * hidden)) * s,
+        "b2": jnp.zeros((4 * hidden,)),
+        "Wo": jax.random.normal(k6, (hidden, n_out)) * s,
+        "bo": jnp.zeros((n_out,)),
+    }
+
+
+def _attn_body(params, xs):
+    """Pure-jnp Attention-Double-LSTM forward: xs (B, W, M) -> (B, n_out).
+    Op-for-op ``kernels/ref.attn_lstm_seq`` with dict params — the XLA
+    (non-Pallas) serving/fit path of ``AttnLSTMForecaster``; the fused
+    kernel's custom-VJP backward replays the same math, so both paths train
+    with identical gradients.
+
+    Stage 1: first LSTM scan keeping every hidden state; stage 2: temporal
+    attention (query = final hidden state @ Wa, scaled-dot scores over the
+    window, softmax weights reweight the hidden sequence); stage 3: second
+    LSTM scan over the reweighted sequence + ReLU-dense head."""
+    B = xs.shape[0]
+    H = params["Wh1"].shape[-2]
+    h = jnp.zeros((B, H))
+    c = jnp.zeros((B, H))
+
+    def step1(carry, x):
+        h, c = carry
+        gates = x @ params["Wx1"] + h @ params["Wh1"] + params["b1"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (h1, _), hs = jax.lax.scan(step1, (h, c), jnp.swapaxes(xs, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)                          # (B, W, H)
+    q = h1 @ params["Wa"]                                # (B, H)
+    scores = jnp.sum(hs * q[:, None, :], axis=-1) * (H ** -0.5)
+    alpha = jax.nn.softmax(scores, axis=-1)              # (B, W)
+    ctx = alpha[:, :, None] * hs                         # reweighted sequence
+
+    h = jnp.zeros((B, H))
+    c = jnp.zeros((B, H))
+
+    def step2(carry, a):
+        h, c = carry
+        gates = a @ params["Wx2"] + h @ params["Wh2"] + params["b2"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    (h2, _), _ = jax.lax.scan(step2, (h, c), jnp.swapaxes(ctx, 0, 1))
+    return jax.nn.relu(h2) @ params["Wo"] + params["bo"]
+
+
+# architecture registry: arch name -> (param init, ordered leaf names).
+# ``arch`` is threaded as a STATIC argument through every jitted forward /
+# fit below, so one function tree serves the whole forecaster zoo — adding
+# an architecture means an init + a forward body + one entry here, not a
+# parallel copy of the stacking/fit/device-residency protocol.
+ARCH_INITS = {"lstm": _lstm_init, "attn": _attn_init}
+ARCH_PARAM_LEAVES = {
+    "lstm": ("Wx", "Wh", "b", "Wo", "bo"),
+    "attn": ("Wx1", "Wh1", "b1", "Wa", "Wx2", "Wh2", "b2", "Wo", "bo"),
+}
+
+
 def lstm_cell(params, h, c, x):
     """One LSTM step, pure jnp.  x (..., n_in); h, c (..., H).  The Pallas
     path no longer routes through here: ``use_pallas=True`` dispatches the
@@ -130,16 +206,27 @@ def lstm_cell(params, h, c, x):
     return h, c
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def lstm_forward(params, xs, *, use_pallas: bool = False):
+@functools.partial(jax.jit, static_argnames=("use_pallas", "arch"))
+def lstm_forward(params, xs, *, use_pallas: bool = False,
+                 arch: str = "lstm"):
     """xs (B, W, M) -> prediction (B, M).
 
     ``use_pallas=True`` routes through the fused whole-window sequence
-    kernel (``kernels/lstm_seq.py``): one dispatch keeps (h, c) resident in
-    VMEM scratch across the W timesteps instead of re-launching a cell
-    kernel per scan step.  It is differentiable (checkpoint-style custom
-    VJP replaying the jnp reference), so every fit-path forward rides it
-    too."""
+    kernel (``kernels/lstm_seq.py`` for ``arch="lstm"``,
+    ``kernels/attn_lstm_seq.py`` for ``arch="attn"``): one dispatch keeps
+    (h, c) — and for attn the whole hidden-state history + attention —
+    resident in VMEM scratch across the W timesteps instead of re-launching
+    a cell kernel per scan step.  Both kernels are differentiable
+    (checkpoint-style custom VJP replaying the jnp reference), so every
+    fit-path forward rides them too."""
+    if arch == "attn":
+        if use_pallas:
+            from repro.kernels import ops
+            return ops.attn_lstm_seq(
+                params["Wx1"], params["Wh1"], params["b1"], params["Wa"],
+                params["Wx2"], params["Wh2"], params["b2"],
+                params["Wo"], params["bo"], xs)
+        return _attn_body(params, xs)
     if use_pallas:
         from repro.kernels import ops
         return ops.lstm_seq(params["Wx"], params["Wh"], params["b"],
@@ -158,10 +245,12 @@ def lstm_forward(params, xs, *, use_pallas: bool = False):
     return jax.nn.relu(h) @ params["Wo"] + params["bo"]
 
 
-@functools.partial(jax.jit, static_argnames=("opt_cfg", "epochs", "use_pallas"))
-def _lstm_fit(params, opt_state, X, Y, opt_cfg, epochs, use_pallas=False):
+@functools.partial(jax.jit, static_argnames=("opt_cfg", "epochs",
+                                             "use_pallas", "arch"))
+def _lstm_fit(params, opt_state, X, Y, opt_cfg, epochs, use_pallas=False,
+              arch="lstm"):
     def loss_fn(p):
-        pred = lstm_forward(p, X, use_pallas=use_pallas)
+        pred = lstm_forward(p, X, use_pallas=use_pallas, arch=arch)
         return jnp.mean((pred - Y) ** 2)
 
     def epoch(carry, _):
@@ -180,7 +269,16 @@ class LSTMForecaster(Forecaster):
 
     ``residual=True`` regresses the per-step delta (prediction = last value +
     net output) — the net degrades to persistence when uncertain, which keeps
-    it robust when the serving regime drifts from the collection regime."""
+    it robust when the serving regime drifts from the collection regime.
+
+    ``arch``/``PARAM_LEAVES`` are the class's entry in the architecture
+    registry: every stacked-protocol consumer (stack signature, batched
+    fits, the device plane's weight cache) keys on them instead of on the
+    concrete class, so subclasses that swap the forward body
+    (``AttnLSTMForecaster``) inherit the whole protocol."""
+
+    arch: str = "lstm"
+    PARAM_LEAVES: tuple = ARCH_PARAM_LEAVES["lstm"]
 
     def __init__(self, window: int = 1, hidden: int = 50, epochs: int = 150,
                  finetune_epochs: int = 30, lr: float = 1e-2, seed: int = 0,
@@ -193,11 +291,13 @@ class LSTMForecaster(Forecaster):
                                    warmup_steps=0, total_steps=10**9,
                                    min_lr_ratio=1.0)
         self._seed = seed
-        self.params = _lstm_init(jax.random.PRNGKey(seed), N_METRICS, hidden,
-                                 N_METRICS)
+        self.params = self._init_params(jax.random.PRNGKey(seed))
         self.scaler = Scaler()
         self._fitted = False
         self._fit_count = 0   # generation counter (stacked-batch cache key)
+
+    def _init_params(self, key):
+        return ARCH_INITS[self.arch](key, N_METRICS, self.hidden, N_METRICS)
 
     def _windows(self, series):
         z = self.scaler.transform(series)
@@ -213,9 +313,8 @@ class LSTMForecaster(Forecaster):
             self.scaler.fit(series)
             # the model's own seed, not a shared constant: ensemble members
             # refit from scratch must stay diverse (the Bayesian std path)
-            self.params = _lstm_init(jax.random.PRNGKey(
-                getattr(self, "_seed", 0)), N_METRICS,
-                self.hidden, N_METRICS)
+            self.params = self._init_params(
+                jax.random.PRNGKey(getattr(self, "_seed", 0)))
             epochs = self.epochs
         else:
             epochs = self.finetune_epochs
@@ -223,7 +322,7 @@ class LSTMForecaster(Forecaster):
         opt = adamw_init(self.params, self.opt_cfg)
         self.params, _, losses = _lstm_fit(self.params, opt, X, Y,
                                            self.opt_cfg, epochs,
-                                           self.use_pallas)
+                                           self.use_pallas, self.arch)
         self._fitted = True
         self._fit_count += 1
         self.last_losses = np.asarray(losses)
@@ -234,7 +333,7 @@ class LSTMForecaster(Forecaster):
             raise RuntimeError("model not fitted")
         z = self.scaler.transform(recent[-self.window:])
         pred = lstm_forward(self.params, jnp.asarray(z)[None],
-                            use_pallas=self.use_pallas)[0]
+                            use_pallas=self.use_pallas, arch=self.arch)[0]
         pred = np.asarray(pred)
         if self.residual:
             pred = z[-1] + pred
@@ -256,7 +355,8 @@ class LSTMForecaster(Forecaster):
                              for r in recents])
         z = self.scaler.transform(wins)
         pred = np.asarray(lstm_forward(self.params, jnp.asarray(z),
-                                       use_pallas=self.use_pallas))
+                                       use_pallas=self.use_pallas,
+                                       arch=self.arch))
         if self.residual:
             pred = z[:, -1] + pred
         return self.scaler.inverse(pred), None
@@ -284,12 +384,36 @@ class LSTMForecaster(Forecaster):
         self.params = jax.tree.map(jnp.asarray, d["params"])
 
 
+class AttnLSTMForecaster(LSTMForecaster):
+    """Attention-Double-LSTM (PAPERS.md, "Mitigating Temporal Blindness in
+    Kubernetes Autoscaling"): a first LSTM encodes the window, temporal
+    attention over its hidden states re-weights the sequence, and a second
+    LSTM + ReLU-dense head reads the re-weighted context.  The attention
+    lets the model key on burst onsets anywhere in the window, where the
+    plain LSTM's single final hidden state is "temporally blind" on
+    bursty / serverless traces.
+
+    Everything else — the stacked per-target protocol, batched fits, the
+    device plane's epoch-keyed weight cache, the fused Pallas serving path
+    (``kernels/attn_lstm_seq.py``) — is inherited via the ``arch``
+    registry; this class only swaps the architecture entry and the default
+    window (attention needs history to attend over)."""
+
+    arch = "attn"
+    PARAM_LEAVES = ARCH_PARAM_LEAVES["attn"]
+
+    def __init__(self, window: int = 8, **kw):
+        super().__init__(window=window, **kw)
+
+
 # ----------------------------------------------------- stacked batching ---
 def lstm_stack_signature(m: "LSTMForecaster") -> tuple:
-    """The architecture attributes that must match for LSTM params to
-    stack on one leading axis — the single definition every stackability
-    check uses (fitting additionally requires a matching ``opt_cfg``)."""
-    return (m.window, m.hidden, m.residual, m.use_pallas)
+    """The architecture attributes that must match for params to stack on
+    one leading axis — the single definition every stackability check uses
+    (fitting additionally requires a matching ``opt_cfg``).  Leads with
+    ``arch`` so different forward bodies (lstm vs attn) can never stack
+    into one dispatch."""
+    return (m.arch, m.window, m.hidden, m.residual, m.use_pallas)
 
 
 def stack_params(models) -> dict:
@@ -310,14 +434,16 @@ def stack_scaler_stats(models) -> tuple[np.ndarray, np.ndarray]:
             np.stack([m.scaler.std for m in models]))
 
 
-def stacked_forward(stacked_params, xs, *, use_pallas: bool = False):
+def stacked_forward(stacked_params, xs, *, use_pallas: bool = False,
+                    arch: str = "lstm"):
     """Pure (unjitted) stacked per-target forward body: pytree with
     leading target axis Z, xs (Z, W, M) -> (Z, M).  Split out of
     ``_lstm_forward_stacked`` so callers that build their own dispatch
     wrapper — the device plane's ``jax.jit``/``shard_map`` programs
     (core/device_plane.py) — trace the SAME math instead of nesting jits.
-    The Pallas path routes through ``ops.lstm_seq_stacked_local`` (the
-    shard_map-compatible entry: local block shapes, no jit boundary).
+    The Pallas path routes through ``ops.lstm_seq_stacked_local`` /
+    ``ops.attn_lstm_seq_stacked_local`` (the shard_map-compatible entries:
+    local block shapes, no jit boundary).
 
     The XLA path elides the first timestep's recurrent terms: with
     h0 = c0 = 0 the ``h @ Wh`` matmul and the ``sigmoid(f) * c`` forget
@@ -328,6 +454,17 @@ def stacked_forward(stacked_params, xs, *, use_pallas: bool = False):
     graph at f32 fusion-rounding level, within forecast parity
     tolerances).  The training path (``lstm_forward``) keeps the plain
     scan so fit losses and gradients are untouched."""
+    if arch == "attn":
+        if use_pallas:
+            from repro.kernels import ops
+            return ops.attn_lstm_seq_stacked_local(
+                stacked_params["Wx1"], stacked_params["Wh1"],
+                stacked_params["b1"], stacked_params["Wa"],
+                stacked_params["Wx2"], stacked_params["Wh2"],
+                stacked_params["b2"], stacked_params["Wo"],
+                stacked_params["bo"], xs)
+        return jax.vmap(lambda p, x: _attn_body(p, x[None])[0])(
+            stacked_params, xs)
     if use_pallas:
         from repro.kernels import ops
         return ops.lstm_seq_stacked_local(
@@ -348,14 +485,16 @@ def stacked_forward(stacked_params, xs, *, use_pallas: bool = False):
     return jax.vmap(fwd)(stacked_params, xs)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def _lstm_forward_stacked(stacked_params, xs, *, use_pallas: bool = False):
+@functools.partial(jax.jit, static_argnames=("use_pallas", "arch"))
+def _lstm_forward_stacked(stacked_params, xs, *, use_pallas: bool = False,
+                          arch: str = "lstm"):
     """stacked_params: pytree with leading target axis Z; xs (Z, W, M) ->
     (Z, M).  One device dispatch for all Z targets: the Pallas path is the
     fused block-batched sequence kernel (per-row weights, batched-GEMV
     gate matmuls, W-step fori_loop in VMEM scratch); the XLA path vmaps
     the scan forward."""
-    return stacked_forward(stacked_params, xs, use_pallas=use_pallas)
+    return stacked_forward(stacked_params, xs, use_pallas=use_pallas,
+                           arch=arch)
 
 
 def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
@@ -370,9 +509,9 @@ def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
     only when a model is (re)fit (tracked via each model's fit generation).
     """
     m0 = models[0]
-    if not all(m.window == m0.window and m.hidden == m0.hidden
-               and m.residual == m0.residual for m in models):
-        raise ValueError("stacked batching needs homogeneous LSTMs")
+    sig = lstm_stack_signature(m0)
+    if not all(lstm_stack_signature(m) == sig for m in models):
+        raise ValueError("stacked batching needs homogeneous models")
     z = np.stack([m.scaler.transform(np.asarray(r, np.float64)[-m0.window:])
                   for m, r in zip(models, recents)])
     key = tuple((id(m), getattr(m, "_fit_count", 0)) for m in models)
@@ -388,7 +527,8 @@ def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
             # otherwise let a fresh model hit a stale cache entry)
             cache["models"] = list(models)
     preds = np.asarray(_lstm_forward_stacked(stacked, jnp.asarray(z),
-                                             use_pallas=m0.use_pallas))
+                                             use_pallas=m0.use_pallas,
+                                             arch=m0.arch))
     if m0.residual:
         preds = z[:, -1] + preds
     means = np.stack([m.scaler.inverse(p)
@@ -397,21 +537,21 @@ def lstm_predict_batch_stacked(models: list["LSTMForecaster"], recents,
 
 
 @functools.partial(jax.jit, static_argnames=("opt_cfg", "epochs",
-                                             "use_pallas"))
+                                             "use_pallas", "arch"))
 def _lstm_fit_stacked(stacked_params, stacked_opt, X, Y, opt_cfg, epochs,
-                      use_pallas=False):
-    """Fit Z independently parameterised LSTMs in ONE dispatch: params/opt
+                      use_pallas=False, arch="lstm"):
+    """Fit Z independently parameterised models in ONE dispatch: params/opt
     state stacked on a leading target axis, X (Z, N, W, M), Y (Z, N, M);
     vmap of the scalar ``_lstm_fit`` epoch scan."""
     def fit_one(p, o, x, y):
-        return _lstm_fit(p, o, x, y, opt_cfg, epochs, use_pallas)
+        return _lstm_fit(p, o, x, y, opt_cfg, epochs, use_pallas, arch)
     return jax.vmap(fit_one)(stacked_params, stacked_opt, X, Y)
 
 
 @functools.partial(jax.jit, static_argnames=("opt_cfg", "epochs",
-                                             "use_pallas"))
+                                             "use_pallas", "arch"))
 def _lstm_fit_stacked_masked(stacked_params, stacked_opt, X, Y, W, opt_cfg,
-                             epochs, use_pallas=False):
+                             epochs, use_pallas=False, arch="lstm"):
     """``_lstm_fit_stacked`` with a per-window weight mask ``W`` (Z, N):
     ragged histories pad their window batches to a common N and zero the
     padding's loss weight, so unequal-length targets still refit in ONE
@@ -420,7 +560,7 @@ def _lstm_fit_stacked_masked(stacked_params, stacked_opt, X, Y, W, opt_cfg,
     whole epoch scan) match the sequential fit."""
     def fit_one(p, o, x, y, w):
         def loss_fn(pp):
-            pred = lstm_forward(pp, x, use_pallas=use_pallas)
+            pred = lstm_forward(pp, x, use_pallas=use_pallas, arch=arch)
             se = jnp.sum(w[:, None] * (pred - y) ** 2)
             return se / (jnp.sum(w) * y.shape[-1])
 
@@ -502,7 +642,7 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
                        for _ in m.members]
         return lstm_fit_batch_stacked(flat, flat_series, from_scratch,
                                       apply)
-    if not models or not all(type(m) is LSTMForecaster for m in models):
+    if not models or not all(isinstance(m, LSTMForecaster) for m in models):
         return None
     m0 = models[0]
     sig = lstm_stack_signature(m0) + (m0.opt_cfg,)
@@ -531,8 +671,8 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
             if scratch:
                 sc = Scaler()
                 sc.fit(s)
-                p = _lstm_init(jax.random.PRNGKey(
-                    getattr(m, "_seed", 0)), N_METRICS, m.hidden, N_METRICS)
+                p = m._init_params(jax.random.PRNGKey(
+                    getattr(m, "_seed", 0)))
             else:
                 sc, p = m.scaler, m.params
             z = sc.transform(s)
@@ -549,7 +689,7 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
             new_p, _, losses = _lstm_fit_stacked(
                 stacked_p, stacked_o, jnp.asarray(np.stack(Xs)),
                 jnp.asarray(np.stack(Ys)), m0.opt_cfg, epochs,
-                m0.use_pallas)
+                m0.use_pallas, m0.arch)
         else:
             # ragged: pad to the longest window batch, mask the padding
             n_max = max(lens)
@@ -562,7 +702,8 @@ def lstm_fit_batch_stacked(models: list["LSTMForecaster"], serieses,
                 Wt[i, :len(x)] = 1.0
             new_p, _, losses = _lstm_fit_stacked_masked(
                 stacked_p, stacked_o, jnp.asarray(Xp), jnp.asarray(Yp),
-                jnp.asarray(Wt), m0.opt_cfg, epochs, m0.use_pallas)
+                jnp.asarray(Wt), m0.opt_cfg, epochs, m0.use_pallas,
+                m0.arch)
         result.add(ms, scalers, new_p, losses)
     return result.apply() if apply else result
 
@@ -693,14 +834,15 @@ class ARIMAD1Forecaster(ARMAForecaster):
 
 
 # -------------------------------------------------------------- ensemble ---
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def _lstm_forward_members(stacked_params, xs, *, use_pallas: bool = False):
+@functools.partial(jax.jit, static_argnames=("use_pallas", "arch"))
+def _lstm_forward_members(stacked_params, xs, *, use_pallas: bool = False,
+                          arch: str = "lstm"):
     """stacked_params: pytree with leading member axis E; xs (E, Z, W, M) ->
     (E, Z, M) — members vmapped, targets on ``lstm_forward``'s own batch
     axis, so E members x Z targets is one device dispatch (on the Pallas
     path each member's fused sequence kernel is batched by the vmap)."""
     def fwd(p, x):
-        return lstm_forward(p, x, use_pallas=use_pallas)
+        return lstm_forward(p, x, use_pallas=use_pallas, arch=arch)
     return jax.vmap(fwd)(stacked_params, xs)
 
 
@@ -742,7 +884,7 @@ class EnsembleForecaster(Forecaster):
         ms = self.members
         m0 = ms[0]
         sig = lstm_stack_signature(m0)
-        if not all(type(m) is LSTMForecaster and m._fitted
+        if not all(isinstance(m, LSTMForecaster) and m._fitted
                    and lstm_stack_signature(m) == sig for m in ms):
             preds = np.stack([m.predict_batch(recents)[0] for m in ms])
             return preds.mean(0), preds.std(0)
@@ -760,7 +902,8 @@ class EnsembleForecaster(Forecaster):
             cache["gens"] = gens
             cache["stacked"] = stack_params(ms)
         preds = np.asarray(_lstm_forward_members(
-            cache["stacked"], jnp.asarray(z), use_pallas=m0.use_pallas))
+            cache["stacked"], jnp.asarray(z), use_pallas=m0.use_pallas,
+            arch=m0.arch))
         if m0.residual:
             preds = z[:, :, -1] + preds
         means = np.stack([m.scaler.inverse(p) for m, p in zip(ms, preds)])
@@ -787,10 +930,13 @@ class EnsembleForecaster(Forecaster):
 
 
 def make_forecaster(kind: str, **kw) -> Forecaster:
-    """The paper's ModelType argument:
-    'lstm' | 'arma' (paper Eq. 3) | 'arima_d1' (beyond-paper) | 'ensemble'."""
+    """The paper's ModelType argument (mirrors ``make_policy``):
+    'lstm' | 'attn' (Attention-Double-LSTM) | 'arma' (paper Eq. 3) |
+    'arima_d1' (beyond-paper) | 'ensemble'."""
     if kind == "lstm":
         return LSTMForecaster(**kw)
+    if kind == "attn":
+        return AttnLSTMForecaster(**kw)
     if kind in ("arma", "arima"):
         return ARMAForecaster(**kw)
     if kind == "arima_d1":

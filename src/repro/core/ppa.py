@@ -38,6 +38,18 @@ class PPAConfig:
     # in FleetController / ShardedControlPlane (the scalar PPA below stays
     # paper-faithful and ignores it)
     guard: GuardrailConfig | None = None
+    # forecaster selection (the paper's ModelType): a ``make_forecaster``
+    # kind plus its constructor kwargs.  Scenario drivers that build one
+    # model per target call ``build_forecaster()`` instead of hard-coding
+    # a class, so switching the zoo entry ("lstm" / "attn" / "arma" /
+    # "arima_d1" / "ensemble") is a config change
+    forecaster: str = "lstm"
+    forecaster_kw: dict = dataclasses.field(default_factory=dict)
+
+    def build_forecaster(self) -> Forecaster:
+        """Instantiate this config's forecaster (``make_forecaster``)."""
+        from repro.core.forecaster import make_forecaster
+        return make_forecaster(self.forecaster, **self.forecaster_kw)
 
 
 class ScaleDownStabilizer:

@@ -1,0 +1,333 @@
+"""Fused block-batched Attention-Double-LSTM *sequence* kernel (Pallas) —
+the second-generation forecast hot path of the PPA control plane.
+
+``lstm_seq.py`` fused the plain whole-window LSTM; this module fuses the
+Attention-Double-LSTM architecture (PAPERS.md, "Mitigating Temporal
+Blindness in Kubernetes Autoscaling"): per block of batch rows, ONE
+``pallas_call`` runs
+
+1. the first LSTM pass over the W-step window, writing every hidden state
+   into a (block_b, W, H) VMEM scratch history next to the (h, c)
+   registers;
+2. window-length temporal attention over that history — the query
+   projection, the scaled-dot scores, the softmax and the reweighted
+   context sequence all stay resident in VMEM (the window is small enough
+   that nothing spills to HBM);
+3. the second LSTM pass over the reweighted sequence plus the ReLU-dense
+   head.
+
+Two layouts, mirroring ``lstm_seq``:
+
+* ``attn_lstm_seq``          — shared weights: xs (B, W, M) -> (B, n_out);
+  gate/attention matmuls are plain GEMMs on the MXU;
+* ``attn_lstm_seq_stacked``  — per-row weights with a leading target axis:
+  xs (Z, W, M), every param leaf (Z, ...) -> (Z, n_out); matmuls are
+  batched GEMVs via ``dot_general`` (Z independently trained per-target
+  forecasters in ONE dispatch).
+
+Both carry the checkpoint-style ``jax.custom_vjp``: the forward saves only
+its inputs and the backward replays the pure-jnp reference
+(``ref.attn_lstm_seq``) under ``jax.vjp`` — gradients are exactly those of
+the non-Pallas formulation, so the fit paths (``_lstm_fit`` /
+``lstm_fit_batch_stacked``) train through the kernel unchanged.  On CPU the
+kernels run with ``interpret=True`` (CI parity vs ``ref.py``); on TPU they
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import compat, ref
+
+# dot_general dims for per-row weights: (bb, K) x (bb, K, N) -> (bb, N)
+_BATCHED_GEMV = (((1,), (1,)), ((0,), (0,)))
+
+
+def _gates(c, gx, gh, b, *, hidden):
+    """Shared gate math: pre-activations -> (h', c') in f32."""
+    gates = gx + gh + b
+    i = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    c2 = f * c + i * g
+    return o * jnp.tanh(c2), c2
+
+
+def _attn_seq_kernel(xs_ref, wx1_ref, wh1_ref, b1_ref, wa_ref, wx2_ref,
+                     wh2_ref, b2_ref, wo_ref, bo_ref, out_ref,
+                     h_ref, c_ref, hs_ref, *, window, hidden):
+    """Shared-weights block: xs (bb, W, M); weights whole in VMEM; the
+    hidden-state history, attention scores/softmax and reweighted context
+    never leave VMEM."""
+    h_ref[...] = jnp.zeros_like(h_ref)
+    c_ref[...] = jnp.zeros_like(c_ref)
+    xs = xs_ref[...].astype(jnp.float32)
+    wx1 = wx1_ref[...]
+    wh1 = wh1_ref[...]
+    b1 = b1_ref[...].astype(jnp.float32)
+    wx2 = wx2_ref[...]
+    wh2 = wh2_ref[...]
+    b2 = b2_ref[...].astype(jnp.float32)
+
+    def step1(t, carry):
+        x = jax.lax.dynamic_index_in_dim(xs, t, axis=1, keepdims=False)
+        gx = jax.lax.dot(x, wx1, preferred_element_type=jnp.float32)
+        gh = jax.lax.dot(h_ref[...], wh1,
+                         preferred_element_type=jnp.float32)
+        h2, c2 = _gates(c_ref[...], gx, gh, b1, hidden=hidden)
+        h_ref[...] = h2
+        c_ref[...] = c2
+        hs_ref[:, pl.ds(t, 1), :] = h2[:, None, :]
+        return carry
+
+    jax.lax.fori_loop(0, window, step1, 0)
+
+    # temporal attention over the in-VMEM hidden history
+    hs = hs_ref[...]                                     # (bb, W, H)
+    q = jax.lax.dot(h_ref[...], wa_ref[...],
+                    preferred_element_type=jnp.float32)  # (bb, H)
+    scores = jnp.sum(hs * q[:, None, :], axis=-1) * (hidden ** -0.5)
+    alpha = jax.nn.softmax(scores, axis=-1)              # (bb, W)
+    ctx = alpha[:, :, None] * hs                         # (bb, W, H)
+
+    # second LSTM pass over the reweighted sequence (reuse (h, c) scratch)
+    h_ref[...] = jnp.zeros_like(h_ref)
+    c_ref[...] = jnp.zeros_like(c_ref)
+
+    def step2(t, carry):
+        a = jax.lax.dynamic_index_in_dim(ctx, t, axis=1, keepdims=False)
+        gx = jax.lax.dot(a, wx2, preferred_element_type=jnp.float32)
+        gh = jax.lax.dot(h_ref[...], wh2,
+                         preferred_element_type=jnp.float32)
+        h2, c2 = _gates(c_ref[...], gx, gh, b2, hidden=hidden)
+        h_ref[...] = h2
+        c_ref[...] = c2
+        return carry
+
+    jax.lax.fori_loop(0, window, step2, 0)
+    head = jax.lax.dot(jax.nn.relu(h_ref[...]), wo_ref[...],
+                       preferred_element_type=jnp.float32)
+    out_ref[...] = (head + bo_ref[...].astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+def _attn_seq_stacked_kernel(xs_ref, wx1_ref, wh1_ref, b1_ref, wa_ref,
+                             wx2_ref, wh2_ref, b2_ref, wo_ref, bo_ref,
+                             out_ref, h_ref, c_ref, hs_ref,
+                             *, window, hidden):
+    """Per-row-weights block: xs (bb, W, M), weight leaves (bb, ...); gate,
+    query and head matmuls are batched GEMVs (one MXU dispatch per block,
+    not one per target)."""
+    h_ref[...] = jnp.zeros_like(h_ref)
+    c_ref[...] = jnp.zeros_like(c_ref)
+    xs = xs_ref[...].astype(jnp.float32)
+    wx1 = wx1_ref[...]
+    wh1 = wh1_ref[...]
+    b1 = b1_ref[...].astype(jnp.float32)
+    wx2 = wx2_ref[...]
+    wh2 = wh2_ref[...]
+    b2 = b2_ref[...].astype(jnp.float32)
+
+    def step1(t, carry):
+        x = jax.lax.dynamic_index_in_dim(xs, t, axis=1, keepdims=False)
+        gx = jax.lax.dot_general(x, wx1, _BATCHED_GEMV,
+                                 preferred_element_type=jnp.float32)
+        gh = jax.lax.dot_general(h_ref[...], wh1, _BATCHED_GEMV,
+                                 preferred_element_type=jnp.float32)
+        h2, c2 = _gates(c_ref[...], gx, gh, b1, hidden=hidden)
+        h_ref[...] = h2
+        c_ref[...] = c2
+        hs_ref[:, pl.ds(t, 1), :] = h2[:, None, :]
+        return carry
+
+    jax.lax.fori_loop(0, window, step1, 0)
+
+    hs = hs_ref[...]                                     # (bb, W, H)
+    q = jax.lax.dot_general(h_ref[...], wa_ref[...], _BATCHED_GEMV,
+                            preferred_element_type=jnp.float32)
+    scores = jnp.sum(hs * q[:, None, :], axis=-1) * (hidden ** -0.5)
+    alpha = jax.nn.softmax(scores, axis=-1)
+    ctx = alpha[:, :, None] * hs
+
+    h_ref[...] = jnp.zeros_like(h_ref)
+    c_ref[...] = jnp.zeros_like(c_ref)
+
+    def step2(t, carry):
+        a = jax.lax.dynamic_index_in_dim(ctx, t, axis=1, keepdims=False)
+        gx = jax.lax.dot_general(a, wx2, _BATCHED_GEMV,
+                                 preferred_element_type=jnp.float32)
+        gh = jax.lax.dot_general(h_ref[...], wh2, _BATCHED_GEMV,
+                                 preferred_element_type=jnp.float32)
+        h2, c2 = _gates(c_ref[...], gx, gh, b2, hidden=hidden)
+        h_ref[...] = h2
+        c_ref[...] = c2
+        return carry
+
+    jax.lax.fori_loop(0, window, step2, 0)
+    head = jax.lax.dot_general(jax.nn.relu(h_ref[...]), wo_ref[...],
+                               _BATCHED_GEMV,
+                               preferred_element_type=jnp.float32)
+    out_ref[...] = (head + bo_ref[...].astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+def _pad_rows(arrs, pad: int):
+    if not pad:
+        return arrs
+    return [jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+            for a in arrs]
+
+
+def _attn_seq_pallas(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                     *, block_b, interpret):
+    B, W, M = xs.shape
+    H = Wh1.shape[0]
+    n_out = Wo.shape[1]
+    if B == 0:          # empty batch: match the scan path's contract
+        return jnp.zeros((0, n_out), xs.dtype)
+    block_b = max(min(block_b, B), 1)
+    pad = (-B) % block_b
+    xs, = _pad_rows([xs], pad)
+    nb = xs.shape[0] // block_b
+    kernel = functools.partial(_attn_seq_kernel, window=W, hidden=H)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, W, M), lambda i: (i, 0, 0)),
+            pl.BlockSpec((M, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda i: (0,)),
+            pl.BlockSpec((H, H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda i: (0,)),
+            pl.BlockSpec((H, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xs.shape[0], n_out), xs.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, H), jnp.float32),
+                        pltpu.VMEM((block_b, H), jnp.float32),
+                        pltpu.VMEM((block_b, W, H), jnp.float32)],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xs, Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo)
+    return out[:B]
+
+
+def _attn_seq_stacked_pallas(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                             *, block_b, interpret):
+    Z, W, M = xs.shape
+    H = Wh1.shape[1]
+    n_out = Wo.shape[2]
+    if Z == 0:          # empty batch: match the vmap path's contract
+        return jnp.zeros((0, n_out), xs.dtype)
+    block_b = max(min(block_b, Z), 1)
+    pad = (-Z) % block_b
+    xs, Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo = _pad_rows(
+        [xs, Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo], pad)
+    nb = xs.shape[0] // block_b
+    kernel = functools.partial(_attn_seq_stacked_kernel, window=W, hidden=H)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, W, M), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, M, 4 * H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, H, 4 * H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, 4 * H), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, H, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, H, 4 * H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, H, 4 * H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, 4 * H), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, H, n_out), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xs.shape[0], n_out), xs.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, H), jnp.float32),
+                        pltpu.VMEM((block_b, H), jnp.float32),
+                        pltpu.VMEM((block_b, W, H), jnp.float32)],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xs, Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo)
+    return out[:Z]
+
+
+# ------------------------------------------------------------- autodiff ---
+# Checkpoint-style custom VJP, identical in shape to lstm_seq's: forward =
+# the fused kernel, residuals = the raw inputs, backward = jax.vjp over the
+# pure-jnp reference — no hand-written backward kernel, gradients exactly
+# the non-Pallas formulation's.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11))
+def _attn_seq_vjp(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                  block_b, interpret):
+    return _attn_seq_pallas(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                            block_b=block_b, interpret=interpret)
+
+
+def _attn_seq_fwd(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                  block_b, interpret):
+    out = _attn_seq_pallas(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                           block_b=block_b, interpret=interpret)
+    return out, (Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs)
+
+
+def _attn_seq_bwd(block_b, interpret, res, g):
+    _, vjp = jax.vjp(ref.attn_lstm_seq, *res)
+    return vjp(g)
+
+
+_attn_seq_vjp.defvjp(_attn_seq_fwd, _attn_seq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11))
+def _attn_seq_stacked_vjp(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                          block_b, interpret):
+    return _attn_seq_stacked_pallas(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo,
+                                    xs, block_b=block_b, interpret=interpret)
+
+
+def _attn_seq_stacked_fwd(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                          block_b, interpret):
+    out = _attn_seq_stacked_pallas(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo,
+                                   xs, block_b=block_b, interpret=interpret)
+    return out, (Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs)
+
+
+def _attn_seq_stacked_bwd(block_b, interpret, res, g):
+    _, vjp = jax.vjp(ref.attn_lstm_seq_stacked, *res)
+    return vjp(g)
+
+
+_attn_seq_stacked_vjp.defvjp(_attn_seq_stacked_fwd, _attn_seq_stacked_bwd)
+
+
+# --------------------------------------------------------------- public ---
+def attn_lstm_seq(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                  *, block_b: int = 128, interpret: bool = False):
+    """xs (B, W, M); Wx1 (M, 4H); Wh1/Wh2 (H, 4H); Wa (H, H); Wx2 (H, 4H);
+    b1/b2 (4H,); Wo (H, n_out); bo (n_out,) -> (B, n_out).  Whole-window
+    Attention-Double-LSTM + ReLU-dense head, one fused kernel;
+    differentiable (checkpoint-style custom VJP)."""
+    return _attn_seq_vjp(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                         block_b, interpret)
+
+
+def attn_lstm_seq_stacked(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs,
+                          *, block_b: int = 32, interpret: bool = False):
+    """Per-target layout: xs (Z, W, M) and a leading Z axis on every weight
+    leaf -> (Z, n_out).  Z independently parameterised Attention-Double-
+    LSTMs answered by ONE fused kernel (batched-GEMV matmuls per block)."""
+    return _attn_seq_stacked_vjp(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo,
+                                 xs, block_b, interpret)

@@ -124,6 +124,66 @@ def lstm_seq_stacked(Wx, Wh, b, Wo, bo, xs):
     return jax.vmap(one)(Wx, Wh, b, Wo, bo, xs)
 
 
+def attn_lstm_seq(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs):
+    """Attention-Double-LSTM forward (the temporal-attention forecaster,
+    PAPERS.md "Mitigating Temporal Blindness"): xs (B, W, M) -> (B, n_out).
+
+    Three stages, op-for-op the forecaster's non-Pallas ``_attn_body`` (so
+    the fused kernel's custom-VJP backward, which replays this under
+    ``jax.vjp``, yields exactly the non-Pallas gradients):
+
+    1. first LSTM scan over the window, keeping every hidden state
+       ``hs`` (B, W, H);
+    2. window-length temporal attention: query = final hidden state
+       projected by ``Wa``; scores = scaled dot against each ``hs``
+       step; softmax over the window; the attention weights reweight the
+       hidden sequence (the per-step context);
+    3. second LSTM scan over the reweighted sequence + ReLU-dense head.
+    """
+    B = xs.shape[0]
+    H = Wh1.shape[0]
+    h = jnp.zeros((B, H))
+    c = jnp.zeros((B, H))
+
+    def step1(carry, x):
+        h, c = carry
+        gates = x @ Wx1 + h @ Wh1 + b1
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (h1, _), hs = jax.lax.scan(step1, (h, c), jnp.swapaxes(xs, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)                      # (B, W, H)
+    q = h1 @ Wa                                      # (B, H)
+    scores = jnp.sum(hs * q[:, None, :], axis=-1) * (H ** -0.5)
+    alpha = jax.nn.softmax(scores, axis=-1)          # (B, W)
+    ctx = alpha[:, :, None] * hs                     # reweighted sequence
+
+    h = jnp.zeros((B, H))
+    c = jnp.zeros((B, H))
+
+    def step2(carry, a):
+        h, c = carry
+        gates = a @ Wx2 + h @ Wh2 + b2
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    (h2, _), _ = jax.lax.scan(step2, (h, c), jnp.swapaxes(ctx, 0, 1))
+    return jax.nn.relu(h2) @ Wo + bo
+
+
+def attn_lstm_seq_stacked(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs):
+    """Per-target layout: xs (Z, W, M), every weight leaf with a leading Z
+    axis -> (Z, n_out) — the vmapped-per-target oracle."""
+    def one(wx1, wh1, bb1, wa, wx2, wh2, bb2, wo, bo_, x):
+        return attn_lstm_seq(wx1, wh1, bb1, wa, wx2, wh2, bb2, wo, bo_,
+                             x[None])[0]
+    return jax.vmap(one)(Wx1, Wh1, b1, Wa, Wx2, Wh2, b2, Wo, bo, xs)
+
+
 def rmsnorm(x, w, eps=1e-6):
     """x (R, D), w (D,) -> (R, D)."""
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)

@@ -1,0 +1,335 @@
+"""Fused Attention-Double-LSTM sequence kernel (DESIGN.md §11).
+
+Parity obligations, all in interpret mode on CPU — the same contract as
+``test_lstm_seq.py`` but for the second-generation forecast kernel
+(LSTM-1 -> window-length temporal attention -> LSTM-2 -> ReLU head, all
+inside ONE ``pallas_call``):
+
+* forward — ``ops.attn_lstm_seq`` / ``ops.attn_lstm_seq_stacked`` == the
+  ``ref.py`` oracles == the forecaster's non-Pallas ``_attn_body`` path,
+  over random shapes including ragged batch blocks;
+* gradients — the checkpoint-style custom VJP (backward replays
+  ``ref.attn_lstm_seq``) reproduces the non-Pallas gradients;
+* fit — ``lstm_fit_batch_stacked`` over ``AttnLSTMForecaster`` rows with
+  ``use_pallas=True`` lands on the same params/losses as the plain path;
+* plane — ``ShardedControlPlane(use_pallas=True, device_mesh=D)`` with
+  attention forecasters is bitwise invariant across D in {1, 2, 8}
+  (subprocess, forced host devices).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.forecaster import (AttnLSTMForecaster, LSTMForecaster,
+                                   _lstm_forward_stacked, lstm_forward,
+                                   lstm_fit_batch_stacked,
+                                   lstm_stack_signature, make_forecaster)
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(17)
+
+LEAVES = ("Wx1", "Wh1", "b1", "Wa", "Wx2", "Wh2", "b2", "Wo", "bo")
+
+
+def _rand(*s, scale=0.3):
+    return jnp.asarray(RNG.normal(0, scale, s), jnp.float32)
+
+
+def _shared_params(M, H, n_out):
+    return (_rand(M, 4 * H), _rand(H, 4 * H), _rand(4 * H),   # LSTM-1
+            _rand(H, H),                                      # attention Wa
+            _rand(H, 4 * H), _rand(H, 4 * H), _rand(4 * H),   # LSTM-2
+            _rand(H, n_out), _rand(n_out))                    # ReLU head
+
+
+def _stacked_params(Z, M, H, n_out):
+    return (_rand(Z, M, 4 * H), _rand(Z, H, 4 * H), _rand(Z, 4 * H),
+            _rand(Z, H, H),
+            _rand(Z, H, 4 * H), _rand(Z, H, 4 * H), _rand(Z, 4 * H),
+            _rand(Z, H, n_out), _rand(Z, n_out))
+
+
+def _dict_params(M, H, n_out):
+    return dict(zip(LEAVES, _shared_params(M, H, n_out)))
+
+
+# ------------------------------------------------------------- forward ----
+@settings(max_examples=15, deadline=None)
+@given(B=st.integers(1, 40), W=st.integers(1, 6), M=st.integers(1, 8),
+       H=st.integers(1, 24), block_b=st.sampled_from([1, 3, 8, 16]))
+def test_attn_forward_matches_ref(B, W, M, H, block_b):
+    """Shared-weights layout, ragged batch blocks included (B need not
+    divide block_b — padded rows are computed and sliced off)."""
+    p = _shared_params(M, H, M)
+    xs = _rand(B, W, M, scale=1.0)
+    got = ops.attn_lstm_seq(*p, xs, block_b=block_b)
+    want = ref.attn_lstm_seq(*p, xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(Z=st.integers(1, 33), W=st.integers(1, 6), M=st.integers(1, 8),
+       H=st.integers(1, 24), block_b=st.sampled_from([1, 4, 8]))
+def test_attn_stacked_forward_matches_ref(Z, W, M, H, block_b):
+    """Per-target layout: Z independently parameterised rows (batched-GEMV
+    gate matmuls, per-row attention), one kernel."""
+    p = _stacked_params(Z, M, H, M)
+    xs = _rand(Z, W, M, scale=1.0)
+    got = ops.attn_lstm_seq_stacked(*p, xs, block_b=block_b)
+    want = ref.attn_lstm_seq_stacked(*p, xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_attn_forward_matches_ref_fixed_shapes():
+    """Deterministic ref-oracle parity (runs even without hypothesis):
+    both layouts, a ragged block (B=11, block_b=4 -> pad 1) included."""
+    p = _shared_params(5, 12, 5)
+    xs = _rand(11, 4, 5, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(ops.attn_lstm_seq(*p, xs, block_b=4)),
+        np.asarray(ref.attn_lstm_seq(*p, xs)), rtol=1e-6, atol=1e-6)
+    sp = _stacked_params(7, 5, 12, 5)
+    zxs = _rand(7, 4, 5, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(ops.attn_lstm_seq_stacked(*sp, zxs, block_b=3)),
+        np.asarray(ref.attn_lstm_seq_stacked(*sp, zxs)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_attn_matches_forward_both_layouts():
+    """The forecaster entry points: lstm_forward(arch='attn') and
+    _lstm_forward_stacked(arch='attn') — Pallas == non-Pallas."""
+    params = _dict_params(5, 24, 5)
+    xs = _rand(37, 4, 5, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(lstm_forward(params, xs, use_pallas=True, arch="attn")),
+        np.asarray(lstm_forward(params, xs, use_pallas=False, arch="attn")),
+        rtol=1e-5, atol=1e-6)
+    stacked = jax.tree.map(lambda leaf: jnp.stack([leaf] * 3), params)
+    # perturb so the Z rows are genuinely distinct
+    stacked = jax.tree.map(
+        lambda leaf: leaf * jnp.arange(1, 4).reshape(
+            (3,) + (1,) * (leaf.ndim - 1)), stacked)
+    zxs = _rand(3, 4, 5, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(_lstm_forward_stacked(stacked, zxs, use_pallas=True,
+                                         arch="attn")),
+        np.asarray(_lstm_forward_stacked(stacked, zxs, use_pallas=False,
+                                         arch="attn")),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_attn_empty_batch():
+    """B=0 / Z=0 return empty outputs like the scan/vmap paths."""
+    p = _shared_params(5, 12, 5)
+    assert np.asarray(
+        ops.attn_lstm_seq(*p, jnp.zeros((0, 4, 5)))).shape == (0, 5)
+    sp = _stacked_params(0, 5, 12, 5)
+    assert np.asarray(
+        ops.attn_lstm_seq_stacked(*sp, jnp.zeros((0, 4, 5)))).shape == (0, 5)
+
+
+def test_attn_public_kernel_exports():
+    """kernels/__init__.py exposes the jitted entry points under their
+    public names (the submodule-name collision is resolved in favour of
+    the callables)."""
+    import repro.kernels as K
+    assert K.attn_lstm_seq is ops.attn_lstm_seq
+    assert K.attn_lstm_seq_stacked is ops.attn_lstm_seq_stacked
+    assert K.lstm_seq is ops.lstm_seq
+    assert callable(K.lstm_seq_stacked)
+
+
+# ------------------------------------------------------------ gradients ----
+def test_attn_gradients_match_non_pallas():
+    """The custom VJP replays the jnp reference, so grads equal the
+    non-Pallas ``_attn_body``'s — params and inputs both.  atol=1e-6: the
+    deeper attn graph reassociates more under jit than the plain LSTM."""
+    params = _dict_params(5, 20, 5)
+    xs = _rand(13, 4, 5, scale=1.0)
+    y = _rand(13, 5, scale=1.0)
+
+    def loss(p, x, use_pallas):
+        pred = lstm_forward(p, x, use_pallas=use_pallas, arch="attn")
+        return jnp.mean((pred - y) ** 2)
+
+    gp_t, gx_t = jax.grad(loss, argnums=(0, 1))(params, xs, True)
+    gp_f, gx_f = jax.grad(loss, argnums=(0, 1))(params, xs, False)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(gp_t[k]), np.asarray(gp_f[k]),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gx_t), np.asarray(gx_f),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------- fit path ----
+def _series(n, i=0):
+    rng = np.random.default_rng(200 + i)
+    return np.abs(rng.normal(200, 40, (n, 5)))
+
+
+@settings(max_examples=5, deadline=None)
+@given(lens=st.lists(st.integers(14, 30), min_size=2, max_size=4),
+       epochs=st.integers(2, 6))
+def test_attn_fit_batch_stacked_pallas_matches_plain(lens, epochs):
+    """lstm_fit_batch_stacked over AttnLSTMForecaster rows with
+    use_pallas=True == the non-Pallas stacked fit, ragged pad-and-mask
+    histories included — the stacked protocol is genuinely model-generic."""
+    serieses = [_series(n, i) for i, n in enumerate(lens)]
+
+    def mk(up):
+        return [AttnLSTMForecaster(window=4, epochs=epochs, seed=i,
+                                   use_pallas=up) for i in range(len(lens))]
+
+    ms_f, ms_t = mk(False), mk(True)
+    assert lstm_fit_batch_stacked(ms_f, serieses, from_scratch=True)
+    assert lstm_fit_batch_stacked(ms_t, serieses, from_scratch=True)
+    for a, b in zip(ms_f, ms_t):
+        np.testing.assert_allclose(a.last_losses, b.last_losses,
+                                   rtol=1e-4, atol=1e-6)
+        for k in a.params:
+            np.testing.assert_allclose(np.asarray(a.params[k]),
+                                       np.asarray(b.params[k]),
+                                       rtol=2e-4, atol=2e-5)
+
+
+def test_attn_sequential_fit_and_predict_pallas_parity():
+    """AttnLSTMForecaster(use_pallas=True): fit + predict + predict_batch
+    all ride the fused kernel and match the non-Pallas model."""
+    s = _series(42)
+    a = AttnLSTMForecaster(window=4, epochs=8, seed=3)
+    b = AttnLSTMForecaster(window=4, epochs=8, seed=3, use_pallas=True)
+    a.fit(s, from_scratch=True)
+    b.fit(s, from_scratch=True)
+    pa, _ = a.predict(s[-4:])
+    pb, _ = b.predict(s[-4:])
+    np.testing.assert_allclose(pa, pb, rtol=1e-4, atol=1e-5)
+    recents = np.stack([s[-4:], s[-8:-4], s[-12:-8]])
+    np.testing.assert_allclose(a.predict_batch(recents)[0],
+                               b.predict_batch(recents)[0],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- zoo/plane ----
+def test_make_forecaster_attn_and_stack_signature():
+    """'attn' is a zoo entry; its stack signature leads with the arch so
+    attn and lstm rows can never stack into one fused dispatch."""
+    m = make_forecaster("attn", window=4, hidden=8, seed=0)
+    assert isinstance(m, AttnLSTMForecaster)
+    assert isinstance(m, LSTMForecaster)          # joins the LSTM protocol
+    assert m.arch == "attn"
+    assert set(m.PARAM_LEAVES) == set(LEAVES)
+    assert set(m.params) == set(LEAVES)
+    ls = make_forecaster("lstm", window=4, hidden=8, seed=0)
+    assert lstm_stack_signature(m) != lstm_stack_signature(ls)
+    # mixed-architecture batches fall back (no stacked fit)
+    assert not lstm_fit_batch_stacked([m, ls], [_series(30), _series(30, 1)],
+                                      from_scratch=True)
+
+
+def test_attn_sharded_plane_matches_scalar_controller():
+    """A pallas-backed attn plane (fused gang dispatch) makes the same
+    decisions as the scalar per-target FleetController."""
+    from repro.core import (FleetController, PPAConfig, ShardedControlPlane,
+                            Snapshot, TargetSpec, ThresholdPolicy)
+    from repro.core.metrics import N_METRICS
+
+    def specs():
+        out = []
+        for i in range(6):
+            m = AttnLSTMForecaster(window=2, hidden=6, epochs=3, seed=i,
+                                   use_pallas=True)
+            out.append(TargetSpec(f"t{i}", ThresholdPolicy(100.0, 1),
+                                  model=m))
+        return out
+
+    cfg = PPAConfig(threshold=100.0, stabilization_s=60.0)
+    plane = ShardedControlPlane(cfg, specs(), n_shards=2,
+                                coalesce_dispatch=False)
+    ctrl = FleetController(cfg, specs())
+    rng = np.random.default_rng(5)
+    t = 0.0
+    for _ in range(8):
+        t += 15.0
+        rows = rng.uniform(50.0, 300.0, (6, N_METRICS))
+        plane.observe_batch(t, rows)
+        for i, n in enumerate(ctrl.targets):
+            ctrl.observe(n, Snapshot(t, rows[i]))
+        rp = plane.control_step(t, 32, 2)
+        rc = ctrl.control_step(t, 32, 2)
+        assert [rp[n].replicas for n in rp] == [rc[n].replicas for n in rc]
+    plane.shutdown()
+
+
+_CHILD = r"""
+import hashlib, json
+import numpy as np
+from repro.core import (PPAConfig, ShardedControlPlane, TargetSpec,
+                        ThresholdPolicy)
+from repro.core.forecaster import AttnLSTMForecaster, Scaler
+from repro.core.metrics import N_METRICS
+
+Z, W, H, S = 16, 2, 8, 4
+
+def fab_targets():
+    base = AttnLSTMForecaster(window=W, hidden=H, seed=3, use_pallas=True)
+    rng = np.random.default_rng(103)
+    means = rng.uniform(50.0, 300.0, (Z, N_METRICS))
+    stds = 0.1 * means + 1.0
+    out = []
+    for i in range(Z):
+        m = AttnLSTMForecaster.__new__(AttnLSTMForecaster)
+        m.__dict__.update(base.__dict__)
+        m.params = {k: v * (1.0 + 0.01 * i) for k, v in base.params.items()}
+        sc = Scaler(); sc.mean, sc.std, sc.fitted = means[i], stds[i], True
+        m.scaler = sc; m._fitted, m._fit_count = True, 1
+        m._valid_cache = (1, True)
+        out.append(TargetSpec(f"t{i}", ThresholdPolicy(100.0, 1), model=m))
+    return out
+
+rng = np.random.default_rng(11)
+rows_seq = [rng.uniform(50.0, 300.0, (Z, N_METRICS)) for _ in range(5)]
+
+def digest(D):
+    plane = ShardedControlPlane(
+        PPAConfig(threshold=100.0, stabilization_s=60.0), fab_targets(),
+        n_shards=S, coalesce_dispatch=False, device_mesh=D)
+    h = hashlib.sha256()
+    t = 0.0
+    for rows in rows_seq:
+        t += 15.0
+        plane.observe_batch(t, rows)
+        res = plane.control_step(t, 32, 2)
+        for n in res:
+            r = res[n]
+            h.update(np.int64(r.replicas).tobytes())
+            h.update(np.float64(r.key_metric).tobytes())
+            if r.raw_prediction is not None:
+                h.update(np.asarray(r.raw_prediction).tobytes())
+    plane.shutdown()
+    return h.hexdigest()
+
+cells = {f"D{D}": digest(D) for D in (1, 2, 8)}
+print("DIGESTS=" + json.dumps(cells))
+"""
+
+
+def test_attn_device_count_bitwise_invariance(forced_devices_runner):
+    """ShardedControlPlane(use_pallas=True, device_mesh=D) with attention
+    forecasters: tick results bitwise identical across D in {1, 2, 8} —
+    per-target rows are independent, so the mesh partition (and the fused
+    attn kernel's block boundaries inside each shard) cannot change
+    numerics."""
+    out = forced_devices_runner(_CHILD)
+    line = next(ln for ln in out.splitlines() if ln.startswith("DIGESTS="))
+    cells = json.loads(line[len("DIGESTS="):])
+    assert len(cells) == 3
+    vals = set(cells.values())
+    assert len(vals) == 1, f"digest mismatch across device counts: {cells}"

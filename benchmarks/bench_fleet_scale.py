@@ -17,6 +17,15 @@ Five claims are measured (the PRs' acceptance bars):
    by >= 3x at P = 10^4, placements identical.
 5. **Serving drain** — the windowed batch ``ServingFleet`` must beat
    per-event dispatch by >= 2x events/sec on a fleet-sized request trace.
+6. **Federation tick** — the columnar ``MultiFleetSim`` tick + vectorised
+   arbiter (DESIGN.md §12) vs the retained scalar dict loop at F = 64
+   fleets, allocation sequence asserted bitwise-identical; plus the
+   arbiter's scalar-vs-batch microbench at F = 1024.
+7. **Digital twin** — real-time factor (sim-seconds per wall-second) of
+   the full plane+fleet closed loop at 10^4 / 10^5 / 10^6 pods across 64
+   fleets, prefit forecaster live, streaming completion logs above the
+   pod threshold; the full lane requires RTF >= 1 at 10^5 pods and a
+   completed 10^6-pod run.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_fleet_scale [--smoke]
          [--check-baseline benchmarks/baselines/fleet_scale_baseline.json]
@@ -297,6 +306,173 @@ def bench_serving_drain(
     return out
 
 
+def _federation_sim(F: int, budget: int, columnar: bool, batch: bool = True,
+                    n_shards: int = 4, min_replicas: int = 1,
+                    chips_per: int = 16, model=None, seed0: int = 0):
+    """F fleets under one ShardedControlPlane + arbiter (DESIGN.md §12)."""
+    from repro.core import ARIMAD1Forecaster, PPAConfig, ThresholdPolicy
+    from repro.core.control_plane import ShardedControlPlane
+    from repro.core.controller import TargetSpec
+    from repro.serving.fleet import FleetConfig
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+
+    specs = [
+        FleetSpec(f"fleet-{i}", FleetConfig(
+            total_chips=budget, chips_per_replica=chips_per, seed=seed0 + i))
+        for i in range(F)
+    ]
+    # low threshold -> demands outrun the budget, so every tick exercises
+    # the arbiter's weighted-contention branch, not just the floor grant
+    plane = ShardedControlPlane(
+        PPAConfig(threshold=100.0, stabilization_s=0.0),
+        [TargetSpec(s.name, ThresholdPolicy(100.0, 1),
+                    min_replicas=min_replicas) for s in specs],
+        model=model or ARIMAD1Forecaster(),
+        n_shards=n_shards, async_ticks=True)
+    return MultiFleetSim(specs, budget, plane, batch=batch,
+                         columnar=columnar)
+
+
+def _federation_requests(F: int, t_end: float, rate: float, seed: int = 0):
+    from repro.workloads import poisson_arrivals
+
+    rng = np.random.default_rng(seed)
+    reqs = {}
+    for i in range(F):
+        arr = poisson_arrivals(rate, t_end, WINDOW_S, seed=seed + 100 + i)
+        reqs[f"fleet-{i}"] = (
+            arr.times, rng.integers(16, 64, len(arr.times)).astype(float))
+    return reqs
+
+
+def bench_federation_tick(F: int = 64, t_end: float = 600.0) -> dict:
+    """Columnar federation tick vs the retained scalar dict loop on the
+    same F-fleet seeded workload (bitwise allocation parity asserted),
+    plus the arbiter's scalar-vs-batch microbench at F=1024."""
+    from repro.serving.multi_fleet import ChipBudgetArbiter
+
+    budget = F * 3 * 16           # ~3 replicas per fleet under contention
+    reqs = _federation_requests(F, t_end, rate=3.0)
+    n_ticks = len(np.arange(WINDOW_S, t_end, WINDOW_S))
+
+    sims, walls = {}, {}
+    for key, columnar in (("scalar", False), ("columnar", True)):
+        sim = _federation_sim(F, budget, columnar)
+        t0 = time.perf_counter()
+        sim.run(reqs, t_end)
+        walls[key] = time.perf_counter() - t0
+        sims[key] = sim
+    identical = (sims["scalar"].alloc_log == sims["columnar"].alloc_log
+                 and sims["scalar"].usage_log == sims["columnar"].usage_log)
+
+    # arbiter microbench: one contended allocation at F=1024, both paths
+    rng = np.random.default_rng(0)
+    Fa = 1024
+    names = [f"f{i}" for i in range(Fa)]
+    d = rng.integers(1, 12, Fa)
+    c = np.full(Fa, 16, np.int64)
+    fl = np.ones(Fa, np.int64)
+    w = rng.uniform(0.5, 4.0, Fa)
+    arb = ChipBudgetArbiter(int(d.sum()) * 8)
+    dd = {n: int(x) for n, x in zip(names, d)}
+    cd = {n: 16 for n in names}
+    fd = {n: 1 for n in names}
+    wd = {n: float(x) for n, x in zip(names, w)}
+    reps = 50
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        arb.allocate(dd, cd, fd, wd)
+    wall_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        arb.allocate_batch(d, c, fl, w)
+    wall_b = (time.perf_counter() - t0) / reps
+
+    out = {
+        "F": F,
+        "sim_s": t_end,
+        "n_ticks": n_ticks,
+        "events": int(sum(len(t) for t, _ in reqs.values())),
+        "wall_s_scalar": walls["scalar"],
+        "wall_s_columnar": walls["columnar"],
+        "ticks_per_s_scalar": n_ticks / walls["scalar"],
+        "ticks_per_s_columnar": n_ticks / walls["columnar"],
+        "fleet_ticks_per_s": F * n_ticks / walls["columnar"],
+        "speedup": walls["scalar"] / walls["columnar"],
+        "identical": bool(identical),
+        "arbiter_F": Fa,
+        "arbiter_us_scalar": wall_s * 1e6,
+        "arbiter_us_batch": wall_b * 1e6,
+        "arbiter_speedup": wall_s / wall_b,
+    }
+    csv_row(
+        f"federation_tick_F{F}",
+        walls["columnar"] * 1e6,
+        f"{out['fleet_ticks_per_s']:,.0f} fleet-ticks/s columnar = "
+        f"{out['speedup']:.1f}x scalar, identical={identical}; arbiter "
+        f"F={Fa}: {out['arbiter_speedup']:.1f}x",
+    )
+    return out
+
+
+# digital-twin sweep: (P, sim seconds, offered load fraction) — horizons
+# shrink with P so the full sweep stays tractable while every point still
+# spans multiple control windows
+DT_FULL = [(10_000, 600.0, 0.05), (100_000, 300.0, 0.05),
+           (1_000_000, 60.0, 0.03)]
+DT_SMOKE = [(10_000, 300.0, 0.05)]
+
+
+def bench_digital_twin(P: int, t_end: float, load: float,
+                       F: int = 64) -> dict:
+    """Digital-twin real-time factor: sim-seconds per wall-second for the
+    full closed loop (F windowed fleets + sharded plane + arbiter) at P
+    pods.  The shared ARIMA-d1 forecaster is prefit so the proactive
+    forecast path is live from tick 2 on; replica floors pin the fleet at
+    P pods so the RTF measures the twin at scale, not a ramp.  Streaming
+    completion logs kick in automatically above the pod threshold."""
+    from repro.core import ARIMAD1Forecaster
+
+    per = P // F                  # replicas per fleet, 1 chip each
+    # prefit on a synthetic metric series: the twin's forecast lane must
+    # run (one batched predict per shard per tick), not fall back reactive
+    rng = np.random.default_rng(42)
+    series = np.abs(rng.normal(100.0, 10.0, (32, 5)))
+    model = ARIMAD1Forecaster().fit(series)
+    # per-slot service ~2.1 s -> offered req/s per fleet at `load`
+    rate = load * per * 8 / 2.1
+    reqs = _federation_requests(F, t_end, rate=rate)
+    events = int(sum(len(t) for t, _ in reqs.values()))
+    sim = _federation_sim(F, budget=P, columnar=True, n_shards=8,
+                          min_replicas=per, chips_per=1, model=model)
+    t0 = time.perf_counter()
+    sim.run(reqs, t_end)
+    wall = time.perf_counter() - t0
+    stats = sim.completion_stats()
+    streaming = all(f.completed_log.streaming for f in sim.fleets.values())
+    out = {
+        "P": P,
+        "fleets": F,
+        "sim_s": t_end,
+        "load": load,
+        "events": events,
+        "wall_s": wall,
+        "rtf": t_end / wall,
+        "events_per_s": events / wall,
+        "completed": int(stats["count"]),
+        "all_completed": bool(stats["count"] == events),
+        "streaming_logs": bool(streaming),
+        "budget_respected": bool(sim.peak_chips() <= P),
+    }
+    csv_row(
+        f"digital_twin_P{P}",
+        wall * 1e6,
+        f"RTF {out['rtf']:.1f}x realtime ({events:,} events, "
+        f"{out['events_per_s']:,.0f} ev/s, streaming={streaming})",
+    )
+    return out
+
+
 def check_baseline(results: dict, path: Path) -> list[str]:
     """>2x events/sec regression vs the checked-in baseline fails CI."""
     base = json.loads(path.read_text())
@@ -325,6 +501,21 @@ def check_baseline(results: dict, path: Path) -> list[str]:
                 f"serving drain: {serving['events_per_s_batched']:,.0f} "
                 f"ev/s < half of baseline {ref:,.0f}"
             )
+    fed = results.get("federation_tick")
+    ref = base.get("federation_ticks_per_s")
+    if fed is not None and ref is not None:
+        if fed["fleet_ticks_per_s"] < ref / 2.0:
+            errors.append(
+                f"federation tick: {fed['fleet_ticks_per_s']:,.0f} "
+                f"fleet-ticks/s < half of baseline {ref:,.0f}"
+            )
+    for point in results.get("digital_twin", []):
+        ref = base.get("digital_twin_rtf", {}).get(str(point["P"]))
+        if ref is not None and point["rtf"] < ref / 2.0:
+            errors.append(
+                f"digital twin P={point['P']}: RTF {point['rtf']:.1f} "
+                f"< half of baseline {ref}"
+            )
     return errors
 
 
@@ -345,11 +536,26 @@ def run(smoke: bool = False, baseline: Path | None = None) -> dict:
             t_end=600.0 if smoke else 1800.0,
             replicas=16 if smoke else 64,
         ),
+        "federation_tick": bench_federation_tick(
+            F=16 if smoke else 64, t_end=300.0 if smoke else 600.0),
+        "digital_twin": [bench_digital_twin(P, t, load)
+                         for P, t, load in (DT_SMOKE if smoke else DT_FULL)],
     }
     save_bench("fleet_scale", results)
     assert results["parity"]["identical"], "batched drain lost seed parity"
     assert results["multi_fleet"]["budget_respected"], "chip budget exceeded"
     assert results["serving_drain"]["identical"], "serving drain lost parity"
+    assert results["federation_tick"]["identical"], \
+        "columnar federation tick lost allocation parity"
+    for dt in results["digital_twin"]:
+        assert dt["all_completed"], f"digital twin P={dt['P']} lost events"
+        assert dt["budget_respected"], f"digital twin P={dt['P']} over budget"
+    if not smoke:
+        dt5 = next(p for p in results["digital_twin"] if p["P"] == 100_000)
+        assert dt5["rtf"] >= 1.0, \
+            f"digital twin RTF {dt5['rtf']:.2f} at 10^5 pods (bar: >=1)"
+        dt6 = next(p for p in results["digital_twin"] if p["P"] == 1_000_000)
+        assert dt6["streaming_logs"], "10^6-pod twin must stream its logs"
     if not smoke:
         p4 = next(p for p in results["sweep"] if p["P"] == 10_000)
         wall, speedup = p4["wall_s_batched"], p4["eps_speedup"]

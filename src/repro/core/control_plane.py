@@ -87,9 +87,15 @@ class Tick:
 
 
 def as_replica_map(val, names) -> dict[str, int]:
-    """Broadcast a scalar replica bound to every target."""
+    """Broadcast a scalar replica bound to every target.  An ndarray is
+    taken positionally in ``names`` order (the columnar federation driver
+    passes (F,) bound arrays, DESIGN.md §12)."""
     if isinstance(val, dict):
         return {n: int(val[n]) for n in names}
+    if isinstance(val, np.ndarray):
+        if len(val) != len(names):
+            raise ValueError("replica bound array length != target count")
+        return {n: int(v) for n, v in zip(names, val)}
     return {n: int(val) for n in names}
 
 
@@ -632,6 +638,10 @@ class _VecShard:
     def _as_array(self, val) -> np.ndarray:
         if isinstance(val, dict):
             return np.array([int(val[n]) for n in self.names], np.int64)
+        if isinstance(val, np.ndarray):   # shard-local slice, names order
+            if len(val) != len(self.names):
+                raise ValueError("replica bound array length != shard size")
+            return np.asarray(val, np.int64)
         return np.full(len(self.names), int(val), np.int64)
 
     # ------------------------------------------------------------ readout --
@@ -749,6 +759,13 @@ class _CtrlShard:
 # ======================================================================= #
 
 
+def _bound_slice(val, idx):
+    """Per-shard view of a replica bound: plane-order ndarrays are sliced
+    to the shard's rows; dicts and scalars pass through (the shard
+    resolves them by name / broadcast)."""
+    return val[idx] if isinstance(val, np.ndarray) else val
+
+
 class TickResult(cabc.Mapping):
     """Mapping name -> EvalResult over one tick, materialised lazily from
     the shards' columnar records (building Z dataclasses per tick is the
@@ -774,6 +791,20 @@ class TickResult(cabc.Mapping):
 
     def __len__(self):
         return len(self._plane._names)
+
+    def replicas_array(self) -> np.ndarray:
+        """The tick's decided replica counts as one (Z,) int64 array in
+        plane target order — the columnar readout: vectorized shards
+        contribute their decision column directly (zero per-target
+        ``EvalResult`` objects), fallback shards are gathered per name."""
+        out = np.empty(len(self._plane._names), np.int64)
+        for shard, idx in self._plane._shard_rows:
+            rec = self._by_shard[id(shard)]
+            if shard.vectorized:
+                out[idx] = rec[1]
+            else:
+                out[idx] = [rec[n].replicas for n in shard.names]
+        return out
 
 
 class ShardedControlPlane:
@@ -1036,7 +1067,9 @@ class ShardedControlPlane:
                                        self._shard_cuts):
                 state_s = (last[idx][:, None, :], counts[idx])
                 preds_s = (means_full[idx], None, False, cand_full[idx])
-                rec = shard.decide(t, state_s, preds_s, max_r, cur_r)
+                rec = shard.decide(t, state_s, preds_s,
+                                   _bound_slice(max_r, idx),
+                                   _bound_slice(cur_r, idx))
                 per_shard.append((shard, rec))
             self.poll_updates()
             return TickResult(self, per_shard, t)
@@ -1045,8 +1078,11 @@ class ShardedControlPlane:
         else:
             preds_list = [f.result() for f in futs]
         per_shard = []
-        for shard, state, preds in zip(self.shards, states, preds_list):
-            rec = shard.decide(t, state, preds, max_r, cur_r)
+        for (shard, idx), state, preds in zip(self._shard_rows, states,
+                                              preds_list):
+            rec = shard.decide(t, state, preds,
+                               _bound_slice(max_r, idx),
+                               _bound_slice(cur_r, idx))
             per_shard.append((shard, rec))
         self.poll_updates()
         return TickResult(self, per_shard, t)

@@ -54,6 +54,16 @@ from repro.sim.core import grow_to
 
 _GROUP = "fleet"
 
+# the CompletionLog kind column is int16; ntok readings are clipped into it
+_NTOK_CLIP = np.iinfo(np.int16).max
+
+# Above this many replicas-worth of chips the batch-mode CompletionLog
+# defaults to streaming retention (DESIGN.md §12): the full log holds
+# ~43 B/event, which a 10⁶-pod federation run would turn into tens of GB;
+# streaming bounds memory to the trailing retain_windows span.  Whole-run
+# numbers stay exact via CompletionLog.stats()/totals().
+STREAMING_POD_THRESHOLD = 4096
+
 
 @dataclasses.dataclass
 class FleetConfig:
@@ -66,6 +76,11 @@ class FleetConfig:
     control_interval_s: float = 15.0
     deadline_factor: float = 3.0      # straggler re-dispatch threshold
     seed: int = 0
+    # batch-mode completion-log retention: True/False forces streaming on
+    # or off; None auto-enables it when the chip budget admits more than
+    # STREAMING_POD_THRESHOLD replicas
+    log_streaming: bool | None = None
+    log_retain_windows: int = 8
 
 
 @dataclasses.dataclass
@@ -126,7 +141,14 @@ class ServingFleet:
             self._rep_dead = np.zeros(16, np.bool_)
             self._rep_draining = np.zeros(16, np.bool_)
             self._rep_n = 0
-            self.completed_log = CompletionLog()
+            streaming = self.cfg.log_streaming
+            if streaming is None:
+                streaming = (self.cfg.total_chips
+                             // self.cfg.chips_per_replica
+                             > STREAMING_POD_THRESHOLD)
+            self.completed_log = CompletionLog(
+                streaming=streaming,
+                retain_windows=self.cfg.log_retain_windows)
             # authoritative per-row n_tokens (the log's int16 kind column
             # only carries a clipped copy for inspection); row index ==
             # append order, so it stays aligned with the log's view().
@@ -134,6 +156,7 @@ class ServingFleet:
             # total copying quadratic in run length
             self._ntok_buf = np.zeros(1024, np.float64)
             self._ntok_n = 0
+            self._ntok_flushed = 0   # rows dropped in step with the log
             self._busy_acc = WindowAccumulator(self.cfg.control_interval_s)
             self._cap_log: list[tuple[float, int]] = []
             # batch-mode mirror of _win_reqs: per-chunk booked response
@@ -151,7 +174,7 @@ class ServingFleet:
         per-tick lever, serving/multi_fleet.py).  Shrinking below current
         usage drains the newest replicas immediately."""
         self.chip_budget = int(chips)
-        cur = len(self.live_replicas())
+        cur = self.live_count()
         if cur > self.max_replicas:
             self.scale_to(self.max_replicas, t)
 
@@ -169,6 +192,28 @@ class ServingFleet:
         if t is not None:
             rs = [r for r in rs if r.ready_at <= t]
         return rs
+
+    def live_count(self, t: float | None = None) -> int:
+        """``len(live_replicas(t))`` without materialising the id list —
+        the federation tick reads this once per fleet per window."""
+        if self._vec:
+            return int(np.count_nonzero(self._rep_live_mask(t)))
+        return len(self.live_replicas(t))
+
+    def seal_window(self):
+        """Seal the batch-mode completion log's current control window and
+        keep the side-car ``_ntok_buf`` (authoritative per-row n_tokens,
+        indexed in append order) aligned with the log's post-flush view —
+        streaming compaction drops the same leading rows from both, so
+        ``_vec_requeue_row``'s view-local row indices stay valid."""
+        log = self.completed_log
+        log.seal_window()
+        cut = log.n_flushed - self._ntok_flushed
+        if cut > 0:
+            keep = self._ntok_n - cut
+            self._ntok_buf[:keep] = self._ntok_buf[cut:self._ntok_n]
+            self._ntok_n = keep
+            self._ntok_flushed = log.n_flushed
 
     def scale_to(self, n: int, t: float):
         if self._vec:
@@ -316,6 +361,11 @@ class ServingFleet:
         times = np.asarray(times, np.float64)
         ntok = np.asarray(ntokens, np.float64)
         n = len(times)
+        if n == 0:
+            # empty window: every append below is a no-op — skip the whole
+            # setup (the 10⁶-pod federation tick visits each fleet every
+            # window, loaded or not)
+            return
         rids = np.full(n, -1, np.int64)
         starts = np.empty(n, np.float64)
         comps = np.empty(n, np.float64)
@@ -424,7 +474,7 @@ class ServingFleet:
             i += 1
         self.completed_log.append_batch(
             times, starts, comps, svcs, rids,
-            kind=np.minimum(ntok, np.iinfo(np.int16).max).astype(np.int16),
+            kind=np.minimum(ntok, _NTOK_CLIP).astype(np.int16),
             redispatched=redis)
         if n:
             self._win_resp.append(comps - times)
@@ -631,7 +681,7 @@ class ServingFleet:
             if self._vec:
                 hi = int(np.searchsorted(times, tick, side="right"))
                 self.dispatch_window(times[lo:hi], ntoks[lo:hi])
-                self.completed_log.seal_window()
+                self.seal_window()
                 lo = hi
             else:
                 while ri < len(requests) and requests[ri][0] <= tick:
@@ -653,7 +703,7 @@ class ServingFleet:
         if self._vec:
             hi = int(np.searchsorted(times, t_end, side="right"))
             self.dispatch_window(times[lo:hi], ntoks[lo:hi])
-            self.completed_log.seal_window()
+            self.seal_window()
             return self
         while ri < len(requests) and requests[ri][0] <= t_end:
             at, ntok = requests[ri]

@@ -107,6 +107,24 @@ class WindowedArrivals:
         return cls(times, kinds, zones, kind_names, zone_names, window_s)
 
 
+def window_offsets(times: np.ndarray, window_s: float,
+                   t_end: float) -> np.ndarray:
+    """Pre-bucket one sorted arrival stream by control window: one
+    ``searchsorted`` over every tick boundary up front, zero-copy slices
+    per window after (the columnar federation driver's per-fleet dispatch,
+    DESIGN.md §12).
+
+    ``offsets[j-1]:offsets[j]`` (1-based ``j``) slices window ``j``'s
+    arrivals in ``((j-1)·w, j·w]`` — the same boundary the per-event
+    driver uses — and the final slice ``offsets[-2]:offsets[-1]`` is the
+    post-last-tick tail up to ``t_end``.  Arrivals after ``t_end`` are
+    excluded, matching the per-event drivers."""
+    times = np.asarray(times, np.float64)
+    bounds = np.append(np.arange(window_s, t_end, window_s), t_end)
+    offs = np.searchsorted(times, bounds, side="right")
+    return np.concatenate([[0], offs]).astype(np.int64)
+
+
 def poisson_arrivals(
     rate_per_s,
     t_end: float,

@@ -41,7 +41,8 @@ if importlib.util.find_spec("hypothesis") is None:
 
     strategies = types.ModuleType("hypothesis.strategies")
     for _name in ("floats", "integers", "lists", "just", "booleans",
-                  "sampled_from", "text", "tuples", "one_of", "none"):
+                  "sampled_from", "text", "tuples", "one_of", "none",
+                  "data"):
         setattr(strategies, _name, _strategy)
 
     def given(*gargs, **gkwargs):

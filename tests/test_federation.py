@@ -1,0 +1,410 @@
+"""Columnar federation engine (DESIGN.md §12).
+
+Three contracts:
+
+1. ``ChipBudgetArbiter.allocate_batch`` is bitwise-identical to the scalar
+   dict path, and both satisfy the arbiter invariants (budget conserved,
+   floors honoured, whole replicas, no chip idle while whole-replica
+   demand is unmet, per-name determinism under insertion-order
+   permutation) — hypothesis properties plus a seeded fuzz sweep so the
+   properties run even where hypothesis isn't installed.
+2. The columnar ``MultiFleetSim`` tick (default) reproduces the retained
+   scalar oracle bitwise on seeded runs — allocation log, usage log,
+   replica logs, completion sequences — for both controller kinds
+   (``FleetController`` / ``ShardedControlPlane``) and both fleet modes
+   (per-event / windowed batch).
+3. Streaming completion logs (the 10⁶-pod memory bound): the auto-default
+   above ``STREAMING_POD_THRESHOLD``, exact whole-run stats across the
+   flush boundary, failure-requeue row alignment after compaction, and
+   the zero-completion robustness fixes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.multi_fleet import ChipBudgetArbiter
+
+WINDOW_S = 15.0
+
+
+# ===================================================================== #
+#  1. Arbiter: scalar == batch, invariants                              #
+# ===================================================================== #
+def _as_dicts(names, d, c, fl, w):
+    return ({n: int(x) for n, x in zip(names, d)},
+            {n: int(x) for n, x in zip(names, c)},
+            {n: int(x) for n, x in zip(names, fl)},
+            {n: float(x) for n, x in zip(names, w)})
+
+
+def _both_paths(total, d, c, fl, w):
+    """Run both arbiter paths on one case; assert bitwise equality and
+    return the grants (fleet order)."""
+    names = [f"f{i}" for i in range(len(d))]
+    arb = ChipBudgetArbiter(total)
+    dd, cd, fd, wd = _as_dicts(names, d, c, fl, w)
+    scalar = arb.allocate(dd, cd, fd, wd)
+    batch = arb.allocate_batch(d, c, fl, w)
+    gs = np.array([scalar[n] for n in names], np.int64)
+    assert np.array_equal(gs, batch), (d, c, fl, w, total, gs, batch)
+    return batch
+
+
+def _check_invariants(grant, total, d, c, fl):
+    d, c, fl = (np.asarray(d, np.int64), np.asarray(c, np.int64),
+                np.asarray(fl, np.int64))
+    assert int(grant.sum()) <= total                    # budget conserved
+    assert np.all(grant % c == 0)                       # whole replicas
+    assert np.all(grant >= np.minimum(fl, d) * c)       # floors honoured
+    assert np.all(grant <= d * c)                       # never over-granted
+    # no chip idle while whole-replica demand is unmet: the leftover can't
+    # cover one more replica of any fleet still short of its demand
+    left = total - int(grant.sum())
+    unmet = d * c - grant >= c
+    assert np.all(left < c[unmet]), (left, c[unmet])
+
+
+def _random_case(rng):
+    F = int(rng.integers(1, 40))
+    c = (np.full(F, int(rng.integers(1, 33))) if rng.random() < 0.5
+         else rng.integers(1, 33, F))        # homogeneous and hetero costs
+    d = rng.integers(0, 60, F)
+    fl = rng.integers(0, 4, F)
+    # integer weights with ~20% probability force remainder-fraction ties
+    w = np.where(rng.random(F) < 0.2, rng.integers(1, 5, F).astype(float),
+                 rng.uniform(0.1, 10.0, F))
+    floor_chips = int((np.minimum(fl, d) * c).sum())
+    total = floor_chips + int(rng.integers(
+        0, max(int((d * c).sum()), 1) + 1))
+    return total, d, c, fl, w
+
+
+def test_arbiter_batch_matches_scalar_fuzz_sweep():
+    """1500 seeded random cases (homogeneous + heterogeneous chip costs,
+    tied + untied remainders): bitwise scalar/batch equality and every
+    arbiter invariant.  This is the hypothesis property set, runnable
+    without hypothesis installed."""
+    rng = np.random.default_rng(7)
+    for _ in range(1500):
+        total, d, c, fl, w = _random_case(rng)
+        grant = _both_paths(total, d, c, fl, w)
+        _check_invariants(grant, total, d, c, fl)
+
+
+def test_arbiter_permutation_determinism():
+    """Per-name grants don't depend on dict insertion order (both paths
+    agree with the permuted scalar run when remainder fractions are
+    untied — continuous random weights make ties measure-zero)."""
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        F = int(rng.integers(2, 20))
+        c = np.full(F, 16)
+        d = rng.integers(0, 40, F)
+        fl = rng.integers(0, 3, F)
+        w = rng.uniform(0.1, 10.0, F)
+        total = int((np.minimum(fl, d) * c).sum()) + int(
+            rng.integers(0, 400))
+        names = [f"f{i}" for i in range(F)]
+        dd, cd, fd, wd = _as_dicts(names, d, c, fl, w)
+        base = ChipBudgetArbiter(total).allocate(dd, cd, fd, wd)
+        perm = rng.permutation(F)
+        pnames = [names[i] for i in perm]
+        permuted = ChipBudgetArbiter(total).allocate(
+            {n: dd[n] for n in pnames}, {n: cd[n] for n in pnames},
+            {n: fd[n] for n in pnames}, {n: wd[n] for n in pnames})
+        assert base == permuted
+        batch_perm = ChipBudgetArbiter(total).allocate_batch(
+            d[perm], c[perm], fl[perm], w[perm])
+        assert np.array_equal(batch_perm,
+                              np.array([base[n] for n in pnames]))
+
+
+def test_arbiter_floors_over_budget_raise_in_both_paths():
+    arb = ChipBudgetArbiter(16)
+    with pytest.raises(ValueError):
+        arb.allocate({"a": 2, "b": 2}, {"a": 16, "b": 16},
+                     {"a": 1, "b": 1}, {"a": 1.0, "b": 1.0})
+    with pytest.raises(ValueError):
+        arb.allocate_batch([2, 2], [16, 16], [1, 1], [1.0, 1.0])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_arbiter_properties_hypothesis(data):
+    """The same property set under hypothesis shrinking."""
+    F = data.draw(st.integers(1, 24), label="F")
+    homo = data.draw(st.booleans(), label="homogeneous")
+    if homo:
+        c = np.full(F, data.draw(st.integers(1, 32), label="c"))
+    else:
+        c = np.asarray(data.draw(
+            st.lists(st.integers(1, 32), min_size=F, max_size=F),
+            label="c"), np.int64)
+    d = np.asarray(data.draw(
+        st.lists(st.integers(0, 64), min_size=F, max_size=F),
+        label="d"), np.int64)
+    fl = np.asarray(data.draw(
+        st.lists(st.integers(0, 4), min_size=F, max_size=F),
+        label="fl"), np.int64)
+    w = np.asarray(data.draw(
+        st.lists(st.floats(0.05, 20.0, allow_nan=False), min_size=F,
+                 max_size=F), label="w"), np.float64)
+    floor_chips = int((np.minimum(fl, d) * c).sum())
+    total = floor_chips + data.draw(
+        st.integers(0, int((d * c).sum()) + 1), label="headroom")
+    grant = _both_paths(total, d, c, fl, w)
+    _check_invariants(grant, total, d, c, fl)
+
+
+# ===================================================================== #
+#  2. Columnar federation tick == scalar oracle                          #
+# ===================================================================== #
+def _mk_sim(columnar, batch, plane, budget=96, n_fleets=3, seed0=0,
+            streaming=None):
+    from repro.core import (ARIMAD1Forecaster, FleetController, PPAConfig,
+                            TargetSpec, ThresholdPolicy)
+    from repro.serving.fleet import FleetConfig
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+
+    specs = [FleetSpec(f"f{i}", FleetConfig(
+        total_chips=budget, chips_per_replica=16, seed=seed0 + i,
+        log_streaming=streaming)) for i in range(n_fleets)]
+    targets = [TargetSpec(s.name, ThresholdPolicy(560.0, 1)) for s in specs]
+    cfg = PPAConfig(threshold=560.0, stabilization_s=0.0)
+    if plane:
+        from repro.core.control_plane import ShardedControlPlane
+        ctrl = ShardedControlPlane(cfg, targets, model=ARIMAD1Forecaster(),
+                                   n_shards=2, async_ticks=True)
+    else:
+        ctrl = FleetController(cfg, targets, model=ARIMAD1Forecaster())
+    return MultiFleetSim(specs, budget, ctrl, batch=batch,
+                         columnar=columnar)
+
+
+def _requests(n_fleets=3, T=600.0, n=250, seed=1):
+    rng = np.random.default_rng(seed)
+    return {f"f{i}": sorted((float(t), int(rng.integers(16, 64)))
+                            for t in rng.uniform(0, T, n))
+            for i in range(n_fleets)}
+
+
+@pytest.mark.parametrize("plane", [False, True],
+                         ids=["fleet-controller", "sharded-plane"])
+@pytest.mark.parametrize("batch", [False, True],
+                         ids=["per-event", "windowed"])
+def test_columnar_tick_matches_scalar_oracle(plane, batch):
+    """Default (columnar) vs ``columnar=False`` oracle: allocation log,
+    usage log, per-fleet replica logs and completion sequences bitwise."""
+    T = 600.0
+    reqs = _requests(T=T)
+    a = _mk_sim(False, batch, plane).run(
+        {k: list(v) for k, v in reqs.items()}, T)
+    b = _mk_sim(True, batch, plane).run(
+        {k: list(v) for k, v in reqs.items()}, T)
+    assert a.alloc_log == b.alloc_log
+    assert a.usage_log == b.usage_log
+    for n in a.fleets:
+        assert a.fleets[n].replica_log == b.fleets[n].replica_log
+        assert np.array_equal(np.sort(a.response_times(n)),
+                              np.sort(b.response_times(n)))
+    if batch:
+        for n in a.fleets:
+            va = a.fleets[n].completed_log.view()
+            vb = b.fleets[n].completed_log.view()
+            assert np.array_equal(va, vb)
+    assert a.completion_stats() == b.completion_stats()
+
+
+def test_columnar_default_and_flag():
+    sim = _mk_sim(None, False, False)
+    assert sim.columnar is True          # columnar is the default
+    assert _mk_sim(False, False, False).columnar is False
+
+
+def test_replicas_array_matches_mapping_readout():
+    """``TickResult.replicas_array()`` == per-name ``EvalResult`` gather,
+    vectorized and fallback shards alike."""
+    from repro.core import ARIMAD1Forecaster, PPAConfig, ThresholdPolicy
+    from repro.core.control_plane import ShardedControlPlane
+    from repro.core.controller import TargetSpec
+    from repro.core.metrics import Snapshot
+
+    names = [f"z{i}" for i in range(7)]
+    plane = ShardedControlPlane(
+        PPAConfig(threshold=50.0, stabilization_s=0.0),
+        [TargetSpec(n, ThresholdPolicy(50.0, 1)) for n in names],
+        model=ARIMAD1Forecaster(), n_shards=3)
+    rng = np.random.default_rng(0)
+    for t in (15.0, 30.0, 45.0):
+        for n in names:
+            plane.observe(n, Snapshot(t, rng.uniform(0, 200, 5)))
+        res = plane.begin_tick(t, np.full(len(names), 64, np.int64),
+                               np.ones(len(names), np.int64)).finish_tick()
+        arr = res.replicas_array()
+        assert arr.dtype == np.int64 and len(arr) == len(names)
+        assert arr.tolist() == [res[n].replicas for n in names]
+
+
+def test_window_offsets_match_per_tick_searchsorted():
+    from repro.workloads.fleet_scale import window_offsets
+
+    rng = np.random.default_rng(2)
+    T = 100.0
+    times = np.sort(rng.uniform(0, T + 10.0, 400))   # includes a post-T tail
+    offs = window_offsets(times, WINDOW_S, T)
+    ticks = np.arange(WINDOW_S, T, WINDOW_S)
+    expect = [0] + [int(np.searchsorted(times, t, side="right"))
+                    for t in ticks]
+    expect.append(int(np.searchsorted(times, T, side="right")))
+    assert offs.tolist() == expect
+    assert offs.dtype == np.int64
+    # empty stream and no-tick horizon degenerate cleanly
+    assert window_offsets(np.zeros(0), WINDOW_S, T)[-1] == 0
+    short = window_offsets(times, WINDOW_S, 10.0)
+    assert short.tolist() == [0, int(np.searchsorted(times, 10.0, "right"))]
+
+
+# ===================================================================== #
+#  3. Streaming logs + robustness satellites                             #
+# ===================================================================== #
+def _assert_stats_equal(a: dict, b: dict):
+    """Streaming folds per-window partial sums where the full log sums
+    once globally, so the derived float stats agree to float-summation
+    reassociation (~1e-12 relative), counts and extrema exactly."""
+    assert a.keys() == b.keys()
+    for k in ("count", "redispatched", "resp_min", "resp_max"):
+        assert a[k] == b[k], (k, a[k], b[k])
+    for k in ("resp_mean", "resp_std"):
+        assert np.isclose(a[k], b[k], rtol=1e-9, atol=0.0,
+                          equal_nan=True), (k, a[k], b[k])
+def test_streaming_log_defaults_on_above_pod_threshold():
+    from repro.serving.fleet import (STREAMING_POD_THRESHOLD, FleetConfig,
+                                     ServingFleet)
+
+    big = FleetConfig(total_chips=(STREAMING_POD_THRESHOLD + 1) * 16,
+                      chips_per_replica=16)
+    small = FleetConfig(total_chips=256, chips_per_replica=16)
+    assert ServingFleet(big, batch=True).completed_log.streaming
+    assert not ServingFleet(small, batch=True).completed_log.streaming
+    # explicit override beats the auto threshold either way
+    forced_off = dataclasses.replace(big, log_streaming=False)
+    forced_on = dataclasses.replace(small, log_streaming=True)
+    assert not ServingFleet(forced_off, batch=True).completed_log.streaming
+    assert ServingFleet(forced_on, batch=True).completed_log.streaming
+
+
+def test_streaming_fleet_stats_and_requeue_alignment():
+    """A streaming fleet under failures: whole-run ``stats()`` match the
+    full-log run exactly, and the ``_ntok_buf`` side-car stays aligned
+    through flush compaction (the requeued rows book identical service
+    times in both runs)."""
+    from repro.core.hpa import HPA
+    from repro.serving.fleet import FleetConfig, ServingFleet
+    from repro.workloads import poisson_arrivals
+
+    rng = np.random.default_rng(5)
+    T = 900.0
+    arr = poisson_arrivals(6.0, T, WINDOW_S, seed=9)
+    ntok = rng.integers(16, 64, len(arr.times)).astype(np.float64)
+
+    def run(streaming):
+        cfg = FleetConfig(total_chips=8 * 16, chips_per_replica=16, seed=0,
+                          log_streaming=streaming, log_retain_windows=3)
+        f = ServingFleet(cfg, batch=True)
+        f.inject_failure(T / 3, rid=0)       # orphans requeue mid-run
+        f.inject_failure(2 * T / 3, rid=1)
+        return f.run((arr.times, ntok), HPA(560.0, min_replicas=8), "hpa",
+                     T, min_replicas=8)
+
+    full, stream = run(False), run(True)
+    assert stream.completed_log.streaming
+    assert stream.completed_log.n_flushed > 0          # compaction happened
+    assert len(stream.completed_log) == len(full.completed_log) == len(arr)
+    assert stream._ntok_n == stream.completed_log.n    # side-car aligned
+    _assert_stats_equal(full.completed_log.stats(),
+                        stream.completed_log.stats())
+    # retained tail rows are bitwise-equal to the full log's same rows
+    tail = stream.completed_log.view()
+    assert np.array_equal(tail,
+                          full.completed_log.view()[-len(tail):])
+
+
+def test_multi_fleet_zero_completion_fleets():
+    """Satellite: idle fleets must not break the cross-fleet stats —
+    typed empty arrays, ``peak_chips()`` == 0 before any run."""
+    sim = _mk_sim(None, True, False)
+    assert sim.peak_chips() == 0
+    rt = sim.response_times()
+    assert rt.dtype == np.float64 and rt.shape == (0,)
+    # one loaded fleet among idle ones, both tick paths
+    T = 300.0
+    reqs = {"f0": _requests(n_fleets=1, T=T, n=60)["f0"]}
+    for columnar in (False, True):
+        s = _mk_sim(columnar, True, False).run(
+            {k: list(v) for k, v in reqs.items()}, T)
+        rt = s.response_times()
+        assert len(rt) == 60 and np.isfinite(rt).all()
+        assert s.response_times("f1").shape == (0,)
+        assert s.completion_stats()["count"] == 60
+        assert s.peak_chips() <= 96
+
+
+def test_multi_fleet_streaming_matches_full_log_run():
+    """Forcing streaming logs changes neither the control trajectory nor
+    the whole-run completion stats (``completion_stats()`` folds the
+    per-fleet aggregates exactly across flushed windows)."""
+    T = 600.0
+    reqs = _requests(T=T)
+    full = _mk_sim(True, True, False, streaming=False).run(
+        {k: list(v) for k, v in reqs.items()}, T)
+    stream = _mk_sim(True, True, False, streaming=True).run(
+        {k: list(v) for k, v in reqs.items()}, T)
+    assert any(f.completed_log.n_flushed > 0
+               for f in stream.fleets.values())
+    assert full.alloc_log == stream.alloc_log
+    assert full.usage_log == stream.usage_log
+    _assert_stats_equal(full.completion_stats(), stream.completion_stats())
+
+
+# ===================================================================== #
+#  slow lane: the 10⁶-pod / 64-fleet acceptance point                    #
+# ===================================================================== #
+@pytest.mark.slow
+def test_million_pod_federation_completes_under_streaming_logs():
+    """10⁶ pods across 64 fleets, short horizon: the columnar tick + the
+    streaming-by-default completion logs carry the run end to end with
+    bounded memory, budget respected, every arrival completed."""
+    from repro.core import (ARIMAD1Forecaster, PPAConfig, ThresholdPolicy)
+    from repro.core.control_plane import ShardedControlPlane
+    from repro.core.controller import TargetSpec
+    from repro.serving.fleet import FleetConfig
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+    from repro.workloads import poisson_arrivals
+
+    F, P, T = 64, 1_000_000, 60.0
+    per = P // F                          # 15625 replicas per fleet
+    specs = [FleetSpec(f"f{i}", FleetConfig(
+        total_chips=per, chips_per_replica=1, slots_per_replica=8,
+        seed=i)) for i in range(F)]
+    plane = ShardedControlPlane(
+        PPAConfig(threshold=560.0, stabilization_s=0.0),
+        [TargetSpec(s.name, ThresholdPolicy(560.0, 1), min_replicas=per)
+         for s in specs],
+        model=ARIMAD1Forecaster(), n_shards=8, async_ticks=True)
+    rng = np.random.default_rng(0)
+    reqs = {}
+    for i, s in enumerate(specs):
+        arr = poisson_arrivals(40.0, T, WINDOW_S, seed=100 + i)
+        reqs[s.name] = (arr.times,
+                        rng.integers(16, 64, len(arr.times)).astype(float))
+    sim = MultiFleetSim(specs, P, plane, batch=True).run(reqs, T)
+    assert all(f.completed_log.streaming for f in sim.fleets.values())
+    assert all(f.live_count() == per for f in sim.fleets.values())
+    assert sim.peak_chips() <= P
+    n_arr = sum(len(t) for t, _ in reqs.values())
+    st = sim.completion_stats()
+    assert st["count"] == n_arr
+    assert np.isfinite(st["resp_mean"])

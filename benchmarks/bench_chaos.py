@@ -1,0 +1,322 @@
+"""Chaos A/B benchmark: degraded-mode control plane ON vs OFF
+(DESIGN.md §13, docs/resilience.md).
+
+A fixed set of seeded fault tapes — spatially-correlated node-failure
+storms, metric-exporter blackouts (frozen republished rows), forecaster
+stalls and shard crash-restarts — plus per-fleet closed-loop
+retry/backoff clients drives the *same* federation twice per tape:
+
+  OFF  ``resilience=None`` — the plane trusts every republished stale
+       row, waits forever on stalled forecasts, and a crashed shard's
+       columnar state is simply gone (wipe, no restore);
+  ON   ``ResilienceConfig`` armed — stale-TTL hold, forecast deadline
+       -> reactive fallback, snapshot/restore shard failover.
+
+Each tape is replayed bit-identically (``scenario.reset()`` between
+lanes), so every delta is attributable to the degraded-mode machinery.
+Scores aggregate over the seed set — a single tape's A/B delta is
+dominated by where its storms happen to land.  Two acceptance bars,
+both CI-guarded through the baseline JSON:
+
+1. **SLA damage** — the ON lane must cut total SLA-violation seconds
+   (control windows whose completed-request p95 exceeds the SLA, times
+   the window length, summed over fleets and tapes) vs the OFF lane.
+2. **Recovery** — after every node-kill storm the ON lane must return
+   live-chip occupancy to 90 % of its pre-storm level within a bounded
+   number of control ticks.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_chaos [--smoke]
+         [--check-baseline benchmarks/baselines/chaos_baseline.json]
+
+Results land in ``BENCH_chaos.json`` (root copy for the CI artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_bench
+
+WINDOW_S = 15.0
+SLA_S = 2.0            # scored p95 SLA (s) — also the clients' retry trigger
+POLICY_P95 = 1.2       # the plane's internal objective: an SLO safety margin,
+#                        so quiet windows sit comfortably under the scored SLA
+#                        and chaos, not capacity, drives the violations
+N_TOKENS = 8           # with prefill 0.1 s: ~0.37 s service, so the policy's
+#                        scale-down band (p95 < 0.7 * POLICY_P95) is reachable
+PREFILL_S = 0.1
+RATE_PER_S = 16.0      # ~3 busy replicas at 2 slots x ~5.4 req/s each
+SPAWN_S = 30.0         # replica spawn latency (2 control ticks)
+DOWN_MARGIN = 0.35     # scale-down trigger 0.42 s, just above the service
+#                        floor: downs are rare, gentle (~11 %) steps, so the
+#                        quiet plane is stable instead of spike-cycling
+MIN_REPLICAS = 4       # ~= quiet-load capacity: fleets start (and floor) healthy
+WARMUP_WIN = 8         # cold-start windows excluded from every score
+RECOVERY_BOUND = 16    # ticks (4 sim-min): post-storm occupancy-recovery bar
+#                        for the ON lane; generous because pre-storm usage can
+#                        be transiently inflated by another storm's recovery
+RECOVERY_FRAC = 0.9    # "recovered" = live chips back to 90 % of pre-storm
+TAIL_SKIP_WIN = 10     # storms this close to t_end can't be scored fairly
+
+
+def _resilience_on():
+    from repro.core.policies import ResilienceConfig
+
+    return ResilienceConfig(stale_ttl_s=20.0, forecast_deadline_s=2.0,
+                            snapshot_every=2)
+
+
+def _chaos_sim(F: int, resilience, budget: int | None = None,
+               n_shards: int = 2, seed0: int = 0):
+    """F serving fleets under one ShardedControlPlane running SLA policies
+    on the windowed-p95 metric (slot 1) with the guardrail armed — the
+    realistic hybrid plane the resilience layer sits inside."""
+    from repro.core import (ARIMAD1Forecaster, GuardrailConfig, PPAConfig,
+                            SLAPolicy)
+    from repro.core.control_plane import ShardedControlPlane
+    from repro.core.controller import TargetSpec
+    from repro.serving.fleet import FleetConfig
+    from repro.serving.multi_fleet import FleetSpec, MultiFleetSim
+
+    # tight enough that one fleet blowing up to max (the OFF lane chasing
+    # a frozen storm-inflated row for a whole blackout) contends real
+    # capacity away from fleets fighting their own kill storms
+    budget = budget or F * 16
+    specs = [
+        FleetSpec(f"fleet-{i}", FleetConfig(
+            total_chips=budget, chips_per_replica=1, slots_per_replica=2,
+            prefill_s=PREFILL_S, control_interval_s=WINDOW_S,
+            spawn_s=SPAWN_S, seed=seed0 + i))
+        for i in range(F)
+    ]
+    cfg = PPAConfig(threshold=POLICY_P95, key_metric_idx=1,
+                    stabilization_s=60.0, guard=GuardrailConfig(),
+                    resilience=resilience)
+    plane = ShardedControlPlane(
+        cfg,
+        [TargetSpec(s.name, SLAPolicy(POLICY_P95, MIN_REPLICAS, DOWN_MARGIN),
+                    min_replicas=MIN_REPLICAS) for s in specs],
+        model=ARIMAD1Forecaster(), n_shards=n_shards, async_ticks=False)
+    return MultiFleetSim(specs, budget, plane, batch=True, columnar=True)
+
+
+def _scenario(F: int, t_end: float, seed: int, n_shards: int = 2):
+    from repro.sim.chaos import ChaosConfig
+    from repro.workloads.scenarios import ClientConfig, make_chaos_scenario
+
+    ccfg = ChaosConfig(
+        window_s=WINDOW_S,
+        storm_start_p=0.10, storm_stop_p=0.5,      # short, frequent storms
+        blackout_rate_per_h=10.0, blackout_lo_s=120.0, blackout_hi_s=300.0,
+        stall_rate_per_h=3.0, stall_s=3.0,         # > the ON-lane deadline
+        crash_rate_per_h=15.0, crash_down_ticks=2)
+    # enough feedback to amplify real outages, tame enough that a single
+    # kill window does not avalanche past any amount of recovered capacity
+    client = ClientConfig(rate_per_s=RATE_PER_S, window_s=WINDOW_S,
+                          n_tokens=N_TOKENS, retry_threshold=SLA_S,
+                          retry_frac=0.3, max_retries=2, backoff_base_s=4.0)
+    return make_chaos_scenario(
+        [f"fleet-{i}" for i in range(F)], t_end=t_end, seed=seed,
+        chaos_cfg=ccfg, client_cfg=client, n_shards=n_shards)
+
+
+# ---------------------------------------------------------------- metrics ---
+def _p95_matrix(sim, t_end: float) -> np.ndarray:
+    """(F, n_win) realised p95 per fleet per control window — requests
+    bucketed by *completion* time (the latency users felt, regardless of
+    what the blacked-out exporter told the controller).  One fused
+    ``batched_p95`` pass over every (fleet, window) segment; empty windows
+    report 0.0 (never violating)."""
+    from repro.serving.fleet import batched_p95
+
+    w = sim.window_s
+    n_win = int(np.ceil(t_end / w))
+    segs = []
+    for f in sim.fleets.values():
+        rows = f.completed_log.view()
+        done = rows[np.isfinite(rows["completion"])]
+        resp = done["completion"] - done["arrival"]
+        wi = np.minimum((done["completion"] // w).astype(np.int64), n_win - 1)
+        order = np.argsort(wi, kind="stable")
+        wi, resp = wi[order], resp[order]
+        bounds = np.searchsorted(wi, np.arange(n_win + 1))
+        segs.extend(resp[bounds[k]:bounds[k + 1]] for k in range(n_win))
+    return batched_p95(segs).reshape(len(sim.fleets), n_win)
+
+
+def _storm_bursts(chaos, window_s: float) -> list[tuple[float, float]]:
+    """(start, end) times of node-kill storms, merging kill windows less
+    than two control windows apart into one burst."""
+    from repro.sim import chaos as CH
+
+    kt = np.unique(chaos.events[chaos.events["kind"] == CH.NODE_FAIL]["t"])
+    if kt.size == 0:
+        return []
+    bursts, start, end = [], float(kt[0]), float(kt[0])
+    for t in kt[1:]:
+        if t - end > 2.0 * window_s:
+            bursts.append((start, end))
+            start = float(t)
+        end = float(t)
+    bursts.append((start, end))
+    return bursts
+
+
+def _recovery_ticks(sim, chaos, t_end: float) -> list[int]:
+    """Per storm burst: control ticks from the last kill until live-chip
+    occupancy is back to ``RECOVERY_FRAC`` of its pre-burst level — the
+    replica-respawn bound the failover path is benched against.  Bursts
+    in the warmup or too close to ``t_end`` are skipped; a burst that
+    never recovers inside the run scores the full remaining tick count."""
+    usage = np.asarray(sim.usage_log, np.float64)
+    t_u, u = usage[:, 0], usage[:, 1]
+    out = []
+    for start, end in _storm_bursts(chaos, sim.window_s):
+        if (end > t_end - TAIL_SKIP_WIN * sim.window_s
+                or end < WARMUP_WIN * sim.window_s):
+            continue
+        i_pre = int(np.searchsorted(t_u, start)) - 1
+        i0 = int(np.searchsorted(t_u, end))
+        if i_pre < 0 or i0 >= len(t_u):
+            continue
+        rec = np.flatnonzero(u[i0:] >= RECOVERY_FRAC * u[i_pre])
+        out.append(int(rec[0]) + 1 if rec.size else len(t_u) - i0)
+    return out
+
+
+# ------------------------------------------------------------------ lanes ---
+def _lane(F: int, t_end: float, scenario, resilience, seed0: int) -> dict:
+    sim = _chaos_sim(F, resilience, seed0=seed0)
+    t0 = time.perf_counter()
+    sim.run({}, t_end, scenario=scenario.reset())
+    wall = time.perf_counter() - t0
+    p95 = _p95_matrix(sim, t_end)
+    viol = p95[:, WARMUP_WIN:] > SLA_S
+    stats = sim.completion_stats()
+    out = {
+        "wall_s": wall,
+        "sla_violation_s": float(viol.sum() * sim.window_s),
+        "sla_violation_ratio": float(viol.mean()),
+        "completions": int(stats["count"]),
+        "mean_resp_s": float(stats["resp_mean"]),
+        "retries": int(sum(c.total_retries
+                           for c in scenario.clients.values())),
+        "recovery_ticks": _recovery_ticks(sim, scenario.chaos, t_end),
+    }
+    if hasattr(sim.controller, "degraded_stats"):
+        out["degraded"] = sim.controller.degraded_stats()
+    return out
+
+
+def bench_chaos_pair(F: int, t_end: float, seed: int) -> dict:
+    """The A/B pair on one seeded tape: resilience OFF then ON."""
+    from repro.sim import chaos as CH
+
+    scenario = _scenario(F, t_end, seed)
+    kinds = {CH.KIND_NAMES[k]: int(n) for k, n in
+             zip(*np.unique(scenario.chaos.events["kind"],
+                            return_counts=True))}
+    off = _lane(F, t_end, scenario, None, seed0=seed)
+    on = _lane(F, t_end, scenario, _resilience_on(), seed0=seed)
+    return {
+        "seed": seed,
+        "chaos_events": len(scenario.chaos), "chaos_kinds": kinds,
+        "chaos_signature": scenario.chaos.signature(),
+        "off": off, "on": on,
+    }
+
+
+def bench_chaos_suite(F: int = 4, t_end: float = 900.0,
+                      seeds: tuple[int, ...] = (1, 3, 6)) -> dict:
+    """A/B pairs over a fixed seed set; scores are seed-set aggregates
+    (total violation seconds per lane, worst ON-lane storm recovery)."""
+    pairs = [bench_chaos_pair(F, t_end, s) for s in seeds]
+    off_s = sum(p["off"]["sla_violation_s"] for p in pairs)
+    on_s = sum(p["on"]["sla_violation_s"] for p in pairs)
+    rec_on = max((r for p in pairs for r in p["on"]["recovery_ticks"]),
+                 default=0)
+    deg = {}
+    for p in pairs:
+        for k, v in p["on"].get("degraded", {}).items():
+            deg[k] = deg.get(k, 0) + v
+    wall = sum(p["off"]["wall_s"] + p["on"]["wall_s"] for p in pairs)
+    res = {
+        "F": F, "t_end": t_end, "seeds": list(seeds),
+        "pairs": pairs,
+        "off_sla_violation_s": off_s, "on_sla_violation_s": on_s,
+        "sla_violation_cut": (off_s - on_s) / max(off_s, WINDOW_S),
+        "chaos_sla_violation_ratio": float(
+            np.mean([p["on"]["sla_violation_ratio"] for p in pairs])),
+        "chaos_recovery_ticks": rec_on,
+        "degraded": deg,
+    }
+    csv_row(
+        f"chaos_suite_F{F}x{len(seeds)}",
+        wall * 1e6,
+        f"violation {off_s:.0f}s off -> {on_s:.0f}s on "
+        f"({res['sla_violation_cut']:.0%} cut over {len(seeds)} tapes), "
+        f"recovery <= {rec_on} ticks",
+    )
+    return res
+
+
+# ------------------------------------------------------- baseline / entry ---
+def check_baseline(results: dict, path: Path) -> list[str]:
+    """The ON lane may not degrade vs the checked-in baseline: violating
+    fleet-window fraction within 1.5x (+ a small absolute slack for tiny
+    smoke denominators), storm recovery within +2 ticks."""
+    base = json.loads(path.read_text())
+    errors = []
+    suite = results["suite"]
+    ref = base.get("chaos_sla_violation_ratio")
+    got = suite["chaos_sla_violation_ratio"]
+    if ref is not None and got > ref * 1.5 + 0.02:
+        errors.append(
+            f"chaos: ON-lane SLA-violation ratio {got:.3f} "
+            f"> 1.5x baseline {ref:.3f}")
+    ref = base.get("chaos_recovery_ticks")
+    got = suite["chaos_recovery_ticks"]
+    if ref is not None and got > ref + 2:
+        errors.append(
+            f"chaos: storm recovery {got} ticks > baseline {ref} + 2")
+    return errors
+
+
+def run(smoke: bool = False, baseline: Path | None = None) -> dict:
+    suite = bench_chaos_suite(
+        F=4, t_end=900.0,
+        seeds=(1, 3, 6) if smoke else tuple(range(8)))
+    results = {"mode": "smoke" if smoke else "full", "suite": suite}
+    save_bench("chaos", results)
+    assert suite["on_sla_violation_s"] < suite["off_sla_violation_s"], (
+        f"degraded-mode ON must cut aggregate SLA-violation seconds: "
+        f"on={suite['on_sla_violation_s']:.0f}s "
+        f"off={suite['off_sla_violation_s']:.0f}s")
+    assert suite["chaos_recovery_ticks"] <= RECOVERY_BOUND, (
+        f"ON lane took {suite['chaos_recovery_ticks']} ticks to recover "
+        f"from a kill storm (bar: <= {RECOVERY_BOUND})")
+    deg = suite["degraded"]
+    assert deg.get("failovers", 0) >= 1, \
+        "the tapes must exercise at least one shard failover"
+    assert deg.get("stale_targets", 0) >= 1, \
+        "the tapes must exercise the stale-TTL hold"
+    if baseline is not None:
+        errors = check_baseline(results, baseline)
+        if errors:
+            raise SystemExit("baseline regression:\n  " + "\n  ".join(errors))
+        print(f"baseline OK ({baseline})")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--check-baseline", type=Path, default=None)
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, baseline=args.check_baseline)
+    print(json.dumps(out, indent=1, default=float))

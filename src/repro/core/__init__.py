@@ -9,6 +9,7 @@ from repro.core.forecaster import (Forecaster, LSTMForecaster,
                                    EnsembleForecaster, make_forecaster)
 from repro.core.policies import (ThresholdPolicy, TargetUtilizationPolicy,
                                  SLAPolicy, GuardrailConfig,
+                                 ResilienceConfig,
                                  make_policy, policy_vectorizable)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.updater import Updater, UpdatePolicy
@@ -19,4 +20,5 @@ from repro.core.control_plane import (ShardedControlPlane, Tick, TickResult,
                                       Guardrail, shard_assignment,
                                       stage_collect, stage_formulate,
                                       stage_forecast, stage_evaluate,
-                                      stage_guard, stage_actuate)
+                                      stage_degrade, stage_guard,
+                                      stage_actuate)

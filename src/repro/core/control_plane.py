@@ -57,6 +57,7 @@ import dataclasses
 import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +85,10 @@ class Tick:
     recents: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     preds: dict = dataclasses.field(default_factory=dict)
     results: dict[str, EvalResult] = dataclasses.field(default_factory=dict)
+    # targets whose metrics are past the resilience TTL this tick — they
+    # skip the forecast batch, hold their replica count (stage_degrade)
+    # and idle their guardrail (DESIGN.md §13); empty when resilience off
+    stale: set = dataclasses.field(default_factory=set)
 
 
 def as_replica_map(val, names) -> dict[str, int]:
@@ -146,8 +151,14 @@ def stage_formulate(ctrl, tick: Tick) -> Tick:
 
 
 def stage_forecast(ctrl, tick: Tick) -> Tick:
-    """One batched forecast dispatch for every predictable target."""
-    tick.preds = ctrl._predict_all(tick.names, tick.recents)
+    """One batched forecast dispatch for every predictable target.
+    Targets past the stale-metric TTL drop out of the forecast batch
+    entirely (the scalar twin of the shard's NaN-masked candidacy)."""
+    if hasattr(ctrl, "_stale_names"):
+        tick.stale = ctrl._stale_names(tick.t)
+    names = (tick.names if not tick.stale
+             else [n for n in tick.names if n not in tick.stale])
+    tick.preds = ctrl._predict_all(names, tick.recents)
     return tick
 
 
@@ -228,22 +239,50 @@ class Guardrail:
         self.prev_key = float(key)
 
 
+def stage_degrade(ctrl, tick: Tick) -> Tick:
+    """Degraded-mode hold (between evaluate and guard, DESIGN.md §13):
+    a stale target's decision is pinned to the last decision made on
+    fresh metrics — the Kubernetes missing-metrics rule: keep the
+    desired replica count, never scale on data you do not have.
+    Holding at the *current* count instead would ratchet a blacked-out
+    fleet down as node failures eat its live replicas.  Falls back to
+    the current count before any fresh decision exists.  No-op when
+    nothing is stale (resilience off / all fresh)."""
+    last = getattr(ctrl, "_deg_last", None) or {}
+    for n in tick.stale:
+        tick.results[n].replicas = last.get(n, tick.cur_r[n])
+    if tick.stale and hasattr(ctrl, "_deg_stale"):
+        ctrl._deg_stale += len(tick.stale)
+    return tick
+
+
 def stage_guard(ctrl, tick: Tick) -> Tick:
     """Reactive guardrail stage (between evaluate and actuate): override
     each guarded target's decision when realised load left the error band
     of the forecast the previous decision acted on, then arm the guard
     with this tick's forecast.  A controller without per-target guards
-    (``cfg.guard is None``) passes through untouched."""
+    (``cfg.guard is None``) passes through untouched.  A stale target's
+    guard idles for the tick — its "realised" metric is the republished
+    stale sample, not evidence about the forecast.  As the last stage
+    before actuation it also records each fresh target's final decision
+    — the anchor ``stage_degrade`` holds at on later stale ticks."""
     k = ctrl.cfg.key_metric_idx
+    last = getattr(ctrl, "_deg_last", None)
     for n in tick.names:
         g = getattr(ctrl.targets[n], "guard", None)
-        if g is None:
+        if n in tick.stale:
+            if g is not None:
+                g.down_ct = 0
+                g.arm(float("nan"))
             continue
         res = tick.results[n]
-        realised = float(tick.recents[n][-1, k])
-        res.replicas = g.apply(realised, res.replicas, tick.cur_r[n],
-                               tick.max_r[n])
-        g.arm(res.key_metric if res.predicted else float("nan"))
+        if g is not None:
+            realised = float(tick.recents[n][-1, k])
+            res.replicas = g.apply(realised, res.replicas, tick.cur_r[n],
+                                   tick.max_r[n])
+            g.arm(res.key_metric if res.predicted else float("nan"))
+        if last is not None:
+            last[n] = res.replicas
     return tick
 
 
@@ -401,6 +440,17 @@ class _VecShard:
         self._grd_down = np.zeros(Zs, np.int64)
         self.guard_up = 0
         self.guard_down = 0
+        # degraded mode (DESIGN.md §13): per-target time of the last
+        # *fresh* observation (stale republished rows shift the ring but
+        # not this clock) + cumulative held-on-stale target-tick counter
+        self._res = getattr(cfg, "resilience", None)
+        self._last_seen = np.full(Zs, -np.inf)
+        self.stale_held = 0
+        # last fresh-tick decision per target (-1 = none yet): the
+        # degraded hold's anchor — k8s keeps desiredReplicas when metrics
+        # go missing; holding at the live count instead would ratchet a
+        # blacked-out fleet down as node failures eat its replicas
+        self._deg_last = np.full(Zs, -1, np.int64)
         self._stack_cache: dict = {}
         # columnar tick records: (t, replicas, key, predicted, conf, max_r,
         # means | None, cand); EvalResults materialise lazily from these
@@ -413,36 +463,60 @@ class _VecShard:
     # updater, so a plane without one skips Z list appends per tick
     keep_history = True
 
-    def observe(self, name: str, snap: Snapshot):
+    def observe(self, name: str, snap: Snapshot, fresh: bool = True):
         i = self.index[name]
         self.ring[i, :-1] = self.ring[i, 1:]
         self.ring[i, -1] = snap.values
         self.count[i] += 1
+        if fresh:
+            self._last_seen[i] = snap.t
         if self.keep_history:
             self.histories[i].append(snap)
 
-    def observe_batch(self, t: float, rows: np.ndarray):
-        """One ring shift for the whole shard instead of Zs row shifts."""
+    def observe_batch(self, t: float, rows: np.ndarray, fresh=None):
+        """One ring shift for the whole shard instead of Zs row shifts.
+        ``fresh`` (bool (Zs,), None = all fresh) marks which rows are
+        genuine new samples — a blacked-out exporter's republished row
+        shifts the ring but not the freshness clock."""
         self.ring[:, :-1] = self.ring[:, 1:]
         self.ring[:, -1] = rows
         self.count += 1
+        if fresh is None:
+            self._last_seen[:] = t
+        else:
+            self._last_seen[fresh] = t
         if self.keep_history:
             for i, h in enumerate(self.histories):
                 h.append_row(t, rows[i])
 
     # device-mode collect: the metric ring lives on the device mesh
     # (core/device_plane.py), so the shard keeps only counts + histories
-    def observe_meta(self, name: str, snap: Snapshot):
+    def observe_meta(self, name: str, snap: Snapshot, fresh: bool = True):
         i = self.index[name]
         self.count[i] += 1
+        if fresh:
+            self._last_seen[i] = snap.t
         if self.keep_history:
             self.histories[i].append(snap)
 
-    def observe_meta_batch(self, t: float, rows: np.ndarray):
+    def observe_meta_batch(self, t: float, rows: np.ndarray, fresh=None):
         self.count += 1
+        if fresh is None:
+            self._last_seen[:] = t
+        else:
+            self._last_seen[fresh] = t
         if self.keep_history:
             for i, h in enumerate(self.histories):
                 h.append_row(t, rows[i])
+
+    def stale_mask(self, t: float):
+        """(Zs,) bool: targets whose last fresh observation is older than
+        the resilience TTL — or None when the TTL is off (the quiet path
+        stays bitwise untouched)."""
+        res = self._res
+        if res is None or not np.isfinite(res.stale_ttl_s):
+            return None
+        return (t - self._last_seen) > res.stale_ttl_s
 
     # ---------------------------------------------------------- formulate --
     def snapshot(self):
@@ -452,10 +526,12 @@ class _VecShard:
         return self.ring.copy(), self.count.copy()
 
     # ----------------------------------------------------------- forecast --
-    def forecast(self, state):
+    def forecast(self, state, stale=None):
         """Batched forecast over the snapshot.  Returns (means, stds, bayes,
         cand): means (Zs, M) with NaN rows for reactive targets.  Reads
-        models/scalers only — safe on a worker thread."""
+        models/scalers only — safe on a worker thread.  ``stale`` (bool
+        (Zs,) or None) drops TTL-expired targets out of the forecast batch
+        before the gather — they ride the reactive path this tick."""
         ring, count = state
         Zs = len(self.names)
         means = np.full((Zs, N_METRICS), np.nan)
@@ -469,6 +545,8 @@ class _VecShard:
                 ok = False
             if ok:
                 cand = count >= self.model.window + 1
+                if stale is not None:
+                    cand = cand & ~stale
             if cand.any():
                 try:
                     mm, ss = self.model.predict_batch(ring[cand])
@@ -495,6 +573,8 @@ class _VecShard:
                     cache["mean"], cache["std"] = \
                         stack_scaler_stats(self.models)
             cand = cache["valid"] & (count >= self.window + 1)
+            if stale is not None:
+                cand = cand & ~stale
             if cand.any():
                 try:
                     means[cand] = self._predict_stacked(ring, cand)
@@ -521,11 +601,13 @@ class _VecShard:
                                   use_pallas=self.use_pallas)
 
     # ----------------------------------------------------------- evaluate --
-    def decide(self, t, state, preds, max_r, cur_r):
+    def decide(self, t, state, preds, max_r, cur_r, stale=None):
         """Vectorised Evaluator.decide_from_prediction + per-type policy
         dispatch + ScaleDownStabilizer — the arithmetic matches the scalar
         objects elementwise (property-tested in tests/test_sharded_plane.py
-        and tests/test_columnar.py)."""
+        and tests/test_columnar.py).  ``stale`` rows hold their current
+        replica count and idle their guardrail (the columnar twin of
+        ``stage_degrade`` + the guard's stale skip)."""
         ring, count = state
         means, stds, bayes, cand = preds
         k = self.cfg.key_metric_idx
@@ -556,23 +638,34 @@ class _VecShard:
         # is ONE reduction over the live span
         maxrec = self._stab_push(t, n)
         final = np.where(n < cur, np.minimum(maxrec, maxr), n)
+        if stale is not None and stale.any():
+            # degraded hold: never scale on a metric past its TTL — pin
+            # at the last fresh-tick decision (fallback: live count)
+            hold = np.where(self._deg_last >= 0, self._deg_last, cur)
+            final = np.where(stale, hold, final)
+            self.stale_held += int(stale.sum())
         if self._grd is not None:
             final = self._guard_apply(final, current_key, cur, maxr,
-                                      key, predicted)
+                                      key, predicted, stale)
+        self._deg_last = (final.copy() if stale is None
+                          else np.where(stale, self._deg_last, final))
         rec = (t, final, key, predicted, conf, maxr,
                means if cand.any() else None, cand)
         self.ticks.append(rec)
         return rec
 
-    def _guard_apply(self, final, realised, cur, maxr, key, predicted
-                     ) -> np.ndarray:
+    def _guard_apply(self, final, realised, cur, maxr, key, predicted,
+                     stale=None) -> np.ndarray:
         """Vectorised :class:`Guardrail` — elementwise identical to the
         scalar oracle (tests/test_guardrail.py).  When every target is
         in-band (the steady state) this costs a handful of (Zs,) compares
         and NO policy evaluation — the <10% quiet-tick overhead bar of the
-        ``guardrail_overhead`` bench lane."""
+        ``guardrail_overhead`` bench lane.  Stale rows count as unarmed:
+        a republished stale sample is not evidence about the forecast."""
         g = self._grd
         armed = np.isfinite(self._grd_prev)
+        if stale is not None:
+            armed = armed & ~stale
         if armed.any():
             with np.errstate(invalid="ignore"):
                 err = ((realised - self._grd_prev)
@@ -677,6 +770,53 @@ class _VecShard:
     def guard_counts(self) -> tuple[int, int]:
         return self.guard_up, self.guard_down
 
+    def degraded_counts(self) -> int:
+        return self.stale_held
+
+    # ------------------------------------------------------- failover ------
+    def state_snapshot(self) -> dict:
+        """Cheap copy of everything a restarted shard process needs: the
+        metric ring, freshness clocks, the stabilizer's live span and the
+        guard arrays.  Decision logs stay out — they are plane-side
+        observability, not process state (DESIGN.md §13)."""
+        lo, hi = self._stab_lo, self._stab_hi
+        return {"ring": self.ring.copy(), "count": self.count.copy(),
+                "last_seen": self._last_seen.copy(),
+                "stab_t": self._stab_t[lo:hi].copy(),
+                "stab_n": self._stab_n[lo:hi].copy(),
+                "grd_prev": self._grd_prev.copy(),
+                "grd_down": self._grd_down.copy(),
+                "deg_last": self._deg_last.copy()}
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild columnar state from a snapshot (bounded staleness: any
+        window observed after the snapshot was taken is lost, exactly as a
+        crashed process would lose it)."""
+        self.ring[:] = snap["ring"]
+        self.count[:] = snap["count"]
+        self._last_seen[:] = snap["last_seen"]
+        span = len(snap["stab_t"])
+        self._stab_t[:span] = snap["stab_t"]
+        self._stab_n[:span] = snap["stab_n"]
+        self._stab_lo, self._stab_hi = 0, span
+        self._grd_prev[:] = snap["grd_prev"]
+        self._grd_down[:] = snap["grd_down"]
+        self._deg_last[:] = snap["deg_last"]
+
+    def wipe(self) -> None:
+        """Simulate the shard process dying: ring, counters, stabilizer
+        and guard state all reset (the decision log survives — it lives
+        with the plane, not the process)."""
+        self.ring[:] = 0.0
+        self.count[:] = 0
+        self._last_seen[:] = -np.inf
+        self._stab_t[:] = -np.inf
+        self._stab_n[:] = 0
+        self._stab_lo = self._stab_hi = 0
+        self._grd_prev[:] = np.nan
+        self._grd_down[:] = 0
+        self._deg_last[:] = -1
+
     def target_models(self):
         return list(self.models) if self.models is not None else None
 
@@ -701,12 +841,19 @@ class _CtrlShard:
         self.ctrl = FleetController(cfg, list(specs), model=model)
         self.names = [s.name for s in specs]
 
-    def observe(self, name, snap):
-        self.ctrl.observe(name, snap)
+    def observe(self, name, snap, fresh=True):
+        self.ctrl.observe(name, snap, fresh=fresh)
 
-    def observe_batch(self, t, rows):
-        for n, row in zip(self.names, rows):
-            self.ctrl.observe(n, Snapshot(t, row))
+    def observe_batch(self, t, rows, fresh=None):
+        for i, (n, row) in enumerate(zip(self.names, rows)):
+            self.ctrl.observe(n, Snapshot(t, row),
+                              fresh=True if fresh is None else bool(fresh[i]))
+
+    def stale_mask(self, t):
+        """The scalar twin's stale token: a set of names (``None`` when
+        the TTL is off), consumed by this shard's own forecast/decide."""
+        names = self.ctrl._stale_names(t)
+        return names if names else None
 
     def snapshot(self):
         out = {}
@@ -716,18 +863,25 @@ class _CtrlShard:
                       else np.zeros((1, N_METRICS)))
         return out
 
-    def forecast(self, state):
-        return self.ctrl._predict_all(self.names, state)
+    def forecast(self, state, stale=None):
+        names = (self.names if not stale
+                 else [n for n in self.names if n not in stale])
+        return self.ctrl._predict_all(names, state)
 
-    def decide(self, t, state, preds, max_r, cur_r):
+    def decide(self, t, state, preds, max_r, cur_r, stale=None):
         tick = Tick(t=t, names=self.names,
                     max_r=as_replica_map(max_r, self.names),
                     cur_r=as_replica_map(cur_r, self.names))
         tick.recents = state
         tick.preds = preds
+        tick.stale = set(stale) if stale else set()
         stage_evaluate(self.ctrl, tick)
+        stage_degrade(self.ctrl, tick)
         stage_guard(self.ctrl, tick)
         return tick.results
+
+    def degraded_counts(self) -> int:
+        return self.ctrl._deg_stale
 
     def guard_counts(self) -> tuple[int, int]:
         guards = [st.guard for st in self.ctrl.targets.values()
@@ -879,6 +1033,22 @@ class ShardedControlPlane:
         self._refit = None               # (t, future|None, _PendingUpdate)
         self._last_update_t = 0.0
         self.refit_log: list[dict] = []  # wall-clock overlap bookkeeping
+        # degraded mode (DESIGN.md §13, armed by cfg.resilience): shard
+        # snapshot ring for failover, crash countdowns + buffered rows for
+        # reactive serving while a shard is down, the next-tick forecast
+        # stall (chaos STALL events) and the observability counters behind
+        # degraded_stats()
+        self._res = getattr(cfg, "resilience", None)
+        S = len(self.shards)
+        self._shard_index = {id(s): i for i, s in enumerate(self.shards)}
+        self._shard_snaps: list = [None] * S
+        self._crash_left = np.zeros(S, np.int64)
+        self._crash_rows: list = [None] * S
+        self._stall_s = 0.0
+        self._ticks_done = 0
+        self._deg = {"deadline_skips": 0, "deadline_reactive": 0,
+                     "crash_reactive": 0, "failovers": 0,
+                     "recovery_ticks": 0, "snapshots": 0}
         # fused (coalesced) dispatch: on a single accelerator the S logical
         # shards gang their forecast tensors into ONE device dispatch per
         # tick (per-shard dispatch overhead dominates otherwise); with
@@ -918,6 +1088,7 @@ class ShardedControlPlane:
             Z = len(self._names)
             self._dev_counts = np.zeros(Z, np.int64)
             self._dev_last = np.zeros((Z, N_METRICS))
+            self._dev_last_seen = np.full(Z, -np.inf)
             self._dev_keep_history = any(s.keep_history
                                          for s in self.shards)
             # contiguous-block assignments (the deployment shape) feed
@@ -976,37 +1147,60 @@ class ShardedControlPlane:
         return {"up_overrides": up, "down_overrides": down}
 
     # ----------------------------------------------------------- collect --
-    def observe(self, name: str, snap: Snapshot):
+    def observe(self, name: str, snap: Snapshot, fresh: bool = True):
         """Collect one metric snapshot for one target (the scalar feed;
-        ``observe_batch`` is the columnar fast path)."""
+        ``observe_batch`` is the columnar fast path).  ``fresh=False``
+        records a republished (blacked-out exporter) sample: the window
+        still shifts, but the target's staleness clock does not advance."""
         if self._engine is not None:
             i = self._pos[name]
             self._engine.push_row(i, snap.values)
             self._dev_counts[i] += 1
             self._dev_last[i] = snap.values
-            self._shard_of[name].observe_meta(name, snap)
+            if fresh:
+                self._dev_last_seen[i] = snap.t
+            self._shard_of[name].observe_meta(name, snap, fresh=fresh)
             return
-        self._shard_of[name].observe(name, snap)
+        shard = self._shard_of[name]
+        if self._crash_left[self._shard_index[id(shard)]] > 0:
+            return   # the crashed shard process missed this sample
+        shard.observe(name, snap, fresh=fresh)
 
-    def observe_batch(self, t: float, values):
+    def observe_batch(self, t: float, values, fresh=None):
         """Batched collect: ``values`` is {name: row} or a (Z, M) array in
         target-list order — one ring shift per shard instead of Z calls
         (device mode: ONE device-resident ring shift for the whole plane,
-        the tick's single host->device row upload)."""
+        the tick's single host->device row upload).  ``fresh`` is an
+        optional (Z,) bool mask — False rows are republished stale samples
+        whose staleness clocks must not advance.  Rows addressed to a
+        crashed shard are buffered so the failover tick can serve them
+        reactively (the shard's own window died with the process)."""
         if isinstance(values, dict):
             rows = np.asarray([values[n] for n in self._names], np.float64)
         else:
             rows = np.asarray(values, np.float64)
+        if fresh is not None:
+            fresh = np.asarray(fresh, bool)
         if self._engine is not None:
             self._engine.push_rows(rows)
             self._dev_counts += 1
             self._dev_last[:] = rows
+            if fresh is None:
+                self._dev_last_seen[:] = t
+            else:
+                self._dev_last_seen[fresh] = t
             if self._dev_keep_history:
                 for shard, idx in self._shard_rows:
-                    shard.observe_meta_batch(t, rows[idx])
+                    shard.observe_meta_batch(
+                        t, rows[idx],
+                        fresh=None if fresh is None else fresh[idx])
             return
-        for shard, idx in self._shard_rows:
-            shard.observe_batch(t, rows[idx])
+        for si, (shard, idx) in enumerate(self._shard_rows):
+            if self._crash_left[si] > 0:
+                self._crash_rows[si] = rows[idx].copy()
+                continue
+            shard.observe_batch(t, rows[idx],
+                                fresh=None if fresh is None else fresh[idx])
 
     # -------------------------------------------------------- control loop -
     def begin_tick(self, t: float, max_replicas, current_replicas):
@@ -1019,6 +1213,9 @@ class ShardedControlPlane:
             raise RuntimeError("previous tick not finished "
                                "(finish_tick barrier missing)")
         go_async = self._pool is not None and self.async_ticks
+        stall = self._stall_s       # one-shot forecaster stall (chaos)
+        self._stall_s = 0.0
+        wall0 = time.monotonic()    # forecast-deadline anchor
         if self._engine is not None:
             # device mode: refresh the device weight caches iff the refit
             # epoch moved (between ticks, so no in-flight reader), then
@@ -1029,63 +1226,273 @@ class ShardedControlPlane:
             ring_ref = self._engine.snapshot()
             counts = self._dev_counts.copy()
             state = (self._dev_last.copy(), counts)
-            fut = (self._pool.submit(self._engine.forecast, ring_ref,
-                                     counts)
+            res = self._res
+            stale = None
+            if res is not None and np.isfinite(res.stale_ttl_s):
+                stale = (t - self._dev_last_seen) > res.stale_ttl_s
+            fut = (self._pool.submit(self._stall_then, stall,
+                                     self._engine.forecast, ring_ref,
+                                     counts, stale)
                    if go_async
-                   else _Immediate(self._engine.forecast(ring_ref, counts)))
+                   else _Immediate(self._stall_then(
+                       stall, self._engine.forecast, ring_ref, counts,
+                       stale)))
             self._pending = (t, max_replicas, current_replicas, state,
-                             [fut])
+                             [fut], [stale], wall0)
             return self
         states = [shard.snapshot() for shard in self.shards]
+        stales = self._stale_masks(t)
         if self._fused:
-            preps = self._prepare_fused(states)
-            fut = (self._pool.submit(self._forecast_fused, preps) if go_async
-                   else _Immediate(self._forecast_fused(preps)))
+            preps = self._prepare_fused(states, stales)
+            fut = (self._pool.submit(self._stall_then, stall,
+                                     self._forecast_fused, preps)
+                   if go_async
+                   else _Immediate(self._stall_then(stall,
+                                                    self._forecast_fused,
+                                                    preps)))
             futs = [fut]
         else:
-            futs = [(self._pool.submit(shard.forecast, state) if go_async
-                     else _Immediate(shard.forecast(state)))
-                    for shard, state in zip(self.shards, states)]
-        self._pending = (t, max_replicas, current_replicas, states, futs)
+            futs = []
+            for si, (shard, state) in enumerate(zip(self.shards, states)):
+                if self._crash_left[si] > 0:
+                    futs.append(_Immediate(None))   # served reactively
+                    continue
+                stale_s = None if stales is None else stales[si]
+                futs.append(self._pool.submit(self._stall_then, stall,
+                                              shard.forecast, state,
+                                              stale_s)
+                            if go_async
+                            else _Immediate(self._stall_then(
+                                stall, shard.forecast, state, stale_s)))
+        self._pending = (t, max_replicas, current_replicas, states, futs,
+                         stales, wall0)
         return self
 
     def finish_tick(self) -> TickResult:
-        """The actuation barrier: joins the in-flight forecasts, evaluates
-        and stabilises every shard, and installs any finished refit."""
+        """The actuation barrier: joins the in-flight forecasts (bounded by
+        the resilience forecast deadline — an overrun drops the whole tick
+        to the reactive path), evaluates and stabilises every shard —
+        crashed shards are served reactively from buffered driver rows (or
+        held) — and installs any finished refit."""
         if self._pending is None:
             raise RuntimeError("no tick in flight (call begin_tick first)")
-        t, max_r, cur_r, states, futs = self._pending
+        t, max_r, cur_r, states, futs, stales, wall0 = self._pending
         self._pending = None
+        res = self._res
+        deadline = (res.forecast_deadline_s if res is not None
+                    else float("inf"))
         if self._engine is not None:
             # device mode: one joined (Z, M) prediction batch; evaluate
             # stays the shards' columnar host math, fed a fabricated
             # 1-row ring so ``ring[:, -1, k]`` still reads the last row
             last, counts = states
-            means_full, cand_full = futs[0].result()
+            out = self._join(futs[0], wall0, deadline)
+            Z = len(self._names)
+            if out is None:
+                self._deg["deadline_skips"] += 1
+                self._deg["deadline_reactive"] += Z
+                means_full = np.full((Z, N_METRICS), np.nan)
+                cand_full = np.zeros(Z, bool)
+            else:
+                means_full, cand_full = out
+            stale_full = stales[0]
             per_shard = []
             for (shard, _), idx in zip(self._shard_rows,
                                        self._shard_cuts):
                 state_s = (last[idx][:, None, :], counts[idx])
                 preds_s = (means_full[idx], None, False, cand_full[idx])
-                rec = shard.decide(t, state_s, preds_s,
-                                   _bound_slice(max_r, idx),
-                                   _bound_slice(cur_r, idx))
+                rec = shard.decide(
+                    t, state_s, preds_s, _bound_slice(max_r, idx),
+                    _bound_slice(cur_r, idx),
+                    stale=None if stale_full is None else stale_full[idx])
                 per_shard.append((shard, rec))
+            self._ticks_done += 1
+            if res is not None:
+                self._tick_epilogue()
             self.poll_updates()
             return TickResult(self, per_shard, t)
+        deadline_hit = False
         if self._fused:
-            preds_list = futs[0].result()
+            out = self._join(futs[0], wall0, deadline)
+            deadline_hit = out is None
+            preds_list = ([None] * len(self.shards) if deadline_hit
+                          else out)
         else:
-            preds_list = [f.result() for f in futs]
+            preds_list = []
+            for si, f in enumerate(futs):
+                if self._crash_left[si] > 0:
+                    preds_list.append(None)   # crash branch below
+                    continue
+                out = self._join(f, wall0, deadline)
+                if out is None:
+                    deadline_hit = True
+                preds_list.append(out)
         per_shard = []
-        for (shard, idx), state, preds in zip(self._shard_rows, states,
-                                              preds_list):
+        deadline_reactive = 0
+        for si, ((shard, idx), state) in enumerate(zip(self._shard_rows,
+                                                       states)):
+            if self._crash_left[si] > 0:
+                per_shard.append(
+                    (shard, self._crash_decide(si, shard, t, max_r, cur_r,
+                                               idx)))
+                continue
+            preds = preds_list[si]
+            if preds is None:   # forecast missed the deadline -> reactive
+                preds = self._reactive_preds_for(shard)
+                deadline_reactive += len(shard.names)
             rec = shard.decide(t, state, preds,
                                _bound_slice(max_r, idx),
-                               _bound_slice(cur_r, idx))
+                               _bound_slice(cur_r, idx),
+                               stale=None if stales is None else stales[si])
             per_shard.append((shard, rec))
+        if deadline_hit:
+            self._deg["deadline_skips"] += 1
+            self._deg["deadline_reactive"] += deadline_reactive
+        self._ticks_done += 1
+        if res is not None:
+            self._tick_epilogue()
         self.poll_updates()
         return TickResult(self, per_shard, t)
+
+    # ----------------------------------------------------- degraded mode --
+    def _stale_masks(self, t: float):
+        """Per-shard staleness tokens at tick time ``t`` (None = the TTL is
+        off, the quiet fast path).  Vectorized shards yield bool arrays,
+        scalar shards name-sets — each shard's own ``stale_mask`` shape."""
+        res = self._res
+        if res is None or not np.isfinite(res.stale_ttl_s):
+            return None
+        return [shard.stale_mask(t) for shard in self.shards]
+
+    @staticmethod
+    def _stall_then(stall: float, fn, *args):
+        """Run ``fn`` after an injected forecaster stall (chaos STALL
+        events model a hiccuping inference service; zero stall is the
+        permanent no-op fast path)."""
+        if stall > 0.0:
+            time.sleep(stall)
+        return fn(*args)
+
+    @staticmethod
+    def _join(fut, wall0: float, deadline: float):
+        """Join a forecast future against the tick's wall-clock deadline;
+        returns None when the budget is spent (the caller serves the tick
+        reactively — the forecast result is discarded, exactly what a
+        control loop that cannot wait must do)."""
+        if not np.isfinite(deadline):
+            return fut.result()
+        if isinstance(fut, _Immediate):   # sync mode: work already done
+            return (fut.result()
+                    if time.monotonic() - wall0 <= deadline else None)
+        try:
+            left = deadline - (time.monotonic() - wall0)
+            return fut.result(timeout=max(left, 0.0))
+        except FuturesTimeout:
+            return None
+
+    @staticmethod
+    def _reactive_preds_for(shard):
+        """An all-reactive prediction batch in the shard's own shape: no
+        candidates, so every target falls through to the realised-metric
+        policy path (Evaluator's missing-prediction rule)."""
+        if not shard.vectorized:
+            return {}
+        Zs = len(shard.names)
+        return (np.full((Zs, N_METRICS), np.nan), None, False,
+                np.zeros(Zs, bool))
+
+    def _crash_decide(self, si: int, shard, t: float, max_r, cur_r, idx):
+        """Serve a crashed shard's targets for one tick: reactively from
+        the driver rows buffered since the crash (the shard's own window
+        died with the process), or a plain hold at the current count when
+        nothing has arrived yet.  Either way the fleet keeps receiving
+        decisions while the failover rebuilds."""
+        Zs = len(shard.names)
+        self._deg["crash_reactive"] += Zs
+        maxr = shard._as_array(_bound_slice(max_r, idx))
+        cur = shard._as_array(_bound_slice(cur_r, idx))
+        buf = self._crash_rows[si]
+        if buf is None:
+            rec = (t, cur.copy(), np.zeros(Zs),
+                   np.zeros(Zs, bool), np.ones(Zs, bool), maxr, None,
+                   np.zeros(Zs, bool))
+            shard.ticks.append(rec)
+            return rec
+        state = (buf[:, None, :], np.ones(Zs, np.int64))
+        return shard.decide(t, state, self._reactive_preds_for(shard),
+                            maxr, cur)
+
+    def _tick_epilogue(self):
+        """Per-tick resilience bookkeeping: crashed-shard countdowns (a
+        shard that reaches zero restores from its last snapshot — the
+        failover) and the periodic snapshot cadence."""
+        res = self._res
+        for si in np.flatnonzero(self._crash_left > 0):
+            self._deg["recovery_ticks"] += 1
+            self._crash_left[si] -= 1
+            if self._crash_left[si] == 0:
+                snap = self._shard_snaps[si]
+                if snap is not None:
+                    self.shards[si].restore(snap)
+                self._deg["failovers"] += 1
+                self._crash_rows[si] = None
+        if res.snapshot_every > 0 \
+                and self._ticks_done % res.snapshot_every == 0:
+            for si, shard in enumerate(self.shards):
+                if shard.vectorized and self._crash_left[si] == 0:
+                    self._shard_snaps[si] = shard.state_snapshot()
+                    self._deg["snapshots"] += 1
+
+    def crash_shard(self, si: int, down_ticks: int | None = None):
+        """Chaos entry point: kill shard ``si``'s working state (ring,
+        stabilizer, guard) as a crash-restart would.  For ``down_ticks``
+        ticks its targets are served reactively / held; then the shard
+        restores from the last periodic snapshot (bounded staleness) and
+        resumes the proactive path."""
+        if self._engine is not None:
+            raise RuntimeError("crash_shard: device mode keeps forecast "
+                               "state mesh-resident, not per shard")
+        res = self._res
+        if res is None or res.snapshot_every <= 0:
+            raise RuntimeError("crash_shard needs cfg.resilience with "
+                               "snapshot_every > 0 (no snapshot, no "
+                               "failover)")
+        si = int(si)
+        shard = self.shards[si]
+        if not shard.vectorized:
+            raise RuntimeError("crash_shard: scalar shards have no "
+                               "snapshot/restore surface")
+        shard.wipe()
+        self._crash_left[si] = max(int(down_ticks or 1), 1)
+        self._crash_rows[si] = None
+
+    def inject_forecast_stall(self, seconds: float):
+        """Chaos entry point: the NEXT tick's forecast sleeps ``seconds``
+        before running — with a resilience deadline armed, the tick rides
+        the reactive path instead of blocking actuation."""
+        self._stall_s = max(float(seconds), 0.0)
+
+    def abort_tick(self):
+        """Controller crash-restart mid-flight: drop the in-flight tick
+        without actuating (the forecast future is abandoned; shard windows
+        were snapshotted at begin so nothing is torn).  The next
+        begin_tick starts clean — crash-safety for the staged loop."""
+        self._pending = None
+
+    def degraded_stats(self) -> dict:
+        """Cumulative degraded-mode counters: targets held on stale
+        metrics, ticks served reactively (stale + crash + deadline), the
+        failover and snapshot machinery — ``FleetController`` exposes the
+        same keys, so A/B harnesses read one dict shape."""
+        stale = sum(s.degraded_counts() for s in self.shards)
+        d = self._deg
+        return {"stale_targets": stale,
+                "reactive_fallbacks": (stale + d["crash_reactive"]
+                                       + d["deadline_reactive"]),
+                "deadline_skips": d["deadline_skips"],
+                "failovers": d["failovers"],
+                "recovery_ticks": d["recovery_ticks"],
+                "snapshots": d["snapshots"]}
 
     # ------------------------------------------------------ fused dispatch -
     def _refresh_fused_cache(self) -> dict:
@@ -1105,18 +1512,22 @@ class ShardedControlPlane:
                 cache["mean"], cache["std"] = stack_scaler_stats(models)
         return cache
 
-    def _prepare_fused(self, states) -> list[tuple]:
+    def _prepare_fused(self, states, stales=None) -> list[tuple]:
         """Control-thread half of the fused forecast: candidate masks and
         window gathers (cheap copies); the transforms and the device
-        dispatch run in ``_forecast_fused`` (overlappable)."""
+        dispatch run in ``_forecast_fused`` (overlappable).  ``stales``
+        drops TTL-expired targets out of the candidate set before the
+        gather — stale windows never reach the device."""
         preps = []
         if self.per_target_models:
             cache = self._refresh_fused_cache()
-            for shard, (ring, count), off in zip(self.shards, states,
-                                                 self._offsets):
+            for si, (shard, (ring, count), off) in enumerate(
+                    zip(self.shards, states, self._offsets)):
                 Zs = len(shard.names)
                 cand = (cache["valid"][off:off + Zs]
                         & (count >= shard.window + 1))
+                if stales is not None and stales[si] is not None:
+                    cand = cand & ~stales[si]
                 idx = np.flatnonzero(cand)
                 preps.append((cand, idx + off,
                               ring[idx, -shard.window:, :]))
@@ -1126,8 +1537,11 @@ class ShardedControlPlane:
             except Exception:
                 ok = False
             need = self.model.window + 1
-            for shard, (ring, count) in zip(self.shards, states):
+            for si, (shard, (ring, count)) in enumerate(
+                    zip(self.shards, states)):
                 cand = (count >= need) & ok
+                if stales is not None and stales[si] is not None:
+                    cand = cand & ~stales[si]
                 idx = np.flatnonzero(cand)
                 preps.append((cand, idx, ring[idx]))
         return preps

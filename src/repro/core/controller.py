@@ -31,9 +31,9 @@ import numpy as np
 
 from repro.core.control_plane import (Guardrail, Tick, as_replica_map,
                                       prediction_mse, stage_actuate,
-                                      stage_evaluate, stage_forecast,
-                                      stage_formulate, stage_guard,
-                                      validate_targets)
+                                      stage_degrade, stage_evaluate,
+                                      stage_forecast, stage_formulate,
+                                      stage_guard, validate_targets)
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import (Forecaster, LSTMForecaster,
                                    lstm_predict_batch_stacked,
@@ -65,6 +65,10 @@ class _TargetState:
         # purely proactive plane)
         self.guard = (Guardrail(cfg.guard, spec.policy)
                       if getattr(cfg, "guard", None) is not None else None)
+        # time of the last *fresh* observation (a blacked-out exporter
+        # republishing its last sample does not advance this) — the
+        # stale-metric TTL's anchor (DESIGN.md §13)
+        self.last_seen = -np.inf
 
 
 class FleetController:
@@ -87,6 +91,10 @@ class FleetController:
                               cfg.confidence_threshold) for t in targets}
         self._last_update_t = 0.0
         self._stack_cache: dict = {}   # stacked-params reuse across ticks
+        self._deg_stale = 0            # target-ticks held on stale metrics
+        # last fresh-tick decision per target: the degraded hold's anchor
+        # (stage_degrade) — k8s keeps desiredReplicas on missing metrics
+        self._deg_last: dict[str, int] = {}
 
     # ------------------------------------------------------------ access --
     @property
@@ -114,14 +122,38 @@ class FleetController:
         return {"up_overrides": sum(g.up_fired for g in guards),
                 "down_overrides": sum(g.down_fired for g in guards)}
 
+    def degraded_stats(self) -> dict:
+        """Degraded-mode counters, same keys as
+        ``ShardedControlPlane.degraded_stats`` (the scalar twin only has
+        the stale-TTL path — no shards to fail over, no async forecast to
+        deadline)."""
+        return {"stale_targets": self._deg_stale,
+                "reactive_fallbacks": self._deg_stale,
+                "deadline_skips": 0, "failovers": 0,
+                "recovery_ticks": 0, "snapshots": 0}
+
     # -------------------------------------------------------- formulator --
-    def observe(self, name: str, snap: Snapshot):
+    def observe(self, name: str, snap: Snapshot, fresh: bool = True):
+        """``fresh=False`` records a republished (stale) sample: the
+        window still shifts — that is what the exporter actually served —
+        but the target's freshness clock does not advance."""
         st = self.targets[name]
         st.history.append(snap)
         st.recent.append(snap.values)
+        if fresh:
+            st.last_seen = snap.t
         model = self.model_for(name)
         window = model.window if model is not None else 1
         st.recent = st.recent[-max(window + 1, 8):]
+
+    def _stale_names(self, t: float) -> set:
+        """Targets whose last fresh observation is older than the
+        resilience TTL (empty when resilience is off — the quiet no-op)."""
+        res = getattr(self.cfg, "resilience", None)
+        if res is None or not np.isfinite(res.stale_ttl_s):
+            return set()
+        return {n for n, st in self.targets.items()
+                if t - st.last_seen > res.stale_ttl_s}
 
     # ----------------------------------------------------------- predict --
     def _predictable(self, name: str, recent=None) -> bool:
@@ -199,6 +231,7 @@ class FleetController:
         stage_formulate(self, tick)
         stage_forecast(self, tick)
         stage_evaluate(self, tick)
+        stage_degrade(self, tick)
         stage_guard(self, tick)
         return stage_actuate(tick, actuator)
 

@@ -233,12 +233,18 @@ class DevicePlaneEngine:
                       P(CONTROL_AXIS)),
             out_specs=P(CONTROL_AXIS)))
 
-    def forecast(self, ring_ref, counts: np.ndarray):
+    def forecast(self, ring_ref, counts: np.ndarray, stale=None):
         """Forecast every target from a ring snapshot: returns
         ``(means (Z, M) f32 with NaN rows for non-candidates, cand (Z,))``.
         Reads only device caches + the immutable snapshot — safe on a
-        worker thread while the driver keeps pushing next-window rows."""
+        worker thread while the driver keeps pushing next-window rows.
+        ``stale`` (optional (Z,) bool, DESIGN.md §13) masks TTL-expired
+        targets out of the candidate set host-side, so their NaN means
+        route them down the reactive path — and a full-plane blackout
+        skips the device dispatch entirely."""
         cand = self._valid & (counts >= self.window + 1)
+        if stale is not None:
+            cand = cand & ~stale
         if not cand.any():
             return np.full((self.Z, N_METRICS), np.nan, np.float32), cand
         try:

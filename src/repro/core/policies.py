@@ -242,6 +242,29 @@ class GuardrailConfig:
     eps: float = 1e-9
 
 
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Degraded-mode knobs for the control plane (DESIGN.md §13,
+    docs/resilience.md).  Defaults are all-off sentinels so a config with
+    ``resilience=None`` *or* a default instance changes nothing.
+
+    * ``stale_ttl_s`` — per-target metric freshness TTL: once a target's
+      last *fresh* observation is older than this, it drops out of the
+      forecast batch (NaN-masked candidacy), its decision **holds** the
+      current replica count (the Kubernetes missing-metrics rule: never
+      act on data you do not have), and its guardrail idles for the tick.
+    * ``forecast_deadline_s`` — wall-clock budget for the fused forecast
+      dispatch; an overrun discards the forecast and serves the whole
+      tick reactively instead of blocking actuation on a stalled model.
+    * ``snapshot_every`` — shard-state snapshot cadence in ticks (0 =
+      never): ring + counters + stabilizer + guard state, cheap copies a
+      crashed shard restores from with bounded staleness.
+    """
+    stale_ttl_s: float = math.inf
+    forecast_deadline_s: float = math.inf
+    snapshot_every: int = 0
+
+
 def policy_vectorizable(policy) -> bool:
     """True when ``policy``'s *type* carries the columnar protocol
     (``stack`` + ``evaluate_batch``) — the sharded plane's dispatch-table

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.evaluator import Evaluator, EvalResult
 from repro.core.forecaster import Forecaster
 from repro.core.metrics import MetricsHistory, Snapshot
-from repro.core.policies import GuardrailConfig, Policy
+from repro.core.policies import GuardrailConfig, Policy, ResilienceConfig
 from repro.core.updater import Updater
 
 
@@ -38,6 +38,12 @@ class PPAConfig:
     # in FleetController / ShardedControlPlane (the scalar PPA below stays
     # paper-faithful and ignores it)
     guard: GuardrailConfig | None = None
+    # degraded-mode handling (DESIGN.md §13, docs/resilience.md): None =
+    # trust every metric and wait forever for forecasts (the paper's
+    # assumption); a ResilienceConfig arms stale-metric TTL fallback, the
+    # forecast deadline and shard snapshot/failover in FleetController /
+    # ShardedControlPlane (the scalar PPA below stays paper-faithful)
+    resilience: ResilienceConfig | None = None
     # forecaster selection (the paper's ModelType): a ``make_forecaster``
     # kind plus its constructor kwargs.  Scenario drivers that build one
     # model per target call ``build_forecaster()`` instead of hard-coding

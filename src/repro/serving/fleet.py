@@ -141,6 +141,7 @@ class ServingFleet:
             self._rep_dead = np.zeros(16, np.bool_)
             self._rep_draining = np.zeros(16, np.bool_)
             self._rep_n = 0
+            self._rep_base = None   # cached ~dead & ~draining (live mask)
             streaming = self.cfg.log_streaming
             if streaming is None:
                 streaming = (self.cfg.total_chips
@@ -252,10 +253,18 @@ class ServingFleet:
 
     # ---------------------------------------------- batch-mode replicas ----
     def _rep_live_mask(self, t: float | None = None) -> np.ndarray:
-        m = ~self._rep_dead[:self._rep_n] & ~self._rep_draining[:self._rep_n]
+        """Live = not dead and not draining.  The base mask only changes on
+        spawn / drain / failure (each resets the cache), so steady-state
+        ticks reuse one array instead of re-deriving two boolean ops per
+        call — callers of the no-``t`` form must not mutate the result."""
+        base = self._rep_base
+        if base is None or base.size != self._rep_n:
+            base = self._rep_base = (
+                ~self._rep_dead[:self._rep_n]
+                & ~self._rep_draining[:self._rep_n])
         if t is not None:
-            m &= self._rep_ready[:self._rep_n] <= t
-        return m
+            return base & (self._rep_ready[:self._rep_n] <= t)
+        return base
 
     def _grow_reps(self, need: int):
         for name in ("_rep_ready", "_rep_speed", "_rep_dead",
@@ -276,6 +285,7 @@ class ServingFleet:
             self._rep_ready[rids] = t + self.cfg.spawn_s
             self._rep_speed[rids] = 1.0
             self._rep_n += k
+            self._rep_base = None
             # slot key = max(slot_free, ready) = ready until first dispatch;
             # pool ready stays 0 so selection is single-phase (the heap
             # fleet pool folds ready into the key the same way)
@@ -287,6 +297,7 @@ class ServingFleet:
             order = np.argsort(-self._rep_ready[live], kind="stable")
             victims = live[order][:cur - n]
             self._rep_draining[victims] = True
+            self._rep_base = None
             self._spool.invalidate(
                 (victims[:, None] * S + np.arange(S)).ravel())
 
@@ -556,6 +567,7 @@ class ServingFleet:
                 continue
             if kind == "fail" and not self._rep_dead[rid]:
                 self._rep_dead[rid] = True
+                self._rep_base = None
                 self._spool.invalidate(np.arange(rid * S, rid * S + S))
                 rows = self.completed_log.view()
                 orphan = np.flatnonzero((rows["server"] == rid)
@@ -603,16 +615,34 @@ class ServingFleet:
             self.dispatch(req, t)
 
     # ------------------------------------------------------------ metrics --
-    def sample(self, t: float) -> Snapshot:
+    def take_window_resp(self) -> np.ndarray:
+        """Drain this window's booked finite response times (batch mode) —
+        the per-fleet half of the federation's batched percentile: the
+        driver collects every fleet's array, runs ONE ``batched_p95`` over
+        the concatenation and hands each fleet its value via
+        ``sample(t, p95=...)``."""
+        if not self._win_resp:
+            return np.zeros(0)
+        resp = (self._win_resp[0] if len(self._win_resp) == 1
+                else np.concatenate(self._win_resp))
+        self._win_resp.clear()
+        return resp[np.isfinite(resp)]
+
+    def sample(self, t: float, p95: float | None = None) -> Snapshot:
         """Publish the fleet metric vector for the control window ending at
         ``t``: ``[util*cap, window_p95, busy, rate*10, rate]``.  Slot 1 is
         the p95 of the *booked* response times of requests dispatched since
         the last sample (0.0 for an idle window) — the latency ground truth
         ``SLAPolicy`` targets with ``key_metric_idx=1``; heap and batch
         modes compute it over the identical request multiset, so the
-        published vector stays bitwise equal between them."""
+        published vector stays bitwise equal between them.  ``p95`` (batch
+        mode only) injects a precomputed window percentile — the federation
+        driver's ``batched_p95`` across all fleets — after draining the
+        window buffer with ``take_window_resp``."""
         if self._vec:
-            return self._vec_sample(t)
+            return self._vec_sample(t, p95)
+        if p95 is not None:
+            raise RuntimeError("precomputed p95 requires batch mode")
         w = self.cfg.control_interval_s
         exporter = self.core.exporter
         win = exporter.window_index(t)
@@ -633,11 +663,13 @@ class ServingFleet:
         ma = exporter.push(_GROUP, t, vals)
         return Snapshot(t, ma)
 
-    def _vec_sample(self, t: float) -> Snapshot:
+    def _vec_sample(self, t: float, p95: float | None = None) -> Snapshot:
         """Fleet-level columnar readout: same metric vector as the heap
         path (draining replicas count toward capacity, dead ones don't;
         busy comes from the WindowAccumulator, the window p95 from the
-        dispatch chunks since the last sample)."""
+        dispatch chunks since the last sample — or precomputed by the
+        federation's ``batched_p95``, in which case the window buffer was
+        already drained by ``take_window_resp``)."""
         cfg = self.cfg
         w = cfg.control_interval_s
         exporter = self.core.exporter
@@ -650,14 +682,11 @@ class ServingFleet:
         busy = self._busy_acc.get(win) / w
         util = 100.0 * busy / max(cap, 1)
         rate = exporter.take_count(_GROUP) / w
-        if self._win_resp:
-            resp = (self._win_resp[0] if len(self._win_resp) == 1
-                    else np.concatenate(self._win_resp))
-            self._win_resp.clear()
-            resp = resp[np.isfinite(resp)]
+        if p95 is None:
+            resp = self.take_window_resp()
             p95 = float(np.percentile(resp, 95)) if resp.size else 0.0
         else:
-            p95 = 0.0
+            p95 = float(p95)
         vals = np.array([util * max(cap, 1), p95, busy, rate * 10, rate])
         return Snapshot(t, exporter.push(_GROUP, t, vals))
 
@@ -734,6 +763,38 @@ class ServingFleet:
             total_cap += len(live) * self.cfg.slots_per_replica * w
             total_busy += sum(r.busy.get(win, 0.0) for r in live)
         return 1.0 - total_busy / max(total_cap, 1e-9)
+
+
+def batched_p95(segments: list) -> np.ndarray:
+    """95th percentile of many response-time segments in ONE sort: the
+    federation's replacement for a per-fleet ``np.percentile`` loop.  A
+    single lexsort over (segment id, value) orders every fleet's window at
+    once; the linear-interpolation extraction replicates numpy's
+    ``_lerp`` exactly (including its ``gamma >= 0.5`` rewrite), so each
+    entry is BITWISE equal to ``np.percentile(seg, 95)``.  Empty segments
+    publish 0.0 — the idle-window convention of ``sample``."""
+    out = np.zeros(len(segments))
+    sizes = np.array([s.size for s in segments], np.int64)
+    nz = np.flatnonzero(sizes)
+    if not nz.size:
+        return out
+    vals = np.concatenate([segments[i] for i in nz])
+    seg = np.repeat(np.arange(nz.size), sizes[nz])
+    svals = vals[np.lexsort((vals, seg))]
+    ends = np.cumsum(sizes[nz])
+    starts = ends - sizes[nz]
+    v = 0.95 * (sizes[nz] - 1.0)
+    prev = np.floor(v)
+    g = v - prev
+    a = svals[starts + prev.astype(np.int64)]
+    b = svals[starts + np.minimum(prev.astype(np.int64) + 1,
+                                  sizes[nz] - 1)]
+    diff = b - a
+    r = a + diff * g
+    hi = g >= 0.5
+    r[hi] = b[hi] - diff[hi] * (1.0 - g[hi])
+    out[nz] = r
+    return out
 
 
 def _as_request_arrays(requests) -> tuple[np.ndarray, np.ndarray]:

@@ -293,11 +293,21 @@ class MultiFleetSim:
 
     # -------------------------------------------------------------- run ----
     def run(
-        self, requests: dict[str, list[tuple[float, int]]], t_end: float
+        self, requests: dict[str, list[tuple[float, int]]], t_end: float,
+        scenario=None,
     ) -> "MultiFleetSim":
         """``requests``: per-fleet sorted (arrival_t, n_tokens) lists (or
-        in batch mode ``(times, n_tokens)`` array pairs)."""
+        in batch mode ``(times, n_tokens)`` array pairs).  ``scenario``
+        (a ``workloads.scenarios.ChaosScenario``) replays a seeded fault
+        tape over the run — node-failure storms, exporter blackouts
+        (stale republished rows), forecaster stalls, shard crashes — and
+        swaps any fleet named in ``scenario.clients`` onto its closed-loop
+        retry-amplifying arrival generator (batch mode only: the client
+        produces one window at a time from the fleet's observed p95)."""
         ctrl = self.controller
+        if scenario is not None and scenario.clients and not self.batch:
+            raise ValueError("closed-loop clients need batch=True "
+                             "(windowed dispatch)")
         for n, f in self.fleets.items():
             f.set_chip_budget(self.arbiter.total_chips, 0.0)
             f.scale_to(ctrl.min_replicas(n), 0.0)
@@ -309,24 +319,91 @@ class MultiFleetSim:
                         for n in self.fleets}
         ticks = np.arange(self.window_s, t_end, self.window_s)
         if self.columnar:
-            return self._run_columnar(requests, ticks, t_end)
-        return self._run_scalar(requests, ticks, t_end)
+            return self._run_columnar(requests, ticks, t_end, scenario)
+        return self._run_scalar(requests, ticks, t_end, scenario)
 
-    def _run_scalar(self, requests, ticks, t_end) -> "MultiFleetSim":
+    def _chaos_events(self, chaos, tick, black_until, ctrl):
+        """Pop this tick's due chaos events and apply them: fleet-level
+        node kills (lowest live rids, ceil(frac * live)), blackout windows
+        (extend the republish horizon), forecaster stalls and shard
+        crashes (with resilience off the shard state is simply lost — the
+        exact hazard the failover path is A/B-benched against)."""
+        from repro.sim import chaos as CH
+
+        F = len(self.names)
+        for ev in chaos.pop_due(tick):
+            kind = int(ev["kind"])
+            if kind == CH.NODE_FAIL:
+                zi = int(ev["target"]) % F
+                f = self.fleets[self.names[zi]]
+                if f._vec:
+                    live = np.flatnonzero(f._rep_live_mask()).tolist()
+                else:
+                    live = sorted(r.rid for r in f.replicas
+                                  if not r.dead and not r.draining)
+                k = int(np.ceil(float(ev["arg"]) * len(live)))
+                for rid in live[:k]:
+                    f.inject_failure(float(ev["t"]), int(rid))
+            elif kind == CH.BLACKOUT:
+                zi = int(ev["target"]) % F
+                until = float(ev["t"]) + float(ev["arg"])
+                black_until[zi] = max(black_until[zi], until)
+            elif kind == CH.STALL:
+                if hasattr(ctrl, "inject_forecast_stall"):
+                    ctrl.inject_forecast_stall(float(ev["arg"]))
+            elif kind == CH.SHARD_CRASH and hasattr(ctrl, "crash_shard"):
+                si = int(ev["target"]) % len(ctrl.shards)
+                try:
+                    ctrl.crash_shard(si, int(ev["arg"]))
+                except RuntimeError:
+                    # no resilience armed: nothing restores the shard —
+                    # its window is simply gone (the degraded-off lane)
+                    shard = ctrl.shards[si]
+                    if getattr(shard, "vectorized", False):
+                        shard.wipe()
+
+    def _run_scalar(self, requests, ticks, t_end,
+                    scenario=None) -> "MultiFleetSim":
         """The retained per-fleet dict tick (the parity oracle)."""
+        from repro.core.metrics import N_METRICS, Snapshot
+
         ctrl = self.controller
         idx = {n: 0 for n in self.fleets}
         staged = hasattr(ctrl, "begin_tick")
         chips_per, floors, weights = self._chips_per, self._floors, \
             self._weights
         max_r = self._max_r
+        chaos = scenario.chaos if scenario is not None else None
+        clients = scenario.clients if scenario is not None else {}
+        F = len(self.names)
+        black_until = np.full(F, -np.inf)
+        last_pub = np.zeros((F, N_METRICS))
+        last_p95 = {n: 0.0 for n in clients}
         for tick in ticks:
             tick = float(tick)
+            if chaos is not None:
+                self._chaos_events(chaos, tick, black_until, ctrl)
             cur = {}
-            for n, f in self.fleets.items():
+            for i, n in enumerate(self.names):
+                f = self.fleets[n]
                 f._apply_events(tick)
-                idx[n] = self._dispatch_until(n, tick, idx[n], requests)
-                ctrl.observe(n, f.sample(tick))
+                if n in clients:
+                    ts, toks = clients[n].next_window(tick, last_p95[n])
+                    f.dispatch_window(ts, toks)
+                    f.seal_window()
+                else:
+                    idx[n] = self._dispatch_until(n, tick, idx[n], requests)
+                snap = f.sample(tick)
+                if n in clients:   # clients feel the REAL latency, always
+                    last_p95[n] = float(snap.values[1])
+                if tick <= black_until[i]:
+                    # blacked-out exporter: republish the last row; the
+                    # freshness clock (stale TTL) does not advance
+                    ctrl.observe(n, Snapshot(tick, last_pub[i].copy()),
+                                 fresh=False)
+                else:
+                    last_pub[i] = snap.values
+                    ctrl.observe(n, snap)
                 cur[n] = f.live_count()
             if staged:
                 # staged plane: launch the forecasts, barrier only at
@@ -353,17 +430,21 @@ class MultiFleetSim:
             ctrl.flush_updates()    # barrier any refit still in flight
         return self
 
-    def _run_columnar(self, requests, ticks, t_end) -> "MultiFleetSim":
+    def _run_columnar(self, requests, ticks, t_end,
+                      scenario=None) -> "MultiFleetSim":
         """The (F,)-array federation tick (DESIGN.md §12).
 
         Per tick: F windowed drains (pre-bucketed offsets — one
         ``searchsorted`` over every boundary at setup, zero-copy slices
-        after), ONE ``observe_batch`` row block, ONE ``begin_tick`` /
-        ``finish_tick`` with array replica bounds, decisions back as ONE
-        ``replicas_array()``, ONE ``allocate_batch`` — no per-fleet dict
-        is built on the hot path.  ``alloc_log`` / ``usage_log`` keep the
-        scalar path's exact format (and values, bitwise)."""
-        from repro.core.metrics import N_METRICS
+        after), ONE ``batched_p95`` percentile pass over every fleet's
+        response window, ONE ``observe_batch`` row block, ONE
+        ``begin_tick`` / ``finish_tick`` with array replica bounds,
+        decisions back as ONE ``replicas_array()``, ONE
+        ``allocate_batch`` — no per-fleet dict is built on the hot path.
+        ``alloc_log`` / ``usage_log`` keep the scalar path's exact format
+        (and values, bitwise)."""
+        from repro.core.metrics import N_METRICS, Snapshot
+        from repro.serving.fleet import batched_p95
         from repro.workloads.fleet_scale import window_offsets
 
         ctrl = self.controller
@@ -376,6 +457,12 @@ class MultiFleetSim:
         to_ctrl, from_ctrl = self._to_ctrl, self._from_ctrl
         max_ctrl = self._max_arr[to_ctrl]
         max_map = self._max_r       # dict fallback (FleetController)
+        chaos = scenario.chaos if scenario is not None else None
+        clients = scenario.clients if scenario is not None else {}
+        cl = [clients.get(n) for n in names]
+        black_until = np.full(F, -np.inf)
+        last_pub = np.zeros((F, N_METRICS))
+        last_p95 = np.zeros(F)
         if self.batch:
             streams = [requests[n] for n in names]
             offs = [window_offsets(t, self.window_s, t_end)
@@ -388,9 +475,15 @@ class MultiFleetSim:
         snaps = [None] * F
         for w, tick in enumerate(ticks, start=1):
             tick = float(tick)
+            if chaos is not None:
+                self._chaos_events(chaos, tick, black_until, ctrl)
             for i, f in enumerate(fleets):
                 f._apply_events(tick)
-                if self.batch:
+                if cl[i] is not None:
+                    ts, toks = cl[i].next_window(tick, last_p95[i])
+                    f.dispatch_window(ts, toks)
+                    f.seal_window()
+                elif self.batch:
                     lo, hi = int(offs[i][w - 1]), int(offs[i][w])
                     times, ntoks = streams[i]
                     f.dispatch_window(times[lo:hi], ntoks[lo:hi])
@@ -398,14 +491,40 @@ class MultiFleetSim:
                 else:
                     pos[i] = self._dispatch_legacy(f, reqs[i], tick,
                                                    int(pos[i]))
-                snaps[i] = f.sample(tick)
+            if self.batch:
+                # ONE fused percentile across all fleets' windows
+                # (bitwise == per-fleet np.percentile; the parity oracle
+                # above keeps the per-fleet path)
+                p95s = batched_p95([f.take_window_resp() for f in fleets])
+            for i, f in enumerate(fleets):
+                snaps[i] = (f.sample(tick, p95=float(p95s[i]))
+                            if self.batch else f.sample(tick))
                 rows[i] = snaps[i].values
                 cur[i] = f.live_count()
+            # closed-loop clients feel the REAL latency even when the
+            # exporter is blacked out (the blackout lies to the
+            # controller, not to the users)
+            last_p95[:] = rows[:, 1]
+            fresh = None
+            if chaos is not None:
+                stale_m = black_until >= tick
+                if stale_m.any():
+                    rows[stale_m] = last_pub[stale_m]
+                    fresh = ~stale_m
+                last_pub[~stale_m] = rows[~stale_m]
             if batched_obs:
-                ctrl.observe_batch(tick, rows[to_ctrl])
+                if fresh is None:
+                    ctrl.observe_batch(tick, rows[to_ctrl])
+                else:
+                    ctrl.observe_batch(tick, rows[to_ctrl],
+                                       fresh=fresh[to_ctrl])
             else:
-                for n, s in zip(names, snaps):
-                    ctrl.observe(n, s)
+                for i, n in enumerate(names):
+                    if fresh is not None and not fresh[i]:
+                        ctrl.observe(n, Snapshot(tick, rows[i].copy()),
+                                     fresh=False)
+                    else:
+                        ctrl.observe(n, snaps[i])
             cur_ctrl = cur[to_ctrl]
             if staged:
                 ctrl.begin_tick(tick, max_ctrl, cur_ctrl)

@@ -5,3 +5,4 @@ from repro.sim.events import EventQueue
 from repro.sim.core import (ArrayServerPool, CompletionLog, ServerPool,
                             SimCore, WindowAccumulator, WindowedExporter,
                             account_busy, drain_window, waterfill_placement)
+from repro.sim.chaos import ChaosConfig, ChaosSchedule

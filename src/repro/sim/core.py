@@ -787,13 +787,17 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
     pass: the round is capped before any slot could go idle or any
     pending server could become ready (``searchsorted`` against the
     earliest horizon), and committed only over the prefix where each
-    next horizon strictly precedes every earlier completion in the round
-    (otherwise the per-event oracle would reuse a just-committed slot —
-    those tasks fall back to exact single-task selection, reusing the
-    already-drawn service times so the RNG stream stays aligned).  With
-    homogeneous server speeds the resulting (start, service, completion)
-    sequence is *identical* to one-at-a-time dispatch for a fixed pool
-    (tests/test_fleet_scale.py property-checks this, overload included).
+    next horizon precedes every earlier completion in the round
+    (otherwise the per-event oracle would reuse a just-committed slot,
+    or take it as idle).  A cut round hands its remaining already-drawn
+    service times to a carry buffer and re-enters the outer loop — the
+    freed slots are re-gathered by the next idle/busy round with the
+    carried draws consumed first, so the RNG stream stays aligned with
+    sequential dispatch and NO per-event Python path remains on the
+    drain.  With homogeneous server speeds the resulting (start,
+    service, completion) sequence is *identical* to one-at-a-time
+    dispatch for a fixed pool (tests/test_fleet_scale.py
+    property-checks this, overload included).
 
     ``service_fn(slots, i0, i1)`` returns service times for tasks
     ``i0:i1`` assigned to ``slots`` — it must draw any randomness for
@@ -811,6 +815,25 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
     starts = np.full(n, np.nan)
     comps = np.empty(n, np.float64)
     svcs = np.full(n, np.nan)
+    carry = np.zeros(0, np.float64)   # drawn-but-uncommitted service times
+
+    def take_sv(sl, i0, i1):
+        # consume carried draws (tasks whose service time already left
+        # the RNG in a cut busy round) before drawing fresh ones —
+        # task-index order is preserved, so the stream stays sequential
+        nonlocal carry
+        need = i1 - i0
+        m = carry.size
+        if m == 0:
+            return np.asarray(service_fn(sl, i0, i1), np.float64)
+        if need <= m:
+            out, carry = carry[:need], carry[need:]
+            return out
+        out = np.concatenate([
+            carry, np.asarray(service_fn(sl[m:], i0 + m, i1), np.float64)])
+        carry = carry[:0]
+        return out
+
     i = 0
     while i < n:
         t0 = float(times[i])
@@ -819,7 +842,7 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
         if k:
             # idle slots at t0 stay idle until assigned: start == arrival
             st = times[i:i + k]
-            sv = service_fn(idle, i, i + k)
+            sv = take_sv(idle, i, i + k)
             cm = st + sv
             pool.key[idle] = cm
             slots[i:i + k] = idle
@@ -850,7 +873,7 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
                 # one batch draw for the whole round, task-index order —
                 # numpy Generator batch draws equal scalar draws, so the
                 # stream matches per-event dispatch
-                sv = np.asarray(service_fn(hs, i, i + r0), np.float64)
+                sv = take_sv(hs, i, i + r0)
                 st = np.maximum(ts, hk)
                 cm = st + sv
                 run_min = np.minimum.accumulate(cm)
@@ -865,17 +888,13 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
                 starts[i:i + r], comps[i:i + r] = st[:r], cm[:r]
                 svcs[i:i + r] = sv[:r]
                 i += r
-                # tail: the remaining drawn tasks, exact per-event
-                # selection with their already-drawn service times
-                for j in range(r, r0):
-                    tj = float(times[i])
-                    s = pool.select(tj)        # busy nonempty -> s >= 0
-                    stj = max(tj, float(pool.key[s]), float(pool.ready[s]))
-                    svj = float(sv[j])
-                    pool.key[s] = stj + svj
-                    slots[i], starts[i] = s, stj
-                    comps[i], svcs[i] = stj + svj, svj
-                    i += 1
+                if r < r0:
+                    # cut: the remaining drawn service times go back to
+                    # the carry front (their tasks precede any older
+                    # leftover); the outer loop re-gathers the freed
+                    # slots through the normal idle/busy rounds
+                    carry = (np.concatenate([sv[r:], carry])
+                             if carry.size else sv[r:].copy())
                 continue
         s = pool.select(t0)
         if s < 0 and on_cold is not None:
@@ -886,7 +905,7 @@ def drain_window(pool: ArrayServerPool, times: np.ndarray, service_fn,
             i += 1
             continue
         st = max(t0, float(pool.key[s]), float(pool.ready[s]))
-        sv = float(service_fn(np.asarray([s]), i, i + 1)[0])
+        sv = float(take_sv(np.asarray([s]), i, i + 1)[0])
         pool.key[s] = st + sv
         slots[i], starts[i] = s, st
         comps[i], svcs[i] = st + sv, sv

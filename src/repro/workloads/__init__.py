@@ -2,3 +2,5 @@ from repro.workloads.random_access import random_access
 from repro.workloads.nasa import nasa_trace, nasa_requests
 from repro.workloads.bursty import bursty_trace, bursty_requests
 from repro.workloads.fleet_scale import WindowedArrivals, poisson_arrivals
+from repro.workloads.scenarios import (ChaosScenario, ClientConfig,
+                                       ClosedLoopClient, make_chaos_scenario)

@@ -1,0 +1,228 @@
+"""Chaos engine + degraded-mode control plane (DESIGN.md §13,
+docs/resilience.md):
+
+* seeded fault tapes are deterministic, replayable and content-addressed
+  (``signature``), and ``pop_due``/``reset`` replay them bit-identically;
+* a quiet tape with resilience armed is bitwise identical to resilience
+  off — arming the machinery costs nothing until chaos actually strikes;
+* the degraded stale-metric hold anchors at the last decision made on
+  *fresh* metrics (the Kubernetes keep-desiredReplicas rule), not at the
+  live count a kill storm is eating — scalar ``stage_degrade`` and the
+  columnar ``decide`` are elementwise identical under randomised
+  staleness (hypothesis);
+* shard failover snapshots carry the hold anchor across a crash;
+* a fast end-to-end A/B pair rides the ``chaos_smoke`` marker.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ARIMAD1Forecaster, FleetController, PPAConfig,
+                        ResilienceConfig, ShardedControlPlane, Snapshot,
+                        TargetSpec, ThresholdPolicy)
+from repro.core.metrics import N_METRICS
+from repro.sim.chaos import ChaosConfig, ChaosSchedule
+from repro.workloads.scenarios import ClientConfig, make_chaos_scenario
+
+W = 15.0
+
+
+def _row(v: float) -> np.ndarray:
+    return np.full(N_METRICS, float(v))
+
+
+# ------------------------------------------------------------- the tape ----
+def _dense_cfg():
+    return ChaosConfig(window_s=W, storm_start_p=0.15,
+                       blackout_rate_per_h=10.0, stall_rate_per_h=3.0,
+                       crash_rate_per_h=15.0)
+
+
+def test_schedule_seed_determinism():
+    cfg = _dense_cfg()
+    a = ChaosSchedule.build(cfg, n_zones=4, t_end=1800.0, seed=3, n_shards=2)
+    b = ChaosSchedule.build(cfg, n_zones=4, t_end=1800.0, seed=3, n_shards=2)
+    c = ChaosSchedule.build(cfg, n_zones=4, t_end=1800.0, seed=4, n_shards=2)
+    assert a == b
+    assert a.signature() == b.signature()
+    assert len(a) > 0
+    assert a.signature() != c.signature()
+
+
+def test_schedule_pop_due_reset_replay():
+    sched = ChaosSchedule.build(_dense_cfg(), n_zones=3, t_end=900.0,
+                                seed=11)
+
+    def drain():
+        out = []
+        for k in range(1, 61):
+            due = sched.pop_due(k * W)
+            assert (due["t"] <= k * W).all()
+            out.append(due)
+        return np.concatenate(out)
+
+    first = drain()
+    assert len(first) == len(sched)            # everything delivered once
+    assert sched.pop_due(1e9).size == 0        # cursor exhausted
+    sched.reset()
+    second = drain()
+    assert np.array_equal(first, second)
+
+
+# ------------------------------------------------- quiet tape == no tape ----
+def _quiet_cfg():
+    return ChaosConfig(window_s=W, storm_start_p=0.0, blackout_rate_per_h=0.0,
+                       stall_rate_per_h=0.0, crash_rate_per_h=0.0)
+
+
+def test_quiet_tape_resilience_armed_is_bitwise_noop():
+    """With zero chaos the armed plane (finite TTL, periodic snapshots)
+    must make bitwise the same decisions as ``resilience=None``: the
+    degraded machinery is a pure fast-path no-op until a fault fires."""
+    from benchmarks.bench_chaos import _chaos_sim
+
+    t_end, F = 300.0, 2
+    names = [f"fleet-{i}" for i in range(F)]
+    client = ClientConfig(rate_per_s=8.0, window_s=W, n_tokens=8,
+                          retry_threshold=2.0, retry_frac=0.3)
+    logs = {}
+    for key, res in (("off", None),
+                     ("on", ResilienceConfig(stale_ttl_s=20.0,
+                                             snapshot_every=2))):
+        scen = make_chaos_scenario(names, t_end=t_end, seed=5,
+                                   chaos_cfg=_quiet_cfg(),
+                                   client_cfg=client, n_shards=2)
+        assert len(scen.chaos) == 0
+        sim = _chaos_sim(F, res)
+        sim.run({}, t_end, scenario=scen)
+        logs[key] = (sim.alloc_log, sim.completion_stats())
+    assert logs["off"][0] == logs["on"][0]
+    assert logs["off"][1] == logs["on"][1]
+
+
+# ----------------------------------------------------- the degraded hold ----
+def _armed_cfg():
+    return PPAConfig(threshold=10.0, key_metric_idx=0, stabilization_s=0.0,
+                     resilience=ResilienceConfig(stale_ttl_s=20.0))
+
+
+def _spec(name):
+    return TargetSpec(name, ThresholdPolicy(10.0, 1))
+
+
+@pytest.mark.parametrize("make", [
+    lambda: FleetController(_armed_cfg(), [_spec("z")],
+                        model=ARIMAD1Forecaster()),
+    lambda: ShardedControlPlane(_armed_cfg(), [_spec("z")],
+                                model=ARIMAD1Forecaster(), n_shards=1),
+])
+def test_stale_hold_anchors_last_fresh_decision(make):
+    """Fresh metric 80 -> desired 8.  Then the exporter blacks out (a
+    frozen LOW row republished past the TTL) while node failures eat the
+    fleet down to 2 live replicas.  The hold must stay at the last fresh
+    decision (8) — not follow the live count down (the old ratchet), and
+    not trust the frozen row (which would say 1)."""
+    ctrl = make()
+    for k in range(1, 7):
+        ctrl.observe("z", Snapshot(k * W, _row(80.0)))
+        out = ctrl.control_step(k * W, 16, {"z": 4})
+    assert out["z"].replicas == 8
+    # t=120: republished stale row, 30 s past the last fresh sample
+    ctrl.observe("z", Snapshot(120.0, _row(5.0)), fresh=False)
+    out = ctrl.control_step(120.0, 16, {"z": 2})
+    assert out["z"].replicas == 8
+    if hasattr(ctrl, "shutdown"):
+        ctrl.shutdown()
+
+
+def _parity_episode(n_ticks, draw_v, draw_fresh, draw_cur):
+    """Drive scalar vs columnar planes through one randomised staleness
+    episode and assert decision-for-decision equality."""
+    names = [f"z{i}" for i in range(3)]
+    ref = FleetController(_armed_cfg(), [_spec(n) for n in names],
+                          model=ARIMAD1Forecaster())
+    plane = ShardedControlPlane(_armed_cfg(), [_spec(n) for n in names],
+                                model=ARIMAD1Forecaster(), n_shards=2)
+    for k in range(1, n_ticks + 1):
+        t = k * W
+        cur = {}
+        for n in names:
+            fresh = draw_fresh(n, k)
+            cur[n] = draw_cur(n, k)
+            snap = Snapshot(t, _row(draw_v(n, k)))
+            ref.observe(n, snap, fresh=fresh)
+            plane.observe(n, snap, fresh=fresh)
+        a = ref.control_step(t, 16, dict(cur))
+        b = plane.control_step(t, 16, dict(cur))
+        for n in names:
+            assert a[n].replicas == b[n].replicas, (k, n)
+    plane.shutdown()
+
+
+def test_degraded_parity_scalar_vs_columnar_fuzz_sweep():
+    """Seeded sweep of the parity property — runs even where hypothesis
+    isn't installed."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        _parity_episode(int(rng.integers(6, 15)),
+                        lambda n, k: float(rng.uniform(1.0, 120.0)),
+                        lambda n, k: bool(rng.random() < 0.6),
+                        lambda n, k: int(rng.integers(1, 13)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_degraded_parity_scalar_vs_columnar(data):
+    """Under randomised metrics, live counts and blackout spans the
+    columnar shard's vectorised hold must match the scalar staged
+    pipeline (``stage_degrade``/``stage_guard``) decision-for-decision —
+    the hypothesis variant with shrinking."""
+    n_ticks = data.draw(st.integers(6, 14))
+    _parity_episode(
+        n_ticks,
+        lambda n, k: data.draw(st.floats(1.0, 120.0), label=f"{n}@{k}"),
+        lambda n, k: data.draw(st.booleans(), label=f"fresh {n}@{k}"),
+        lambda n, k: data.draw(st.integers(1, 12), label=f"cur {n}@{k}"))
+
+
+def test_failover_snapshot_carries_hold_anchor():
+    """state_snapshot/wipe/restore round-trips the degraded hold's anchor:
+    a restored shard keeps holding a stale target at the pre-crash desired
+    count instead of falling back to the (storm-shrunk) live count."""
+    plane = ShardedControlPlane(_armed_cfg(), [_spec("z")],
+                                model=ARIMAD1Forecaster(), n_shards=1)
+    for k in range(1, 7):
+        plane.observe("z", Snapshot(k * W, _row(80.0)))
+        plane.control_step(k * W, 16, {"z": 4})
+    shard = plane.shards[0]
+    snap = shard.state_snapshot()
+    shard.wipe()
+    assert (shard._deg_last == -1).all()
+    shard.restore(snap)
+    assert (shard._deg_last == 8).all()
+    plane.observe("z", Snapshot(120.0, _row(5.0)), fresh=False)
+    out = plane.control_step(120.0, 16, {"z": 2})
+    assert out["z"].replicas == 8
+    plane.shutdown()
+
+
+# ------------------------------------------------------- end-to-end pair ----
+@pytest.mark.chaos_smoke
+def test_chaos_ab_pair_smoke():
+    """One tiny A/B pair through the real bench harness: the tape fires,
+    both lanes complete work, and the ON lane actually exercises the
+    degraded machinery (holds + snapshots) on an identical replay."""
+    from benchmarks.bench_chaos import bench_chaos_pair
+
+    pair = bench_chaos_pair(F=2, t_end=450.0, seed=3)
+    assert pair["chaos_events"] > 0
+    assert pair["off"]["completions"] > 0
+    assert pair["on"]["completions"] > 0
+    assert np.isfinite(pair["on"]["sla_violation_ratio"])
+    deg = pair["on"]["degraded"]
+    assert deg.get("snapshots", 0) >= 1
+    # the tape is content-addressed: same seed, same signature
+    from benchmarks.bench_chaos import _scenario
+
+    assert pair["chaos_signature"] == _scenario(2, 450.0, 3).chaos.signature()
